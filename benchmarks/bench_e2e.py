@@ -1,0 +1,52 @@
+"""Paper Fig. 14 (§6.3): end-to-end throughput / TTFT / TPOT on the
+long-tail production-style trace, Gyges vs KunServe-style (dynamic PP)
+vs LoongServe-style (dynamic SP) vs the static hybrid deployment.
+Seesaw is excluded as in the paper (unsatisfactory performance — see
+bench_overall_cost for its transformation cost)."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import get_config
+from repro.core.cluster_sim import Cluster, longtail_trace
+from repro.core.scheduler import GygesScheduler
+
+
+def run(duration: float = 420.0) -> List[str]:
+    rows = ["fig14.model,qps,system,tps,finished,total,ttft_p50_s,"
+            "ttft_p99_s,tpot_p50_ms,tpot_p99_ms"]
+    cfg = get_config("qwen2.5-32b")
+    for qps in (0.6, 2.0, 6.0):
+        trace = longtail_trace(duration=duration, qps=qps, seed=21)
+        runs = {
+            "gyges": dict(method="gyges"),
+            "gyges-no-overlap": dict(method="gyges-"),
+            "kunserve(PP)": dict(method="kunserve"),
+            "loongserve(SP)": dict(method="loongserve"),
+            "static-hybrid": dict(method="gyges",
+                                  static_layout=[4, 1, 1, 1, 1]),
+        }
+        base = None
+        for name, kw in runs.items():
+            c = Cluster(cfg, n_hosts=1, scheduler=GygesScheduler(), **kw)
+            m = c.run(trace, dt=0.25)
+            if name == "gyges":
+                base = m["throughput_tps"]
+            rows.append(
+                f"fig14.qwen2.5-32b,{qps},{name},"
+                f"{m['throughput_tps']:.1f},{m['finished']:.0f},"
+                f"{m['total']:.0f},{m['ttft_p50']:.2f},{m['ttft_p99']:.2f},"
+                f"{m['tpot_p50']*1e3:.1f},{m['tpot_p99']*1e3:.1f}")
+        rows.append(f"fig14.qwen2.5-32b,{qps},derived,"
+                    f"gyges_tps={base:.1f} (paper: 1.75x-6.57x over "
+                    f"PP/SP transformation at saturation)")
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

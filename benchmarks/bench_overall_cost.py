@@ -1,0 +1,70 @@
+"""Paper Fig. 11: per-inference-step overhead as the number of layers
+transformed per step grows from 1 to all layers, for Seesaw / Basic /
+Gyges- / Gyges.  'Raw' is the transformation-free step time."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs import get_config
+from repro.core import weight_transform as WT
+from repro.core.costmodel import CostModel
+from repro.core.kv_transform import LinkModel, account_scale_up
+from repro.core.padding import make_plan
+from repro.core.transform_engine import (scale_up_schedule, schedule_cost,
+                                         seesaw_cost)
+
+
+def run() -> List[str]:
+    rows = ["fig11.model,layers_per_step,solution,step_overhead_pct,"
+            "total_ms"]
+    link = LinkModel()
+    for arch in ("qwen2.5-32b", "llama3-8b"):
+        cfg = get_config(arch)
+        cm = CostModel(cfg)
+        plan = make_plan(cfg, 4, mode="page")
+        step_time = 1.0 / cm.instance_tps(1) * cfg.num_layers / \
+            cfg.num_layers  # one decode iteration (s)
+        step_time = 1.0 / cm.instance_tps(1)
+        ppw = max(1, int(0.9 * cm.kv_capacity_tokens(1)
+                         / cfg.num_layers / 64))
+        kvs = max(cfg.num_kv_heads, 1)
+        dh = cfg.resolved_head_dim
+        for lps in (1, 4, 16, cfg.num_layers):
+            sched = scale_up_schedule(cfg.num_layers, layers_per_step=lps)
+            for sol, layout, method, overlap in (
+                    ("basic", "page_friendly", "swap", False),
+                    ("gyges-", "header_centric", "padded", False),
+                    ("gyges", "header_centric", "padded", True)):
+                kv = account_scale_up(layout, 4, ppw, kvs, 64, dh,
+                                      n_stages=8 if sol == "gyges" else 1)
+                total, per_step = schedule_cost(sched, cfg, plan, kv, link,
+                                                method=method,
+                                                overlap=overlap)
+                ovh = max(per_step) / step_time * 100
+                rows.append(f"fig11.{arch},{lps},{sol},{ovh:.2f},"
+                            f"{total*1e3:.2f}")
+            see = seesaw_cost(cfg, plan, cfg.num_layers, link)
+            rows.append(f"fig11.{arch},{lps},seesaw,"
+                        f"{see / (cfg.num_layers / lps) / step_time * 100:.2f},"
+                        f"{see*1e3:.2f}")
+        # derived: all-layers-in-one-step saving vs seesaw (paper: 97.2%)
+        sched = scale_up_schedule(cfg.num_layers,
+                                  layers_per_step=cfg.num_layers)
+        kv = account_scale_up("header_centric", 4, ppw, kvs, 64, dh,
+                              n_stages=8)
+        gy_total, _ = schedule_cost(sched, cfg, plan, kv, link,
+                                    method="padded", overlap=True)
+        see = seesaw_cost(cfg, plan, cfg.num_layers, link)
+        rows.append(f"fig11.{arch},all,derived,"
+                    f"saving_vs_seesaw={1 - gy_total / see:.4f},"
+                    f"paper=0.972")
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

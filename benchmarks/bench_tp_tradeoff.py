@@ -1,0 +1,42 @@
+"""Paper Table 1: peak throughput vs large-context support across TP.
+
+Reproduces the calibrated trade-off for the paper's model (Qwen2.5-32B on
+H20) and extends it to every assigned architecture — the framework-level
+generalization the paper's Table 1 motivates.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core.costmodel import CostModel
+
+
+def run() -> List[str]:
+    rows = ["table1.arch,tp,max_seq_tokens,instance_tps,total_tps_4gpu"]
+    for arch in ["qwen2.5-32b"] + ASSIGNED_ARCHS:
+        cm = CostModel(get_config(arch))
+        for tp in (1, 2, 4):
+            rows.append(
+                f"table1.{arch},{tp},{cm.max_seq(tp)},"
+                f"{cm.instance_tps(tp):.0f},"
+                f"{cm.instance_tps(tp) * 4 / tp:.0f}")
+    # headline check vs the paper
+    cm = CostModel(get_config("qwen2.5-32b"))
+    ratio = 4 * cm.instance_tps(1) / cm.instance_tps(4)
+    rows.append(f"table1.check_4xTP1_over_TP4,{ratio:.3f},"
+                f"paper=2.33,max_seq_tp4={cm.max_seq(4)}")
+    return rows
+
+
+def main():
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        print(f"{r.split(',')[0]},{us:.1f},{','.join(r.split(',')[1:])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+# ^ must precede jax import: the roofline lowers on the production mesh.
+
+"""Roofline analysis (deliverable g).
+
+For each (arch x shape) on the single-pod mesh, derive the three terms
+
+    compute    = HLO_FLOPs / (chips * 197 TFLOP/s)      [per-chip FLOPs]
+    memory     = HLO_bytes / (chips * 819 GB/s)
+    collective = collective_bytes / (chips * 50 GB/s)
+
+from the compiled dry-run.  XLA's cost_analysis visits a while-loop body
+ONCE regardless of trip count, so absolute totals are extrapolated from
+two *unrolled* reduced-depth variants (1 and 2 pattern groups):
+
+    per_group = X(v2) - X(v1);  base = X(v1) - per_group
+    total     = base + (G + R/P) * per_group
+
+cost_analysis numbers are per-device programs (verified empirically), so
+the formulas above divide by per-chip peaks directly.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--arch A --shape S]
+        [--decode-mode tp1] [--banded]
+Writes experiments/roofline/<arch>_<shape>[_mode].json + a markdown table.
+"""
+import argparse
+import json
+import math
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12     # bf16 per chip (TPU v5e)
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "roofline")
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs (global): 6*N*D train, 2*N*D inference, with
+    N = active params (MoE counts routed top-k only)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per seq
+
+
+def extrapolate(v1: float, v2: float, units: float) -> float:
+    per = v2 - v1
+    base = v1 - per
+    return max(base + units * per, 0.0)
+
+
+def analyse(arch: str, shape_name: str, decode_mode: str = "tp",
+            banded: bool = False, identity_pages: bool = False,
+            moe_hints: bool = False, kv_hint: bool = False,
+            mesh_shape=None, tag_suffix: str = "") -> Optional[Dict]:
+    from repro.configs import SHAPES, get_config
+    from repro.launch import dryrun as DR
+    from repro.launch import specs as SP
+    from repro.models.model import group_counts, pattern_unit
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, note = SP.supports_shape(cfg, shape)
+    if not ok:
+        return None
+    eff_cfg = SP.long_context_variant(cfg) if shape_name == "long_500k" \
+        else cfg
+    G, R = group_counts(eff_cfg)
+    P = len(pattern_unit(eff_cfg))
+    units = G + R / P
+
+    recs = {}
+    for v in (1, 2):
+        recs[v] = DR.run_one(arch, shape_name, multi_pod=False,
+                             decode_mode=decode_mode, variant=v,
+                             identity_pages=identity_pages,
+                             moe_hints=moe_hints, kv_hint=kv_hint,
+                             banded=banded, mesh_shape=mesh_shape)
+    f = extrapolate(recs[1]["flops_total"], recs[2]["flops_total"], units)
+    b = extrapolate(recs[1]["bytes_accessed_total"],
+                    recs[2]["bytes_accessed_total"], units)
+    c1 = sum(x for k, x in recs[1]["collectives"].items() if k != "count")
+    c2 = sum(x for k, x in recs[2]["collectives"].items() if k != "count")
+    coll = extrapolate(c1, c2, units)
+
+    chips = 256
+    t_comp = f / PEAK_FLOPS              # per-device flops already
+    t_mem = b / HBM_BW
+    t_coll = coll / ICI_BW               # per-device program collectives
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape) / chips
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": "16x16",
+        "decode_mode": decode_mode, "banded": banded,
+        "identity_pages": identity_pages, "moe_hints": moe_hints,
+        "units": units,
+        "flops_per_chip": f, "bytes_per_chip": b,
+        "collective_bytes_per_chip": coll,
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": mf / f if f > 0 else 0.0,
+        "note": note,
+    }
+    os.makedirs(OUT, exist_ok=True)
+    tag = f"{arch}_{shape_name}" + (
+        f"_{decode_mode}" if decode_mode != "tp" else "") + tag_suffix
+    with open(os.path.join(OUT, tag + ".json"), "w") as fjson:
+        json.dump(rec, fjson, indent=1)
+    return rec
+
+
+def fmt_row(r: Dict) -> str:
+    return (f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:9.3f} "
+            f"| {r['t_memory_s']*1e3:9.3f} | {r['t_collective_s']*1e3:9.3f} "
+            f"| {r['dominant']:10s} | {r['useful_flops_ratio']:6.2f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--decode-mode", default="tp")
+    ap.add_argument("--banded", action="store_true")
+    ap.add_argument("--identity-pages", action="store_true")
+    ap.add_argument("--moe-hints", default=None,
+                    help="auto | dp (expert hint mode)")
+    ap.add_argument("--kv-hint", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="e.g. 32,8 — alternative 256-chip factorization")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from repro.configs import ASSIGNED_ARCHS, SHAPES
+    combos = ([(args.arch, args.shape)] if args.arch
+              else [(a, s) for a in ASSIGNED_ARCHS for s in SHAPES])
+    print("| arch | shape | t_comp(ms) | t_mem(ms) | t_coll(ms) "
+          "| dominant | useful |")
+    print("|---|---|---|---|---|---|---|")
+    for arch, shape in combos:
+        try:
+            ms = tuple(int(x) for x in args.mesh_shape.split(",")) \
+                if args.mesh_shape else None
+            mh = args.moe_hints
+            mh = (mh if mh in ("dp", "tp") else bool(mh)) if mh else False
+            r = analyse(arch, shape, args.decode_mode, args.banded,
+                        identity_pages=args.identity_pages,
+                        moe_hints=mh, kv_hint=args.kv_hint,
+                        mesh_shape=ms, tag_suffix=args.tag)
+            if r is None:
+                print(f"| {arch} | {shape} | — | — | — | skipped | — |")
+            else:
+                print(fmt_row(r))
+        except Exception as e:
+            print(f"| {arch} | {shape} | FAIL {type(e).__name__}: {e} |")
+
+
+if __name__ == "__main__":
+    main()

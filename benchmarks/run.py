@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
+The roofline (§Roofline) runs in a separate process because it needs 512
+placeholder devices: ``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_ablation, bench_e2e, bench_kv_transform,
+                        bench_overall_cost, bench_scheduler,
+                        bench_tp_tradeoff, bench_weights)
+
+MODULES = {
+    "table1": bench_tp_tradeoff,
+    "fig9": bench_kv_transform,
+    "fig10_table3": bench_weights,
+    "fig11": bench_overall_cost,
+    "fig12": bench_scheduler,
+    "fig14": bench_e2e,
+    "ablation": bench_ablation,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(MODULES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    failures = 0
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},FAIL,{type(e).__name__}: {e}")
+            continue
+        us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+        for r in rows:
+            head, rest = r.split(",", 1)
+            print(f"{head},{us:.1f},{rest}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Gyges core: the paper's contribution as composable JAX modules.
+
+padding            — parallelism-aware weight/head/expert/vocab padding (§4.2)
+kv_transform       — KV migration accounting + resharding data plane (§4.1.2)
+weight_transform   — padded splits, swap-vs-in-place accounting (§4.2)
+transform_engine   — MLP-first / layer-staggered / reversed schedules (§4.3)
+instance           — transformable TP instance groups (mesh re-factorization)
+scheduler          — Algorithms 1-2 + RR/LLF baselines (§5)
+cluster_sim        — Table-1-calibrated cluster simulator (§6)
+costmodel          — throughput/memory/transformation cost model
+"""
+from repro.core.costmodel import CostModel, Hardware
+from repro.core.instance import InstanceGroup
+from repro.core.padding import PaddingPlan, make_plan
+from repro.core.scheduler import (GygesScheduler, LeastLoadScheduler,
+                                  RoundRobinScheduler, SCHEDULERS)

@@ -1,0 +1,431 @@
+"""Event/tick-driven cluster simulator for scheduler & e2e benchmarks
+(paper §6.2.4 Fig. 12/13 and §6.3 Fig. 14).
+
+The simulator advances in fixed ticks.  Each instance prefills queued
+requests and decodes active ones at rates given by the Table-1-calibrated
+``CostModel``; parallelism transformations take method-dependent wall time
+(from the §4 accounting) during which the instance is degraded.
+
+Baselines:
+  * method="gyges" | "gyges-" | "basic" | "seesaw": TP transformation with
+    the corresponding §4 mechanism cost;
+  * method="kunserve" / "loongserve": dynamic PP / SP — cheap
+    reconfiguration but the scaled-up instance keeps PP/SP efficiency
+    (only ~1/N workers active per time slot, paper §2/§7: 43.5% extra
+    throughput degradation vs TP);
+  * static=True: fixed hybrid deployment (no transformation; the paper's
+    production baseline of §3.3).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.costmodel import CostModel, Hardware, H20
+from repro.core.scheduler import BaseScheduler, GygesScheduler, SchedulerConfig
+
+# PP/SP keep only ~1/N workers busy; calibrated so that the e2e gap matches
+# the paper's reported 43.5% extra degradation vs TP transformation.
+ENGINE_EFFICIENCY = {"gyges": 1.0, "gyges-": 1.0, "basic": 1.0,
+                     "seesaw": 1.0, "kunserve": 0.565, "loongserve": 0.565}
+# reconfiguration wall-time multiplier vs gyges- (kunserve/loongserve move
+# no KV head shards; seesaw bounces via host memory: §6.2.3 "41x")
+TRANSFORM_TIME_FACTOR = {"gyges": 1.0, "gyges-": 1.0, "basic": 1.0,
+                         "seesaw": 1.0, "kunserve": 0.3, "loongserve": 0.3}
+
+
+@dataclass
+class Request:
+    rid: int
+    arrive: float
+    in_len: int
+    out_len: int
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+    tokens_done: float = 0.0
+    prefilled: float = 0.0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.t_first_token is None else (
+            self.t_first_token - self.arrive)
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.t_finish is None or self.t_first_token is None \
+                or self.out_len <= 1:
+            return None
+        return (self.t_finish - self.t_first_token) / (self.out_len - 1)
+
+
+class SimInstance:
+    _ids = itertools.count()
+
+    def __init__(self, tp: int, cm: CostModel, method: str):
+        self.iid = next(SimInstance._ids)
+        self.tp = tp
+        self.cm = cm
+        self.method = method
+        self.active: List[Request] = []
+        self.prefill_q: List[Request] = []
+        self.reserved = False
+        self._kv_cache = None          # memoized kv_used (dirtied per tick)
+        self.transform_until = -1.0
+        self.n_transforms = 0
+        self.tokens_out = 0.0
+
+    # ---- InstanceView protocol -------------------------------------------
+    def max_seq(self) -> int:
+        return self.cm.max_seq(self.tp)
+
+    def kv_capacity(self) -> int:
+        return self.cm.kv_capacity_tokens(self.tp)
+
+    def kv_used(self) -> float:
+        if self._kv_cache is None:
+            self._kv_cache = (
+                sum(r.in_len + r.tokens_done for r in self.active)
+                + sum(r.in_len for r in self.prefill_q))
+        return self._kv_cache
+
+    def dirty(self) -> None:
+        self._kv_cache = None
+        self._long_cache = None
+
+    def kv_used_fraction(self) -> float:
+        cap = max(self.kv_capacity(), 1)
+        return self.kv_used() / cap
+
+    def kv_free_tokens(self) -> int:
+        return max(0, int(self.kv_capacity() - self.kv_used()))
+
+    def load(self) -> float:
+        return self.kv_used_fraction() + 0.05 * len(self.prefill_q)
+
+    _long_cache = None
+
+    def has_long_request(self) -> bool:
+        if self._long_cache is None:
+            tp1_cap = self.cm.max_seq(1)
+            self._long_cache = any(r.in_len + r.out_len > tp1_cap
+                                   for r in self.active + self.prefill_q)
+        return self._long_cache
+
+    # ---- dynamics ----------------------------------------------------------
+    def effective_tps(self, now: float) -> float:
+        base = self.cm.instance_tps(self.tp) * ENGINE_EFFICIENCY[self.method]
+        if now < self.transform_until:
+            # Gyges overlaps; others stall (paper Fig. 11: <1% vs stalls)
+            return base * (0.99 if self.method == "gyges" else 0.05)
+        return base
+
+    def tick(self, now: float, dt: float) -> float:
+        """Advance dt seconds; returns tokens generated."""
+        # prefill first (FCFS, one at a time as in vLLM default)
+        if self.prefill_q:
+            eff = ENGINE_EFFICIENCY[self.method]
+            stall = now < self.transform_until and self.method != "gyges"
+            rate = self.cm.hw.prefill_tps * self.tp * eff * (
+                0.05 if stall else 1.0)
+            budget = rate * dt
+            while self.prefill_q and budget > 0:
+                r = self.prefill_q[0]
+                need = r.in_len - r.prefilled
+                adv = min(need, budget)
+                r.prefilled += adv
+                budget -= adv
+                if r.prefilled >= r.in_len:
+                    r.t_first_token = now + dt
+                    r.tokens_done = 1.0
+                    self.active.append(self.prefill_q.pop(0))
+        if not self.active:
+            return 0.0
+        tps = self.effective_tps(now)
+        # per-request decode rate is latency-bound (TPOT floor ~ 25 tok/s
+        # at TP1, faster at higher TP); instance tps is the batch ceiling
+        per_req = self.cm.hw.per_req_tps * (1.0 + 0.25 * (self.tp - 1))
+        share = min(tps * dt / len(self.active), per_req * dt)
+        out = 0.0
+        done = []
+        for r in self.active:
+            adv = min(share, r.out_len - r.tokens_done)
+            r.tokens_done += adv
+            out += adv
+            if r.tokens_done >= r.out_len:
+                r.t_finish = now + dt
+                done.append(r)
+        for r in done:
+            self.active.remove(r)
+        self.tokens_out += out
+        self._kv_cache = None
+        self._long_cache = None
+        return out
+
+
+class Cluster:
+    """Hosts of `gpus_per_host` GPUs; instances live within a host."""
+
+    def __init__(self, cfg: ModelConfig, n_hosts: int = 1,
+                 gpus_per_host: int = 8, hw: Hardware = H20,
+                 method: str = "gyges",
+                 scheduler: Optional[BaseScheduler] = None,
+                 static_layout: Optional[List[int]] = None,
+                 target_tp: int = 4):
+        self.cm = CostModel(cfg, hw)
+        self.cfg = cfg
+        self.method = method
+        self.scheduler = scheduler or GygesScheduler()
+        self.gpus_per_host = gpus_per_host
+        self.target_tp = target_tp
+        self.static = static_layout is not None
+        self.hosts: List[List[SimInstance]] = []
+        for _ in range(n_hosts):
+            if static_layout:
+                insts = [SimInstance(tp, self.cm, method)
+                         for tp in static_layout]
+            else:
+                insts = [SimInstance(1, self.cm, method)
+                         for _ in range(gpus_per_host)]
+            self.hosts.append(insts)
+        self.waiting: List[Request] = []
+        self.finished: List[Request] = []
+        self.all_requests: List[Request] = []
+        self.n_transforms = 0
+        self.total_tokens = 0.0
+        self.scale_down_dwell = 20.0   # s at high TP before decomposing
+        self.timeline: List[Tuple[float, float]] = []  # (t, cluster tps)
+
+    # ------------------------------------------------------------------
+    @property
+    def instances(self) -> List[SimInstance]:
+        return [i for h in self.hosts for i in h]
+
+    def _host_of(self, inst: SimInstance) -> List[SimInstance]:
+        for h in self.hosts:
+            if inst in h:
+                return h
+        raise KeyError
+
+    # ---- transformation actions ------------------------------------------
+    def execute_scale_up(self, now: float, need_tokens: int,
+                         seed: Optional[SimInstance] = None
+                         ) -> Optional[SimInstance]:
+        """Merge target_tp TP1 instances on one host into one TP-target
+        instance (paper Fig. 3).  With ``seed`` (transformation-unaware
+        baselines) the merge happens around the chosen instance; otherwise
+        the host with the most idle TP1 capacity is preferred."""
+        if self.static:
+            return None
+        if seed is not None and seed.tp > 1:
+            return None  # already scaled; cannot grow further here
+        best_host = None
+        for h in self.hosts:
+            if seed is not None and seed not in h:
+                continue
+            tp1 = [i for i in h if i.tp == 1]
+            if len(tp1) >= self.target_tp:
+                score = sum(i.kv_used_fraction() for i in tp1)
+                if best_host is None or score < best_host[0]:
+                    best_host = (score, h, tp1)
+        if best_host is None:
+            return None
+        _, host, tp1 = best_host
+        if seed is not None:
+            tp1.sort(key=lambda i: (i is not seed, i.kv_used_fraction()))
+            members = tp1[:self.target_tp]
+            merged = SimInstance(self.target_tp, self.cm, self.method)
+            for m in members:
+                merged.active += m.active
+                merged.prefill_q += m.prefill_q
+                host.remove(m)
+            merged.dirty()
+            merged.transform_until = now + self.cm.transform_time(
+                self.method) * TRANSFORM_TIME_FACTOR[self.method]
+            merged.n_transforms = 1
+            self.n_transforms += 1
+            host.append(merged)
+            return merged
+        tp1.sort(key=lambda i: i.kv_used_fraction())
+        members = tp1[:self.target_tp]
+        merged = SimInstance(self.target_tp, self.cm, self.method)
+        for m in members:
+            merged.active += m.active
+            merged.prefill_q += m.prefill_q
+            host.remove(m)
+        merged.dirty()
+        merged.transform_until = now + self.cm.transform_time(self.method) \
+            * TRANSFORM_TIME_FACTOR[self.method]
+        merged.n_transforms = 1
+        self.n_transforms += 1
+        host.append(merged)
+        return merged
+
+    def execute_scale_down(self, inst: SimInstance, now: float) -> None:
+        host = self._host_of(inst)
+        tp1_cap = self.cm.max_seq(1)
+        if any(r.in_len + r.out_len > tp1_cap
+               for r in inst.active + inst.prefill_q):
+            return
+        host.remove(inst)
+        parts = [SimInstance(1, self.cm, self.method)
+                 for _ in range(inst.tp)]
+        for j, r in enumerate(inst.active):
+            parts[j % len(parts)].active.append(r)
+        for j, r in enumerate(inst.prefill_q):
+            parts[j % len(parts)].prefill_q.append(r)
+        t = now + self.cm.transform_time(self.method) \
+            * TRANSFORM_TIME_FACTOR[self.method]
+        for p in parts:
+            p.transform_until = t
+        self.n_transforms += 1
+        host.extend(parts)
+        self._update_reserve()
+
+    def _update_reserve(self) -> None:
+        """Alg 2 line 9 update_reserve(): on each host, earmark one group
+        of target_tp TP1 instances as the next merge candidates."""
+        if not isinstance(self.scheduler, GygesScheduler):
+            return
+        for h in self.hosts:
+            tp1 = sorted([i for i in h if i.tp == 1],
+                         key=lambda i: i.kv_used_fraction())
+            for i in h:
+                i.reserved = False
+            for i in tp1[:self.target_tp]:
+                i.reserved = True
+
+    # ---- main loop ----------------------------------------------------
+    def _place(self, req: Request, now: float) -> bool:
+        total = req.in_len + req.out_len
+        if self.static:
+            # static hybrid deployment: fit-aware least-load routing
+            fit = [i for i in self.instances
+                   if total <= i.max_seq() and i.kv_free_tokens()
+                   >= req.in_len]
+            inst = min(fit, key=lambda i: i.load(), default=None)
+        else:
+            inst = self.scheduler.pick(self.instances, req.in_len,
+                                       req.out_len)
+            if inst is not None and (total > inst.max_seq()
+                                     or inst.kv_free_tokens() < req.in_len):
+                # transformation-unaware pick: the chosen instance must
+                # scale up around itself (paper Fig. 13 pathology)
+                inst = self.execute_scale_up(now, req.in_len, seed=inst)
+            if inst is None:
+                inst = self.execute_scale_up(now, req.in_len)  # Alg1 l.15
+            if inst is not None and (total > inst.max_seq()
+                                     or inst.kv_free_tokens() < req.in_len):
+                inst = None
+        if inst is None:
+            return False
+        inst.prefill_q.append(req)
+        inst.dirty()
+        return True
+
+    def submit(self, req: Request, now: float) -> None:
+        if not self._place(req, now):
+            self.waiting.append(req)
+
+    def run(self, requests: Sequence[Request], dt: float = 0.05,
+            drain: float = 60.0) -> Dict[str, float]:
+        reqs = sorted(requests, key=lambda r: r.arrive)
+        self.all_requests = list(reqs)
+        t_end = max(r.arrive for r in reqs) + drain
+        now, qi = 0.0, 0
+        self._update_reserve()
+        while now < t_end:
+            while qi < len(reqs) and reqs[qi].arrive <= now:
+                self.submit(reqs[qi], now)
+                qi += 1
+            # retry waiting requests (throttled; FCFS: stop at first
+            # request that still cannot be placed)
+            if self.waiting and int(now / dt) % max(1, int(0.5 / dt)) == 0:
+                while self.waiting:
+                    if not self._place(self.waiting[0], now):
+                        break
+                    self.waiting.pop(0)
+            out = sum(i.tick(now, dt) for i in self.instances)
+            self.total_tokens += out
+            self.timeline.append((now, out / dt))
+            # Alg 2: periodic scale-down scan
+            any_long_wait = any(
+                r.in_len + r.out_len > self.cm.max_seq(1)
+                for r in self.waiting)
+            for inst in list(self.instances):
+                if (inst.tp > 1 and not self.static
+                        and now > inst.transform_until + self.scale_down_dwell
+                        and self.scheduler.want_scale_down(
+                            inst, any_long_wait)):
+                    self.execute_scale_down(inst, now)
+            now += dt
+        return self.metrics(t_end)
+
+    def metrics(self, t_end: float) -> Dict[str, float]:
+        reqs = self.all_requests
+        fin = [r for r in reqs if r.t_finish is not None]
+        ttfts = [r.ttft for r in reqs if r.ttft is not None]
+        tpots = [r.tpot for r in fin if r.tpot is not None]
+        tokens = self.total_tokens
+        return {
+            "throughput_tps": tokens / t_end,
+            "finished": len(fin),
+            "total": len(reqs),
+            "ttft_p50": _pct(ttfts, 50), "ttft_p99": _pct(ttfts, 99),
+            "tpot_p50": _pct(tpots, 50), "tpot_p99": _pct(tpots, 99),
+            "n_transforms": float(self.n_transforms),
+        }
+
+
+def _pct(xs: List[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    k = min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))
+    return xs[k]
+
+
+# ---------------------------------------------------------------------------
+# Trace generation (paper §6.2.4 hybrid workload + Fig. 2 long-tail trace)
+# ---------------------------------------------------------------------------
+
+def hybrid_trace(duration: float = 300.0, short_qpm: float = 60.0,
+                 long_qpm: float = 1.0, short_len: int = 1000,
+                 long_len: int = 50_000, out_len: int = 200,
+                 seed: int = 0) -> List[Request]:
+    """§6.2.4: short 1K-input requests at 60 qpm + long 50K-input at 1 qpm."""
+    import random
+    rnd = random.Random(seed)
+    reqs: List[Request] = []
+    rid = 0
+    for qpm, ilen in ((short_qpm, short_len), (long_qpm, long_len)):
+        t = rnd.expovariate(qpm / 60.0)
+        while t < duration:
+            reqs.append(Request(rid, t, ilen, out_len))
+            rid += 1
+            t += rnd.expovariate(qpm / 60.0)
+    return reqs
+
+
+def longtail_trace(duration: float = 300.0, qps: float = 0.6,
+                   seed: int = 0) -> List[Request]:
+    """§6.3: long-tail input-length distribution following Fig. 2a
+    (lognormal body + heavy tail) at the paper's 0.6 QPS operating point."""
+    import random
+    rnd = random.Random(seed)
+    reqs: List[Request] = []
+    t, rid = 0.0, 0
+    while t < duration:
+        u = rnd.random()
+        if u < 0.92:
+            ilen = int(min(3500, max(64, rnd.lognormvariate(6.5, 0.8))))
+        elif u < 0.985:
+            ilen = rnd.randint(4_000, 30_000)
+        else:
+            ilen = rnd.randint(30_000, 100_000)
+        out = int(max(16, min(2000, rnd.lognormvariate(4.8, 0.9))))
+        reqs.append(Request(rid, t, ilen, out))
+        rid += 1
+        t += rnd.expovariate(qps)
+    return reqs

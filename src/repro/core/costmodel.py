@@ -1,0 +1,151 @@
+"""Instance-level cost model, calibrated to the paper's Table 1.
+
+Table 1 (Qwen2.5-32B on 4x H20-96GB, 1K-token requests):
+
+                      TP1      TP2      TP4
+    max sequence      3.75K    41.25K   120.5K
+    per-instance tps  448      670      767
+    total tps (4 GPU) 1792     1340     767
+
+Two ingredients:
+
+* **memory model** — max supported tokens = (mem - weights/tp - act) /
+  kv_bytes_per_token, with an effectiveness factor calibrated so Qwen2.5
+  reproduces Table 1's max-seq column (vLLM reserves activation headroom
+  and block metadata; we do not re-derive its internals).
+
+* **throughput model** — per-instance decode tps grows sub-linearly with
+  tp because of the per-layer AllReduce (paper §3.1: 4xTP1 = 2.33x TP4
+  total).  We fit eff(tp) = 1 / (1 + a(tp-1) + b(tp-1)^2) to Table 1;
+  (a, b) = (0.283, 0.054) reproduces 448/670/767 exactly.
+
+The same model parameterizes every assigned architecture via its config
+(weights bytes, kv bytes/token), so the scheduler benchmarks are not
+qwen-specific.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+
+GB = 1024 ** 3
+
+
+@dataclass(frozen=True)
+class Hardware:
+    mem_bytes: float = 96 * GB          # H20
+    base_tps: float = 448.0             # single-GPU decode tps (calibrated)
+    prefill_tps: float = 12_000.0       # prompt tokens/s per GPU
+    per_req_tps: float = 25.0           # single-request decode rate cap
+                                        # (TPOT ~ 40ms at TP1)
+    # TP communication penalty: eff = 1/(1 + a(tp-1) + b(tp-1)^2),
+    # fit exactly to Table 1 (448/670/767 tps)
+    alpha: float = 0.283
+    beta: float = 0.054
+    activation_bytes: float = 14.3 * GB  # paper §3.1
+    kv_effectiveness: float = 0.0485    # fraction of free mem usable as KV
+                                        # at SLO (calibrated to 3.75K@TP1)
+    # Table-1-calibrated scaling of usable-KV fraction with TP (larger
+    # pools amortize vLLM's reserve headroom): {1: 1.0, 2: 2.1, 4: 2.35}
+    kv_eff_scale_c2: float = 2.1
+    kv_eff_scale_c4: float = 2.35
+
+
+H20 = Hardware()
+A100_40G = Hardware(mem_bytes=40 * GB, base_tps=380.0,
+                    activation_bytes=6 * GB)
+
+
+def weight_bytes(cfg: ModelConfig) -> float:
+    return cfg.param_count() * 2.0  # bf16
+
+
+def kv_bytes_per_token(cfg: ModelConfig) -> float:
+    """KV bytes per token of context (attention layers only; recurrent
+    blocks contribute O(1) state, counted as zero here)."""
+    dh = cfg.resolved_head_dim
+    n_attn = sum(1 for k in cfg.pattern if k in ("attn", "sliding", "moe"))
+    return n_attn * cfg.num_kv_heads * dh * 2 * 2
+
+
+def _kv_bytes_guarded(cfg: ModelConfig) -> float:
+    b = kv_bytes_per_token(cfg)
+    # attention-free (xLSTM): context memory is O(1) in sequence length;
+    # capacity is effectively unbounded — represent with a tiny per-token
+    # cost so max_seq() reports a very large number instead of dividing
+    # by zero.
+    return b if b > 0 else 1e-3
+
+
+class CostModel:
+    def __init__(self, cfg: ModelConfig, hw: Hardware = H20):
+        self.cfg = cfg
+        self.hw = hw
+
+    # ---- memory ----------------------------------------------------------
+    def kv_capacity_tokens(self, tp: int) -> int:
+        free = (self.hw.mem_bytes * tp
+                - weight_bytes(self.cfg)
+                - self.hw.activation_bytes * tp)
+        if free <= 0:
+            return 0
+        # piecewise-calibrated effectiveness scaling (see Hardware)
+        if tp <= 1:
+            scale = 1.0
+        elif tp <= 2:
+            scale = self.hw.kv_eff_scale_c2
+        else:
+            scale = self.hw.kv_eff_scale_c2 + (
+                self.hw.kv_eff_scale_c4 - self.hw.kv_eff_scale_c2) * min(
+                    (tp - 2) / 2.0, 1.0)
+        usable = free * self.hw.kv_effectiveness * scale
+        return int(usable / _kv_bytes_guarded(self.cfg))
+
+    def max_seq(self, tp: int) -> int:
+        return self.kv_capacity_tokens(tp)
+
+    # ---- throughput ------------------------------------------------------
+    def instance_tps(self, tp: int) -> float:
+        eff = 1.0 / (1.0 + self.hw.alpha * (tp - 1)
+                     + self.hw.beta * (tp - 1) ** 2)
+        return self.hw.base_tps * tp * eff
+
+    def per_gpu_tps(self, tp: int) -> float:
+        return self.instance_tps(tp) / tp
+
+    def prefill_time(self, tp: int, input_len: int) -> float:
+        eff = 1.0 / (1.0 + self.hw.alpha * (tp - 1)
+                     + self.hw.beta * (tp - 1) ** 2)
+        return input_len / (self.hw.prefill_tps * tp * eff)
+
+    # ---- transformation cost (per §4 accounting, method-dependent) -------
+    def transform_time(self, method: str, n_layers: int | None = None
+                       ) -> float:
+        """Wall time an instance is degraded during a TP transformation."""
+        from repro.core import weight_transform as WT
+        from repro.core.kv_transform import (LinkModel, account_scale_up)
+        from repro.core.padding import make_plan
+        n_layers = n_layers or self.cfg.num_layers
+        plan = make_plan(self.cfg, 4, mode="page")
+        link = LinkModel()
+        # pages per worker per layer at 90% KV utilization (paper §6.2.1)
+        # each layer holds its own pool covering the full context
+        cap_tokens = max(self.kv_capacity_tokens(1), 1)
+        ppw = max(1, int(0.9 * min(cap_tokens, 10_000_000) / 64))
+        kv = account_scale_up("header_centric"
+                              if method in ("gyges", "gyges-") else
+                              "page_friendly",
+                              4, ppw, max(self.cfg.num_kv_heads, 1), 64,
+                              self.cfg.resolved_head_dim)
+        overlap = method == "gyges"
+        w_meth = "padded" if method in ("gyges", "gyges-") else "swap"
+        t = 0.0
+        for _ in range(n_layers):
+            t += WT.account_scale_up(self.cfg, plan, 4, w_meth).time_s(
+                link, overlap=overlap)
+            t += kv.time_s(link, overlap=overlap)
+        if method == "seesaw":
+            from repro.core.transform_engine import seesaw_cost
+            t = seesaw_cost(self.cfg, plan, n_layers, link)
+        return t

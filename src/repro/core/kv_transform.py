@@ -1,0 +1,215 @@
+"""KV-cache transformation across TP configurations (paper §4.1.2).
+
+Two planes:
+
+* **Data plane** (JAX): the actual migration of page pools between
+  shardings, as a jitted donate-args reshard.  ``merge_pools`` implements
+  TP1 -> TPn (scale-up: page-sharded -> head-sharded) and ``split_pool``
+  the reverse.  Content equality is tested in
+  tests/test_kv_transform.py and on 8 fake devices in
+  tests/test_transform_integration.py.
+
+* **Accounting plane** (host): segment/byte/peak-page accounting that
+  reproduces the paper's Fig. 9 comparisons between
+
+      basic           token-first layout + migrate + trim
+      header_centric  in-place migration (Gyges-)
+      phased          + staged all-to-all with freed-page metadata
+                      exchange (Gyges)
+
+  The accounting uses an explicit interconnect model (bytes/bandwidth +
+  per-contiguous-segment launch overhead) because segment counts — not
+  bytes — are what the layout changes.  Constants are configurable; the
+  defaults are NVLink-class to compare against the paper's ms numbers,
+  and the TPU ICI numbers are used in the roofline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.paged import layout as L
+from repro.paged.allocator import PageAllocator
+
+# ---------------------------------------------------------------------------
+# Interconnect cost model
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LinkModel:
+    # effective copy bandwidth (below peak NVLink: strided copy kernels)
+    bandwidth: float = 150e9      # bytes/s
+    segment_overhead: float = 100e-9  # s per contiguous segment (descriptor
+    # setup / gather-kernel iteration); this is what fragmentation costs
+    # fraction of the transfer hideable behind compute when launched on an
+    # independent stream / async DMA (paper §4.1 "Overlapping")
+    overlap_fraction: float = 0.85
+
+
+TPU_ICI = LinkModel(bandwidth=45e9, segment_overhead=50e-9,
+                    overlap_fraction=0.9)
+
+
+@dataclass
+class MigrationStats:
+    bytes_moved: int = 0
+    segments: int = 0
+    trim_bytes: int = 0           # extra local copies for compaction
+    peak_extra_pages: int = 0     # transient page overhead during migration
+    stages: int = 1
+
+    def time_s(self, link: LinkModel, overlap: bool = False) -> float:
+        t = (self.bytes_moved / link.bandwidth
+             + self.segments * link.segment_overhead
+             + self.trim_bytes / link.bandwidth)  # trim = local copy @ BW
+        return t * (1.0 - link.overlap_fraction) if overlap else t
+
+
+# ---------------------------------------------------------------------------
+# Accounting plane
+# ---------------------------------------------------------------------------
+
+def page_bytes(kv_slots: int, page_tokens: int, head_dim: int,
+               dtype_bytes: int = 2) -> int:
+    return kv_slots * 2 * page_tokens * head_dim * dtype_bytes
+
+
+def account_scale_up(
+    layout: str,
+    n_workers: int,
+    pages_per_worker: int,
+    kv_slots: int,
+    page_tokens: int,
+    head_dim: int,
+    n_stages: int = 1,
+    dtype_bytes: int = 2,
+) -> MigrationStats:
+    """TP1 x n_workers -> TPn migration accounting (paper Fig. 5).
+
+    Every worker keeps heads [w*H/n, (w+1)*H/n) of its local pages and
+    sends the other (n-1)/n of every page to the other workers.
+    """
+    pb = page_bytes(kv_slots, page_tokens, head_dim, dtype_bytes)
+    total_pages = n_workers * pages_per_worker
+    sent_fraction = (n_workers - 1) / n_workers
+    bytes_moved = int(total_pages * pb * sent_fraction)
+
+    segs_per_block = L.contiguous_segments_per_block(
+        layout, kv_slots, page_tokens, n_workers)
+    # only the (n-1)/n shipped share generates send segments
+    segments = int(total_pages * segs_per_block * sent_fraction)
+
+    if layout == "header_centric":
+        trim_bytes = 0  # freed space is contiguous: block reshaping, O(1)
+        if n_stages <= 1:
+            # arrivals land before local frees complete: peak = + incoming
+            peak = int(pages_per_worker * sent_fraction) + 1
+        else:
+            # phased: each stage frees pages whose metadata the next stage
+            # reuses (Fig. 5d) -> peak is one stage's worth
+            peak = int(pages_per_worker * sent_fraction / n_stages) + 1
+    else:
+        # token-first: freed bytes are interleaved; trimming copies the
+        # surviving 1/n of every local page into fresh pages
+        trim_bytes = int(pages_per_worker * pb * (1.0 / n_workers))
+        # needs destination pages for remote KV *and* trim scratch
+        peak = int(pages_per_worker * sent_fraction) + int(
+            pages_per_worker / n_workers) + 1
+        n_stages = 1  # phased migration requires in-place reuse
+    return MigrationStats(bytes_moved=bytes_moved, segments=segments,
+                          trim_bytes=trim_bytes, peak_extra_pages=peak,
+                          stages=n_stages)
+
+
+def simulate_phased_migration(n_workers: int, pages_per_worker: int,
+                              n_stages: int, headroom_pages: int
+                              ) -> Tuple[int, bool]:
+    """Stage-level simulation of the phased all-to-all (Fig. 5d).
+
+    Each worker starts with ``pages_per_worker`` live pages and
+    ``headroom_pages`` free pages.  In each stage it receives 1/n_stages of
+    its share of remote pages, then frees 1/n_stages of its shippable local
+    pages (header-centric layout: freeing is O(1) block reshaping).  The
+    metadata exchange means freed pages are usable by the *next* stage.
+    Returns (peak_pages_used, fits_within_headroom)."""
+    send_total = pages_per_worker * (n_workers - 1) // n_workers
+    recv_total = send_total  # balanced-load assumption (paper §4.3)
+    per_stage = max(1, -(-recv_total // n_stages))
+    live = pages_per_worker
+    capacity = pages_per_worker + headroom_pages
+    peak = live
+    sent = recv = 0
+    fits = True
+    while sent < send_total or recv < recv_total:
+        r = min(per_stage, recv_total - recv)
+        live += r
+        recv += r
+        peak = max(peak, live)
+        if live > capacity:
+            fits = False
+        s = min(per_stage, send_total - sent)
+        live -= s  # contiguous frees: immediately reusable next stage
+        sent += s
+    return peak, fits
+
+
+# ---------------------------------------------------------------------------
+# Data plane: real pool migration as resharding (runs on any mesh)
+# ---------------------------------------------------------------------------
+
+def merge_pools_local(pools: jax.Array, tp: int) -> jax.Array:
+    """Reference (single-host) TP1 x W -> TPw merge.
+
+    pools: (W, NP, kv_slots, 2, P, dh) canonical layout — worker w's local
+    pages.  Returns (W*NP, kv_slots, 2, P, dh): the union pool, which on a
+    real mesh is sharded on the *head* axis instead of the page axis.
+    """
+    W, NP = pools.shape[:2]
+    return pools.reshape(W * NP, *pools.shape[2:])
+
+
+def split_pool_local(pool: jax.Array, n_workers: int) -> jax.Array:
+    """TPn -> TP1 x W reverse reference."""
+    NP = pool.shape[0]
+    assert NP % n_workers == 0
+    return pool.reshape(n_workers, NP // n_workers, *pool.shape[1:])
+
+
+def reshard_scale_up(pools: jax.Array, mesh: jax.sharding.Mesh,
+                     axis: str = "tp") -> jax.Array:
+    """The actual Gyges scale-up on a device mesh.
+
+    Input sharding:  pools (W, NP, H, 2, P, dh) sharded on dim 0 (each
+    worker holds its own pages, all heads).
+    Output sharding: (W*NP, H, 2, P, dh) sharded on dim 1 (every worker
+    holds all pages, its head slice) — one all-to-all.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P_
+
+    out_sharding = NamedSharding(mesh, P_(None, axis))
+
+    @jax.jit
+    def go(p):
+        merged = p.reshape(p.shape[0] * p.shape[1], *p.shape[2:])
+        return jax.lax.with_sharding_constraint(merged, out_sharding)
+
+    return go(pools)
+
+
+def reshard_scale_down(pool: jax.Array, n_workers: int,
+                       mesh: jax.sharding.Mesh, axis: str = "tp"
+                       ) -> jax.Array:
+    from jax.sharding import NamedSharding, PartitionSpec as P_
+
+    out_sharding = NamedSharding(mesh, P_(axis))
+
+    @jax.jit
+    def go(p):
+        split = p.reshape(n_workers, p.shape[0] // n_workers, *p.shape[1:])
+        return jax.lax.with_sharding_constraint(split, out_sharding)
+
+    return go(pool)

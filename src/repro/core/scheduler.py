@@ -1,0 +1,170 @@
+"""Transformation-aware scheduler (paper §5, Algorithms 1 and 2)
+plus the RR / LLF baselines used in §6.2.4.
+
+The scheduler operates on ``SimInstance`` views (from cluster_sim) but is
+written against a narrow protocol (load, tp, max_seq, has_long_request,
+reserved) so the same logic drives both the event-driven simulator and
+the real ``InstanceGroup``-backed engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Protocol, Sequence
+
+MAX = float("inf")
+
+
+class InstanceView(Protocol):
+    iid: int
+    tp: int
+    reserved: bool
+
+    def load(self) -> float: ...
+    def kv_used_fraction(self) -> float: ...
+    def max_seq(self) -> int: ...
+    def kv_free_tokens(self) -> int: ...
+    def has_long_request(self) -> bool: ...
+
+
+@dataclass
+class SchedulerConfig:
+    long_threshold: int = 4096       # input length that makes a req "long"
+    scale_down_load: float = 0.35    # Alg 2 THRESHOLD
+    reserve_fraction: float = 0.10   # capacity reserved on candidate
+                                     # scale-up groups (check_reserve)
+    target_tp: int = 4
+
+
+class BaseScheduler:
+    name = "base"
+
+    def __init__(self, cfg: Optional[SchedulerConfig] = None):
+        self.cfg = cfg or SchedulerConfig()
+
+    def is_long(self, input_len: int, inst: InstanceView) -> bool:
+        return input_len > inst.max_seq()
+
+    # hooks implemented by subclasses -------------------------------------
+    def pick(self, instances: Sequence[InstanceView], input_len: int,
+             output_len_hint: int) -> Optional[InstanceView]:
+        raise NotImplementedError
+
+    def want_scale_down(self, inst: InstanceView,
+                        any_long_waiting: bool) -> bool:
+        """Alg 2 applies to every scheduler (it is the instance-side
+        resource manager, not the router): scale down at low load when no
+        long request is in service.  What differs across schedulers is how
+        often their *routing* forces a new scale-up right after."""
+        if inst.tp > 1 and not inst.has_long_request() \
+                and not any_long_waiting:
+            if inst.kv_used_fraction() < self.cfg.scale_down_load:
+                return True
+        return False
+
+
+class RoundRobinScheduler(BaseScheduler):
+    """Baseline (1): round-robin, *transformation-unaware* (paper §6.2.4):
+    it does not consider input length, so a long request routinely lands
+    on a TP1 instance which must then scale up around itself (Fig. 13)."""
+    name = "rr"
+
+    def __init__(self, cfg=None):
+        super().__init__(cfg)
+        self._i = 0
+
+    def pick(self, instances, input_len, output_len_hint):
+        n = len(instances)
+        for k in range(n):
+            inst = instances[(self._i + k) % n]
+            if inst.kv_used_fraction() < 0.95:
+                self._i = (self._i + k + 1) % n
+                return inst
+        return None
+
+
+class LeastLoadScheduler(BaseScheduler):
+    """Baseline (2): least-load-first, transformation-unaware.  Idle TP1
+    instances look least loaded, so long requests flow to them and trigger
+    avoidable transformations — the paper's Fig. 13 pathology."""
+    name = "llf"
+
+    def pick(self, instances, input_len, output_len_hint):
+        best, best_load = None, MAX
+        for inst in instances:
+            if inst.kv_used_fraction() < 0.95 and inst.load() < best_load:
+                best, best_load = inst, inst.load()
+        return best
+
+
+class GygesScheduler(BaseScheduler):
+    """Paper Algorithm 1 (schedule_request) + Algorithm 2
+    (schedule_parallelism).  Line-by-line mapping in comments."""
+    name = "gyges"
+
+    # --- Algorithm 1 -------------------------------------------------------
+    def pick(self, instances, input_len, output_len_hint):
+        total = input_len + output_len_hint
+        long_req = any(total > i.max_seq() for i in instances if i.tp == 1)
+
+        t_load, t_instance = MAX, None            # line 2
+        for inst in instances:                    # line 3
+            if not inst.has_long_request():       # line 4 no_long_req()
+                # long-context-aware scheduling: skip instances whose
+                # headroom is reserved for a potential transformation
+                if self._check_reserve(inst, long_req):      # lines 6-8
+                    continue
+            self._check_and_update(inst, total, long_req)
+            score = self._score(inst, total, long_req)
+            if score < t_load:                    # line 9 check_and_update
+                t_load, t_instance = score, inst
+        if t_instance is not None and self._valid(
+                t_instance, input_len, total):    # line 10 valid()
+            return t_instance                     # line 12 directly serve
+        return None  # caller runs execute_scale_up (lines 14-16)
+
+    def _check_reserve(self, inst: InstanceView, long_req: bool) -> bool:
+        """check_reserve: a TP1 instance earmarked as a future merge
+        member keeps `reserve_fraction` KV headroom free for the
+        transformation; short requests that would eat it are diverted."""
+        if long_req:
+            return False
+        if inst.reserved and inst.kv_used_fraction() > (
+                1.0 - self.cfg.reserve_fraction):
+            return True
+        return False
+
+    def _check_and_update(self, inst, total, long_req):
+        # bookkeeping hook (kept for pseudocode fidelity; scoring below)
+        return None
+
+    def _score(self, inst: InstanceView, total: int, long_req: bool
+               ) -> float:
+        """Expected-performance score (lower = better).  Implements the
+        paper's two stated preferences: long requests go to instances
+        already at high TP (minimize #transformations); short requests
+        prefer TP1 (4xTP1 = 2.33x TP4 throughput)."""
+        if total > inst.max_seq() or inst.kv_free_tokens() < total:
+            return MAX
+        load = inst.load()
+        if long_req:
+            return load - 10.0 * (inst.tp > 1)    # prefer existing TP>1
+        return load + 2.0 * (inst.tp - 1)         # short: prefer TP1
+
+    def _valid(self, inst: InstanceView, input_len: int, total: int) -> bool:
+        return (total <= inst.max_seq()
+                and inst.kv_free_tokens() >= input_len)
+
+    # --- Algorithm 2 -------------------------------------------------------
+    def want_scale_down(self, inst: InstanceView,
+                        any_long_waiting: bool) -> bool:
+        cur_tp = inst.tp                                   # line 2
+        if cur_tp > 1 and not inst.has_long_request() \
+                and not any_long_waiting:                  # line 3
+            cur_load = inst.kv_used_fraction()             # line 4
+            if cur_load < self.cfg.scale_down_load:        # line 6 safe
+                return True                                # line 7-9
+        return False
+
+
+SCHEDULERS = {c.name: c for c in (RoundRobinScheduler, LeastLoadScheduler,
+                                  GygesScheduler)}

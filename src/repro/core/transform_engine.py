@@ -1,0 +1,101 @@
+"""Transformation orchestration (paper §4.3).
+
+Builds per-layer transformation *schedules* implementing:
+
+  * MLP-first on scale-up — MLP weight pages are released before the KV
+    migration starts, so the freed memory absorbs incoming remote KV;
+  * layer-staggered on scale-down — one (or a few) layers per inference
+    step bounds the transient memory spike;
+  * reversed traversal — last layer first, so in-flight requests cross the
+    parallelism boundary exactly once.
+
+The schedule is consumed two ways: the cost benchmark (Fig. 11) integrates
+per-step overheads, and ``Instance.transform`` executes steps between
+decode iterations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Literal, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import weight_transform as WT
+from repro.core.kv_transform import LinkModel, MigrationStats, account_scale_up
+from repro.core.padding import PaddingPlan
+
+Component = Literal["mlp", "kv"]
+
+
+@dataclass(frozen=True)
+class TransformOp:
+    layer: int
+    component: Component
+    overlap: bool = True
+
+
+@dataclass
+class Schedule:
+    direction: str                 # "up" | "down"
+    tp_from: int
+    tp_to: int
+    steps: List[List[TransformOp]] = field(default_factory=list)
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.steps)
+
+
+def scale_up_schedule(n_layers: int, layers_per_step: int = 0,
+                      tp_from: int = 1, tp_to: int = 4) -> Schedule:
+    """MLP-first, reversed order, then KV migration per layer."""
+    lps = layers_per_step or n_layers
+    order = list(range(n_layers - 1, -1, -1))      # reversed traversal
+    steps: List[List[TransformOp]] = []
+    for i in range(0, n_layers, lps):              # 1) MLP releases first
+        steps.append([TransformOp(l, "mlp") for l in order[i:i + lps]])
+    for i in range(0, n_layers, lps):              # 2) then KV migration
+        steps.append([TransformOp(l, "kv") for l in order[i:i + lps]])
+    return Schedule("up", tp_from, tp_to, steps)
+
+
+def scale_down_schedule(n_layers: int, layers_per_step: int = 1,
+                        tp_from: int = 4, tp_to: int = 1) -> Schedule:
+    """Layer-staggered (small steps), reversed order; KV first so freed
+    head-shards make room for the incoming MLP weight gather."""
+    order = list(range(n_layers - 1, -1, -1))
+    steps: List[List[TransformOp]] = []
+    for i in range(0, n_layers, layers_per_step):
+        chunk = order[i:i + layers_per_step]
+        steps.append([TransformOp(l, "kv") for l in chunk]
+                     + [TransformOp(l, "mlp") for l in chunk])
+    return Schedule("down", tp_from, tp_to, steps)
+
+
+def schedule_cost(sched: Schedule, cfg: ModelConfig, plan: PaddingPlan,
+                  kv_stats_per_layer: MigrationStats, link: LinkModel,
+                  method: str = "padded", overlap: bool = True
+                  ) -> Tuple[float, List[float]]:
+    """Total transformation time and per-step times."""
+    per_step = []
+    for step in sched.steps:
+        t = 0.0
+        for op in step:
+            if op.component == "mlp":
+                acct = (WT.account_scale_up if sched.direction == "up"
+                        else WT.account_scale_down)
+                t += acct(cfg, plan, sched.tp_to if sched.direction == "up"
+                          else sched.tp_from, method).time_s(
+                              link, overlap=overlap and op.overlap)
+            else:
+                t += kv_stats_per_layer.time_s(
+                    link, overlap=overlap and op.overlap)
+        per_step.append(t)
+    return sum(per_step), per_step
+
+
+def seesaw_cost(cfg: ModelConfig, plan: PaddingPlan, n_layers: int,
+                link: LinkModel, host_bw: float = 25e9) -> float:
+    """Seesaw-style baseline [24]: re-shard by bouncing weights + KV
+    through CPU shared memory — every byte crosses PCIe twice."""
+    w_bytes = WT.mlp_layer_bytes(cfg, plan, padded=False) * n_layers
+    return 2.0 * w_bytes / host_bw

@@ -1,0 +1,149 @@
+"""Model-weight transformation (paper §4.2).
+
+Data plane: padding-aware column/row splitting of MLP weights plus the
+resharding helpers used by ``Instance`` when changing TP; the padded FFN
+equals the unpadded FFN exactly (Eq. 2; property-tested).
+
+Accounting plane: per-layer transformation cost for
+
+    partial_swap  copy shards to fresh aligned allocations (Basic, Fig. 6b)
+    padded        zero-copy page release/adopt (Gyges, Fig. 6c)
+
+Scale-up releases pages (metadata only when page-aligned); scale-down
+must all-gather the missing (tp-1)/tp of every shard (bytes are physics),
+but with padding the received pages are adopted in place.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.kv_transform import LinkModel
+from repro.core.padding import DTYPE_BYTES, PAGE_BYTES, PaddingPlan
+
+# ---------------------------------------------------------------------------
+# Padded splitting (Eq. 2)
+# ---------------------------------------------------------------------------
+
+def pad_columns_for_tp(w: jax.Array, ff: int, ffp: int, tp: int) -> jax.Array:
+    """(d, ff) -> (d, ffp): distribute real columns into tp shards, each
+    padded at its end with zeros so shard boundaries are page-aligned.
+    Matches the paper's U' = [U1, 0, U2, 0, U3, 0, U4, 0]."""
+    d = w.shape[0]
+    assert ff % tp == 0, (ff, tp)
+    shard, shard_p = ff // tp, ffp // tp
+    w = w.reshape(d, tp, shard)
+    w = jnp.pad(w, ((0, 0), (0, 0), (0, shard_p - shard)))
+    return w.reshape(d, ffp)
+
+
+def pad_rows_for_tp(w: jax.Array, ff: int, ffp: int, tp: int) -> jax.Array:
+    """(ff, d) -> (ffp, d): D' = [D1;0;D2;0;...] row padding."""
+    d = w.shape[1]
+    shard, shard_p = ff // tp, ffp // tp
+    w = w.reshape(tp, shard, d)
+    w = jnp.pad(w, ((0, 0), (0, shard_p - shard), (0, 0)))
+    return w.reshape(ffp, d)
+
+
+def ffn_reference(x, u, d_w, activation: str = "swiglu"):
+    """Unpadded FFN(x) = f(x @ U) @ D (paper Eq. 1, ungated variant uses
+    f directly; gated splits u into [gate|up])."""
+    from repro.models.layers import _act
+    if activation in ("swiglu", "geglu"):
+        g, up = jnp.split(x @ u, 2, axis=-1)
+        h = _act(activation, g) * up
+    else:
+        h = _act(activation, x @ u)
+    return h @ d_w
+
+
+# ---------------------------------------------------------------------------
+# Accounting (Fig. 10)
+# ---------------------------------------------------------------------------
+
+PAGE_OP_OVERHEAD = 2e-6  # s per page map/unmap metadata op
+
+
+@dataclass
+class WeightTransformStats:
+    bytes_copied: int = 0      # local copies (swap path)
+    bytes_transferred: int = 0  # interconnect bytes (scale-down gather)
+    page_ops: int = 0
+
+    def time_s(self, link: LinkModel, overlap: bool = False) -> float:
+        t = (self.bytes_copied / link.bandwidth
+             + self.bytes_transferred / link.bandwidth
+             + self.page_ops * PAGE_OP_OVERHEAD)
+        if overlap:
+            # page ops are driver calls that run alongside kernels; the
+            # transfer is hidden up to the overlap fraction (paper §4.2)
+            t = (self.bytes_copied / link.bandwidth
+                 + self.bytes_transferred / link.bandwidth
+                 * (1 - link.overlap_fraction)
+                 + self.page_ops * PAGE_OP_OVERHEAD * 0.1)
+        return t
+
+
+def mlp_layer_bytes(cfg: ModelConfig, plan: PaddingPlan,
+                    padded: bool = True) -> int:
+    ff = plan.d_ff_padded if padded else cfg.d_ff
+    n = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    per = n * cfg.d_model * ff * DTYPE_BYTES
+    if cfg.moe is not None:
+        e = plan.experts_padded if padded else cfg.moe.num_experts
+        per = per * e + cfg.d_model * e * DTYPE_BYTES
+    return per
+
+
+def account_scale_up(cfg: ModelConfig, plan: PaddingPlan, tp: int,
+                     method: str) -> WeightTransformStats:
+    """Per-layer MLP transformation cost, TP1 -> TPtp."""
+    layer_bytes = mlp_layer_bytes(cfg, plan, padded=(method == "padded"))
+    shard_bytes = layer_bytes // tp
+    released = layer_bytes - shard_bytes
+    pages = max(1, released // PAGE_BYTES)
+    if method == "padded" and plan.page_aligned:
+        # zero copy: unmap the released pages, keep the local shard where
+        # it already is
+        return WeightTransformStats(page_ops=pages)
+    # partial swap: the kept shard must be copied out to a fresh aligned
+    # allocation before the old bulk allocation can be released
+    return WeightTransformStats(bytes_copied=shard_bytes, page_ops=pages)
+
+
+def account_scale_down(cfg: ModelConfig, plan: PaddingPlan, tp: int,
+                       method: str) -> WeightTransformStats:
+    layer_bytes = mlp_layer_bytes(cfg, plan, padded=(method == "padded"))
+    shard_bytes = layer_bytes // tp
+    gathered = layer_bytes - shard_bytes      # (tp-1)/tp from peers
+    pages = max(1, gathered // PAGE_BYTES)
+    if method == "padded" and plan.page_aligned:
+        return WeightTransformStats(bytes_transferred=gathered,
+                                    page_ops=pages)
+    # swap: additionally re-copy local shard into the rebuilt contiguous
+    # allocation
+    return WeightTransformStats(bytes_copied=shard_bytes,
+                                bytes_transferred=gathered, page_ops=pages)
+
+
+# ---------------------------------------------------------------------------
+# Data plane: pspecs per TP for an instance submesh, and the reshard op
+# ---------------------------------------------------------------------------
+
+def mlp_pspec(tp_axis: str):
+    """PartitionSpecs for a dense MLP param dict {wi, wo} under TP:
+    wi column-sharded, wo row-sharded (Megatron)."""
+    from jax.sharding import PartitionSpec as P
+    return {"wi": P(None, tp_axis), "wo": P(tp_axis, None)}
+
+
+def attn_pspec(tp_axis: str):
+    from jax.sharding import PartitionSpec as P
+    return {"wq": P(None, tp_axis), "wk": P(None, tp_axis),
+            "wv": P(None, tp_axis), "wo": P(tp_axis, None)}

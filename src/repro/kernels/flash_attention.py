@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: flash (chunked online-softmax) causal GQA attention
+for prefill/training — the compute hot spot of every attention block.
+
+Grid: (batch*kv_heads, q_blocks, kv_blocks); VMEM scratch carries (m, l,
+acc) across the kv-block walk; fully-masked kv blocks (beyond the causal
+frontier, or outside the sliding window) are *skipped* with pl.when, so
+FLOPs match the banded jnp implementation.
+
+Validated against ``ref.flash_attention_ref`` in interpret mode
+(tests/test_kernels.py sweeps shapes, dtypes, rep factors, windows).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_q: int, block_k: int, n_kv_blocks: int, rep: int,
+            window: int, causal: bool):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = jk * block_k
+    # causal frontier: kv block fully in the future -> skip entirely
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window > 0:
+        live = live & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)              # (bq, rep, dh)
+        k = k_ref[0].astype(jnp.float32)              # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        dh = q.shape[-1]
+        scale = 1.0 / math.sqrt(dh)
+        s = jax.lax.dot_general(q * scale, k,
+                                (((2,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        # s: (bq, rep, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)
+        mask = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                           # (bq, rep)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(jk == n_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-20)[..., None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, S, Hq, dh); k, v: (B, S, Hkv, dh), Hq % Hkv == 0.
+    Returns (B, S, Hq, dh)."""
+    B, S, Hq, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0 and S == Sk
+    rep = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    nq, nk = S // block_q, S // block_k
+
+    # regroup q to (B*Hkv, S, rep, dh); k/v to (B*Hkv, S, dh)
+    qg = q.reshape(B, S, Hkv, rep, dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(B * Hkv, S, rep, dh)
+    kg = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+
+    grid = (B * Hkv, nq, nk)
+    kernel = functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                               n_kv_blocks=nk, rep=rep, window=window,
+                               causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, rep, dh), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, rep, dh),
+                               lambda b, i, j: (b, i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, rep), jnp.float32),
+            pltpu.VMEM((block_q, rep), jnp.float32),
+            pltpu.VMEM((block_q, rep, dh), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, S, rep, dh), q.dtype),
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out.reshape(B, Hkv, S, rep, dh).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, S, Hq, dh)

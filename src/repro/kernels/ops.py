@@ -1,0 +1,38 @@
+"""Jitted public wrappers for the Pallas kernels with backend selection.
+
+backend="pallas"     — real TPU lowering (pl.pallas_call)
+backend="interpret"  — Pallas interpret mode (CPU correctness)
+backend="jnp"        — pure-jnp oracle (fast CPU fallback; default here
+                       because this container is CPU-only)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.paged_attention import paged_attention as _pa_pallas
+from repro.kernels.padded_ffn import padded_ffn as _ffn_pallas
+
+DEFAULT_BACKEND = "jnp" if jax.default_backend() == "cpu" else "pallas"
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def paged_attention(q, pool, page_table, seq_lens, backend: str = None):
+    backend = backend or DEFAULT_BACKEND
+    if backend == "jnp":
+        return ref.paged_attention_ref(q, pool, page_table, seq_lens)
+    return _pa_pallas(q, pool, page_table, seq_lens,
+                      interpret=(backend == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("tp", "ff", "activation", "backend"))
+def padded_ffn(x, wi, wo, tp: int, ff: int, activation: str = "swiglu",
+               backend: str = None):
+    backend = backend or DEFAULT_BACKEND
+    if backend == "jnp":
+        return ref.padded_ffn_ref(x, wi, wo, activation)
+    return _ffn_pallas(x, wi, wo, tp=tp, ff=ff, activation=activation,
+                       interpret=(backend == "interpret"))

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: gated FFN over parallelism-padded weights
+(paper §4.2 Eq. 2) that *structurally skips* the padding columns.
+
+The padded weight layout puts zero columns at the end of every TP shard:
+
+    wi = [U_1 | 0 | U_2 | 0 | ... | U_tp | 0]   (d, ffp)
+    wo = [D_1 ; 0 ; D_2 ; 0 ; ... ; D_tp ; 0]   (ffp, d)
+
+A naive GEMM multiplies the zeros (paper: <0.1% extra compute; our lane
+padding can be larger for small models).  This kernel's grid only visits
+*real* ff blocks — the BlockSpec index_map jumps over each shard's padding
+tail — so padded and unpadded FLOPs are identical by construction.
+
+Validated against ``ref.padded_ffn_ref`` (and the unpadded oracle) in
+interpret mode; see tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, wi_ref, wo_ref, o_ref, acc_ref, *, n_ff_blocks: int,
+            activation: str):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)         # (bt, d)
+    gate = wi_ref[0].astype(jnp.float32)       # (d, bf)
+    up = wi_ref[1].astype(jnp.float32)         # (d, bf)
+    g = jax.lax.dot(x, gate, preferred_element_type=jnp.float32)
+    u = jax.lax.dot(x, up, preferred_element_type=jnp.float32)
+    if activation == "swiglu":
+        h = (g * jax.nn.sigmoid(g)) * u
+    elif activation == "geglu":
+        h = jax.nn.gelu(g) * u
+    else:
+        h = jax.nn.gelu(g)
+    acc_ref[...] += jax.lax.dot(h, wo_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_ff_blocks - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def padded_ffn(x: jax.Array, wi: jax.Array, wo: jax.Array, *, tp: int,
+               ff: int, activation: str = "swiglu", block_t: int = 128,
+               block_f: int = 128, interpret: bool = False) -> jax.Array:
+    """x: (T, d); wi: (d, 2*ffp) fused [gate|up]; wo: (ffp, d).
+
+    ``ff`` is the REAL (unpadded) d_ff; ffp = wi.shape[1] // 2 is the
+    padded width; tp the number of shards the padding was planned for.
+    Requires (ff//tp) % block_f == 0 and T % block_t == 0."""
+    T, d = x.shape
+    ffp = wi.shape[1] // 2
+    assert wo.shape == (ffp, d)
+    assert ff % tp == 0 and ffp % tp == 0
+    real_per_shard, pad_per_shard = ff // tp, ffp // tp
+    assert real_per_shard % block_f == 0, (real_per_shard, block_f)
+    assert T % block_t == 0, (T, block_t)
+    blocks_per_shard = real_per_shard // block_f
+    n_ff_blocks = tp * blocks_per_shard
+    grid = (T // block_t, n_ff_blocks)
+
+    # wi reshaped to (2, d, ffp) so gate/up are separate leading blocks
+    wi2 = wi.reshape(d, 2, ffp).transpose(1, 0, 2)
+
+    def ff_block_col(j):
+        shard = j // blocks_per_shard
+        within = j % blocks_per_shard
+        return shard * pad_per_shard + within * block_f
+
+    def x_index(i, j):
+        return (i, 0)
+
+    def wi_index(i, j):
+        return (0, 0, ff_block_col(j) // block_f)
+
+    def wo_index(i, j):
+        return (ff_block_col(j) // block_f, 0)
+
+    def o_index(i, j):
+        return (i, 0)
+
+    kernel = functools.partial(_kernel, n_ff_blocks=n_ff_blocks,
+                               activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), x_index),
+            pl.BlockSpec((2, d, block_f), wi_index),
+            pl.BlockSpec((block_f, d), wo_index),
+        ],
+        out_specs=pl.BlockSpec((block_t, d), o_index),
+        scratch_shapes=[pltpu.VMEM((block_t, d), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
+        interpret=interpret,
+    )(x, wi2, wo)

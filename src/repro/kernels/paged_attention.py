@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: decode attention over the header-centric paged KV
+pool (paper §4.1 layout, consumed *in place* — no gather).
+
+Design for TPU:
+  * the page pool lives in HBM; the grid walks (batch, pages-of-that-batch)
+    and the BlockSpec index_map uses the scalar-prefetched page table to
+    DMA exactly one page per step into VMEM — this is the TPU-native
+    replacement for CUDA VMM remapping (DESIGN.md §2);
+  * the header-centric layout (num_pages, kvs, 2, P, dh) makes each page's
+    per-head K/V a contiguous (P, dh) tile, so the DMA is a pure copy and
+    the (8,128) tiling is preserved (dh is lane-aligned by the padding
+    plan);
+  * online softmax carried in VMEM scratch across the page walk.
+
+Validated against ``ref.paged_attention_ref`` in interpret mode on CPU
+(tests/test_kernels.py sweeps shapes and dtypes).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # scalar prefetch
+    page_table_ref,     # (B, n_pages) int32
+    seq_lens_ref,       # (B,) int32
+    # inputs
+    q_ref,              # (Hq, dh)            VMEM block (one batch row)
+    pool_ref,           # (1, kvs, 2, P, dh)  VMEM block (one page)
+    # outputs
+    o_ref,              # (Hq, dh)
+    # scratch
+    m_ref, l_ref, acc_ref,
+    *, pages_per_seq: int, page_tokens: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = seq_lens_ref[b]
+    page_start = j * page_tokens
+
+    @pl.when(page_start < seq_len)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)              # (Hq, dh)
+        k = pool_ref[0, :, 0].astype(jnp.float32)     # (kvs, P, dh)
+        v = pool_ref[0, :, 1].astype(jnp.float32)     # (kvs, P, dh)
+        kvs, P, dh = k.shape
+        Hq = q.shape[0]
+        rep = Hq // kvs
+        scale = 1.0 / math.sqrt(dh)
+        qg = q.reshape(kvs, rep, dh) * scale
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
+        # s: (kvs, rep, P)
+        valid = (page_start + jax.lax.broadcasted_iota(
+            jnp.int32, (kvs, rep, P), 2)) < seq_len
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]                           # (kvs, rep)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(p, v, (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == pages_per_seq - 1)
+    def _finish():
+        kvs, rep = m_ref.shape
+        denom = jnp.maximum(l_ref[...], 1e-20)[..., None]
+        out = (acc_ref[...] / denom).reshape(kvs * rep, acc_ref.shape[-1])
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, pool: jax.Array, page_table: jax.Array,
+                    seq_lens: jax.Array, *, interpret: bool = False
+                    ) -> jax.Array:
+    """q: (B, Hq, dh); pool: (NP, kvs, 2, P, dh) header-centric;
+    page_table: (B, n_pages); seq_lens: (B,). Returns (B, Hq, dh)."""
+    B, Hq, dh = q.shape
+    NP, kvs, _, P, _ = pool.shape
+    n_pages = page_table.shape[1]
+    assert Hq % kvs == 0
+    rep = Hq // kvs
+
+    grid = (B, n_pages)
+
+    def q_index(b, j, pt, sl):
+        return (b, 0, 0)
+
+    def pool_index(b, j, pt, sl):
+        return (pt[b, j], 0, 0, 0, 0)
+
+    def o_index(b, j, pt, sl):
+        return (b, 0, 0)
+
+    kernel = functools.partial(_kernel, pages_per_seq=n_pages,
+                               page_tokens=P)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, Hq, dh), q_index),
+                pl.BlockSpec((1, kvs, 2, P, dh), pool_index),
+            ],
+            out_specs=pl.BlockSpec((1, Hq, dh), o_index),
+            scratch_shapes=[
+                pltpu.VMEM((kvs, rep), jnp.float32),
+                pltpu.VMEM((kvs, rep), jnp.float32),
+                pltpu.VMEM((kvs, rep, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, dh), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, q, pool)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels (used by tests and as the CPU
+fallback backend)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q: jax.Array, pool: jax.Array,
+                        page_table: jax.Array, seq_lens: jax.Array
+                        ) -> jax.Array:
+    """Decode attention over a header-centric paged KV pool.
+
+    q:          (B, Hq, dh)
+    pool:       (NP, kvs, 2, P, dh)   canonical header-centric layout
+    page_table: (B, max_pages) int32
+    seq_lens:   (B,) int32 — valid tokens per sequence (non-ring cache)
+    returns     (B, Hq, dh)
+    """
+    B, Hq, dh = q.shape
+    NP, kvs, _, P, _ = pool.shape
+    rep = Hq // kvs
+    scale = 1.0 / math.sqrt(dh)
+    pages = pool[page_table]                      # (B, n, kvs, 2, P, dh)
+    n = pages.shape[1]
+    k = pages[:, :, :, 0].transpose(0, 2, 1, 3, 4).reshape(B, kvs, n * P, dh)
+    v = pages[:, :, :, 1].transpose(0, 2, 1, 3, 4).reshape(B, kvs, n * P, dh)
+    qg = q.reshape(B, kvs, rep, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bhrd,bhtd->bhrt", qg, k.astype(jnp.float32))
+    pos = jnp.arange(n * P)[None, None, None, :]
+    mask = pos < seq_lens[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrt,bhtd->bhrd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, dh).astype(q.dtype)
+
+
+def padded_ffn_ref(x: jax.Array, wi: jax.Array, wo: jax.Array,
+                   activation: str = "swiglu") -> jax.Array:
+    """Padded gated FFN oracle: FFN'(x) of paper Eq. 2.
+
+    x: (T, d); wi: (d, 2*ffp) fused [gate|up]; wo: (ffp, d).
+    Zero columns/rows make it equal the unpadded FFN."""
+    from repro.models.layers import _act
+    gu = x @ wi
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = _act(activation, g) * u
+    return h @ wo
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """Oracle for the flash prefill kernel. q: (B,S,Hq,dh); k,v:
+    (B,S,Hkv,dh)."""
+    import math
+    B, S, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, S, Hkv, rep, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, dh).astype(q.dtype)

@@ -1,0 +1,73 @@
+"""HLO text analysis: collective-communication byte accounting.
+
+``compiled.cost_analysis()`` has no collective term, so we parse the
+optimized HLO module text and sum the output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op.  Ops inside ``while`` bodies appear once in the text regardless of
+trip count — the roofline therefore extrapolates from *unrolled* 1-group
+and 2-group model variants (see benchmarks/roofline.py) instead of
+guessing loop trip counts.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %ag = bf16[2,16,128]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(COLLECTIVES) + r")(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind over the whole module text."""
+    out = {k: 0 for k in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        # tuple-shaped collectives: sum each element shape on the line
+        found = None
+        for kind in COLLECTIVES:
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                found = kind
+                break
+        if found is None:
+            continue
+        # `-done` ops duplicate `-start` payloads; count only starts
+        if f" {found}-done(" in line:
+            continue
+        # take everything left of the op invocation so tuple-shaped
+        # results — "(f32[..], f32[..]) all-to-all(" — are fully counted
+        for marker in (f" {found}-start(", f" {found}("):
+            idx = line.find(marker)
+            if idx >= 0:
+                lhs = line[:idx]
+                break
+        else:
+            lhs = line.split("(")[0]
+        shapes = re.findall(r"([a-z0-9]+)\[([0-9,]*)\]", lhs)
+        nbytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        out[found] += nbytes
+        out["count"] += 1
+    return out
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    d = collective_bytes(hlo_text)
+    return sum(v for k, v in d.items() if k != "count")

@@ -1,0 +1,221 @@
+"""Production-mesh PartitionSpecs for params, optimizer state, caches and
+batches (Megatron-style TP over the ``model`` axis, DP over pod x data).
+
+This is the *mesh-level* sharding (training + bulk serving).  The
+instance-level transformable sharding lives in ``core.instance``; §Perf
+also explores a "TP1-mode" decode sharding (batch over the model axis),
+which is the paper's thesis applied at pod scale.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.padding import PaddingPlan
+from repro.paged.pool import PagedState
+
+MODEL = "model"
+
+
+def _leaf_pspec(path: str, leaf, cfg: ModelConfig, experts_padded: int,
+                fsdp: bool, data_size: int, expert_mode: str) -> P:
+    ndim = leaf.ndim
+
+    def build(model_dim: Optional[int], extra: Dict[int, Any] = {}) -> P:
+        spec: list = [None] * ndim
+        if model_dim is not None:
+            spec[model_dim] = MODEL
+        for i, ax in extra.items():
+            spec[i] = ax
+        if fsdp and ndim >= 2:
+            # shard the other of the last two dims over data when divisible
+            for j in (ndim - 1, ndim - 2):
+                if spec[j] is None and leaf.shape[j] % data_size == 0 \
+                        and leaf.shape[j] >= data_size:
+                    spec[j] = "data"
+                    break
+        return P(*spec)
+
+    name = path.split("/")[-1]
+    # MoE expert tensors: (.., Ep, d, ncol) / (.., Ep, ffp, d)
+    is_expert = (experts_padded > 0 and ndim >= 3
+                 and leaf.shape[ndim - 3] == experts_padded
+                 and name in ("wi", "wo"))
+
+    if name == "router":
+        if expert_mode == "tp":
+            return build(None)               # replicated router
+        return build(ndim - 1)               # (.., d, Ep): experts split
+    if is_expert:
+        if expert_mode == "tp":
+            # shard each expert's d_ff over model; experts unsharded —
+            # with block-local dispatch this keeps routing collective-free
+            # (§Perf P2 iteration 5)
+            inner = ndim - 1 if name == "wi" else ndim - 2
+            spec2: list = [None] * ndim
+            spec2[inner] = MODEL
+            return P(*spec2)
+        if expert_mode == "2d":
+            # experts over data (EP), expert-internal d_ff TP over model —
+            # required to fit very large MoE (llama4-maverick) in HBM
+            inner = ndim - 1 if name == "wi" else ndim - 2
+            spec: list = [None] * ndim
+            spec[ndim - 3] = "data"
+            spec[inner] = MODEL
+            return P(*spec)
+        return build(None, {ndim - 3: MODEL})
+    if name in ("wq", "wk", "wv", "w_in", "w_og", "w_zifo", "wi",
+                "lm_head"):
+        return build(ndim - 1)               # column-sharded
+    if name in ("wo", "w_out", "embed"):
+        return build(ndim - 2)               # row-sharded / vocab rows
+    if fsdp and ndim >= 2:
+        return build(None)
+    return P()
+
+
+def decide_expert_mode(cfg: ModelConfig, plan: Optional[PaddingPlan],
+                       data_size: int) -> str:
+    ep = plan.experts_padded if plan is not None else (
+        cfg.moe.num_experts if cfg.moe else 0)
+    if not ep:
+        return "none"
+    n_moe = sum(1 for k in cfg.pattern if k == "moe")
+    ffp = plan.d_ff_padded if plan else cfg.d_ff
+    total = n_moe * ep * 3 * cfg.d_model * ffp * 2
+    return "2d" if (ep % data_size == 0 and total / 16 > 8e9) else "model"
+
+
+def moe_hint_specs(expert_mode: str, data_size: int = 16):
+    # Sharding hints for the blocked MoE dispatch buffer (nb, Ep, cap, *)
+    # — see models.blocks.apply_moe_mlp and EXPERIMENTS.md section Perf.
+    # "blocked": routing/cumsum block-local (block axis -> data), expert
+    # GEMM sharded (expert axis -> model): no global coordination.
+    if expert_mode in ("model", "blocked"):
+        return {"moe_blocks": data_size,
+                "moe_buf": P("data", MODEL, None, None),
+                "moe_hidden": P("data", MODEL, None, None)}
+    if expert_mode == "2d":
+        return {"moe_blocks": data_size,
+                "moe_buf": P("data", None, None, None),
+                "moe_hidden": P("data", None, None, MODEL)}
+    if expert_mode == "dp":
+        return {"moe_blocks": data_size,
+                "moe_buf": P("data", None, (MODEL,), None),
+                "moe_hidden": P("data", None, (MODEL,), None)}
+    if expert_mode == "tp":
+        # block-local dispatch (no cross-device routing at all); expert
+        # GEMMs TP-sharded on d_ff
+        return {"moe_blocks": data_size,
+                "moe_buf": P("data", None, None, None),
+                "moe_hidden": P("data", None, None, MODEL)}
+    return {}
+
+
+def param_pspecs(params, cfg: ModelConfig,
+                 plan: Optional[PaddingPlan] = None, *, fsdp: bool = False,
+                 data_size: int = 16, expert_mode: str = "auto"):
+    ep = plan.experts_padded if plan is not None else (
+        cfg.moe.num_experts if cfg.moe else 0)
+    if expert_mode == "auto":
+        em = decide_expert_mode(cfg, plan, data_size)
+        expert_mode = em if em != "none" else "model"
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            out = [walk(v, f"{path}/{i}") for i, v in enumerate(tree)]
+            return tuple(out) if isinstance(tree, tuple) else out
+        return _leaf_pspec(path, tree, cfg, ep, fsdp, data_size,
+                           expert_mode)
+    return walk(params, "")
+
+
+def opt_pspecs(params_pspecs):
+    """AdamWState(step, mu, nu): moments shard like params."""
+    from repro.training.optimizer import AdamWState
+    return AdamWState(P(), params_pspecs, params_pspecs)
+
+
+def batch_pspecs(batch_specs: Dict[str, jax.ShapeDtypeStruct], mesh,
+                 batch_axes: Tuple[str, ...]):
+    """Shard the batch dim over pod+data when divisible, else replicate."""
+    n = 1
+    for a in batch_axes:
+        n *= mesh.shape[a]
+
+    def one(s):
+        if s.shape and s.shape[0] % n == 0 and s.shape[0] >= n:
+            return P(*((batch_axes,) + (None,) * (len(s.shape) - 1)))
+        return P(*((None,) * len(s.shape)))
+    return {k: one(v) for k, v in batch_specs.items()}
+
+
+def cache_pspecs(caches, mesh, batch_axes: Tuple[str, ...],
+                 batch: int, decode_mode: str = "tp"):
+    """Paged pools: pages over data (batch-partitioned pools), kv-head
+    slots over model.  decode_mode="tp1" instead shards pages/batch over
+    (data x model) and replicates heads — the Gyges TP1-mode decode used
+    in §Perf hillclimbing."""
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= mesh.shape[a]
+    page_axes = batch_axes if (batch % n_batch == 0 and batch >= n_batch) \
+        else ()
+    if decode_mode == "tp1":
+        combo = tuple(page_axes) + (MODEL,)
+        total = n_batch * mesh.shape[MODEL]
+        page_axes2 = combo if (batch % total == 0 and batch >= total) \
+            else page_axes
+        head_ax = None
+        page_ax = page_axes2
+    else:
+        head_ax = MODEL
+        page_ax = page_axes
+
+    bspec = page_ax if page_ax else None
+
+    def one(c, bdim):
+        if isinstance(c, PagedState):
+            nd = c.pool.ndim
+            lead = [None] * (nd - 5)
+            return PagedState(
+                pool=P(*lead, bspec, head_ax, None, None, None),
+                page_table=P(*([None] * (c.page_table.ndim - 2)), bspec,
+                             None),
+                seq_lens=P(*([None] * (c.seq_lens.ndim - 1)), bspec),
+                positions=P(*([None] * (c.positions.ndim - 2)), bspec,
+                            None),
+            )
+        if isinstance(c, dict):
+            return {k: one(v, bdim) for k, v in c.items()}
+        if isinstance(c, (list, tuple)):
+            out = [one(v, bdim) for v in c]
+            return tuple(out) if isinstance(c, tuple) else out
+        # recurrent-state leaf: batch lives at dim `bdim` (0 for
+        # remainder-layer caches, 1 for group-stacked / cross_kv)
+        if c.ndim <= bdim:
+            return P()
+        spec = [None] * c.ndim
+        spec[bdim] = bspec
+        return P(*spec)
+
+    out = {}
+    for k, v in caches.items():
+        if k == "rem":
+            out[k] = [one(c, 0) for c in v]
+        else:
+            out[k] = one(v, 1)
+    return out
+
+
+def to_shardings(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))

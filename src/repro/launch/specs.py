@@ -1,0 +1,94 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input shape)
+combination — weak-type-correct, shardable, zero allocation.
+
+``input_specs`` returns the model inputs; ``state_specs`` returns params /
+optimizer / cache specs via ``jax.eval_shape`` so the dry-run never
+materializes a single weight."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.padding import PaddingPlan
+from repro.models import model as M
+from repro.training.optimizer import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def long_context_variant(cfg: ModelConfig) -> ModelConfig:
+    """Sub-quadratic variant for long_500k on full-attention archs:
+    sliding-window attention (window 4096).  Recorded per run; SSM/hybrid
+    archs run natively.  whisper is skipped (DESIGN.md §5)."""
+    from dataclasses import replace
+    if cfg.sub_quadratic:
+        return cfg
+    pattern = tuple("sliding" if k in ("attn",) else k for k in cfg.pattern)
+    # keep MOE blocks but swap their attention to sliding: the block kind
+    # string stays "moe"; window applies via cfg.window in SLIDING only.
+    # For MOE/whisper-style kinds we replace attn->sliding where possible.
+    if cfg.layer_pattern:
+        lp = tuple("sliding" if k == "attn" else k for k in cfg.layer_pattern)
+    else:
+        lp = ()
+    return replace(cfg, attention="sliding", window=4096, layer_pattern=lp)
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k":
+        if cfg.encoder is not None:
+            return False, ("enc-dec audio decoder with 500k generated "
+                           "tokens is semantically void and full-attention"
+                           " (DESIGN.md §5: skip recorded)")
+        return True, ("native sub-quadratic" if cfg.sub_quadratic
+                      else "sliding-window variant (window=4096)")
+    return True, ""
+
+
+def model_inputs(cfg: ModelConfig, shape: ShapeConfig,
+                 dtype=jnp.bfloat16) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": SDS((B, S + 1), jnp.int32)}
+        if cfg.vision is not None:
+            out["patches"] = SDS((B, cfg.vision.num_patches, cfg.d_model),
+                                 dtype)
+        if cfg.encoder is not None:
+            out["frames"] = SDS((B, cfg.encoder.num_frames, cfg.d_model),
+                                dtype)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.vision is not None:
+            # patches occupy the first num_patches positions of S
+            out["tokens"] = SDS((B, S - cfg.vision.num_patches), jnp.int32)
+            out["patches"] = SDS((B, cfg.vision.num_patches, cfg.d_model),
+                                 dtype)
+        if cfg.encoder is not None:
+            out["frames"] = SDS((B, cfg.encoder.num_frames, cfg.d_model),
+                                dtype)
+        return out
+    # decode: one token per sequence with a seq_len-deep cache
+    return {"tokens": SDS((B,), jnp.int32),
+            "positions": SDS((B,), jnp.int32)}
+
+
+def param_specs(cfg: ModelConfig, plan: PaddingPlan):
+    return jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg, plan))
+
+
+def opt_specs(param_sds):
+    opt_init, _ = adamw(1e-3)
+    return jax.eval_shape(opt_init, param_sds)
+
+
+def cache_specs(cfg: ModelConfig, plan: PaddingPlan, shape: ShapeConfig,
+                page_tokens: int = 64):
+    return M.init_decode_caches(cfg, plan, shape.global_batch,
+                                max_seq=shape.seq_len,
+                                page_tokens=page_tokens,
+                                specs_only=True)

@@ -1,0 +1,3 @@
+from repro.models import blocks, layers, model
+from repro.models.model import (decode_step, forward_train,
+                                init_decode_caches, init_params, prefill)

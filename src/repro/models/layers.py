@@ -1,0 +1,472 @@
+"""Core layer math shared by all architectures.
+
+Everything is pure-functional JAX on pytrees of parameters; no framework
+dependencies.  Attention is implemented flash-style (online softmax over KV
+chunks via ``lax.scan``) so 32k-token prefill never materializes an SxS
+score matrix.  All control flow is ``jax.lax`` so every function lowers
+cleanly under jit/pjit with 512-device meshes.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                             # (..., S, 1, hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "swiglu":   # silu-gated
+        return jax.nn.silu(x)
+    if name == "geglu":
+        return jax.nn.gelu(x)
+    return jax.nn.gelu(x)
+
+
+def dense_mlp(x: jax.Array, wi: jax.Array, wo: jax.Array,
+              activation: str) -> jax.Array:
+    """Gated MLP. wi: (d, 2*ff_padded) fused [gate|up] for gated acts, or
+    (d, ff_padded) for plain gelu. wo: (ff_padded, d).
+
+    Padded ff columns of wi are zero and padded rows of wo are zero, so the
+    result equals the unpadded FFN exactly (paper Eq. 2)."""
+    if activation in ("swiglu", "geglu"):
+        gu = x @ wi
+        gate, up = jnp.split(gu, 2, axis=-1)
+        h = _act(activation, gate) * up
+    else:
+        h = _act(activation, x @ wi)
+    return h @ wo
+
+
+# ---------------------------------------------------------------------------
+# Attention (flash-style chunked, GQA, causal / sliding-window / bidirectional)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B, Sq, G, rep, dh), k: (B, Sk, G, dh) -> (B, G, rep, Sq, Sk).
+
+    k stays in its storage dtype (bf16); accumulation is f32 via
+    preferred_element_type — §Perf iteration 3: materializing f32 copies
+    of the whole KV cache tripled the decode memory term."""
+    return jnp.einsum("bqgrd,bkgd->bgrqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def chunked_attention(
+    q: jax.Array,               # (B, Sq, Hq, dh)
+    k: jax.Array,               # (B, Sk, Hkv, dh)
+    v: jax.Array,               # (B, Sk, Hkv, dh)
+    q_positions: jax.Array,     # (B, Sq) global positions of queries
+    kv_positions: jax.Array,    # (B, Sk) global positions of keys
+    kv_valid: Optional[jax.Array] = None,  # (B, Sk) bool validity
+    causal: bool = True,
+    window: int = 0,            # 0 -> unlimited; >0 -> sliding window
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; never forms (Sq, Sk)."""
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    scale = 1.0 / math.sqrt(dh)
+
+    qg = (q.reshape(B, Sq, Hkv, rep, dh) * scale).astype(jnp.float32)
+
+    kv_chunk = min(kv_chunk, Sk)
+    n_chunks = -(-Sk // kv_chunk)
+    pad = n_chunks * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
+        valid = jnp.pad(
+            kv_valid if kv_valid is not None
+            else jnp.ones((B, Sk), dtype=bool),
+            ((0, 0), (0, pad)), constant_values=False)
+    else:
+        valid = (kv_valid if kv_valid is not None
+                 else jnp.ones((B, Sk), dtype=bool))
+
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    pc = kv_positions.reshape(B, n_chunks, kv_chunk).transpose(1, 0, 2)
+    mc = valid.reshape(B, n_chunks, kv_chunk).transpose(1, 0, 2)
+
+    def step(carry, chunk):
+        m, l, acc = carry
+        kj, vj, pj, vmask = chunk
+        s = _gqa_scores(qg, kj)                       # (B,G,rep,Sq,ck)
+        mask = vmask[:, None, None, None, :]
+        if causal:
+            mask = mask & (pj[:, None, None, None, :]
+                           <= q_positions[:, None, None, :, None])
+        if window > 0:
+            mask = mask & (pj[:, None, None, None, :]
+                           > q_positions[:, None, None, :, None] - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, rep, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, rep, Sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc, mc))
+
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, dh)
+    return out.astype(q.dtype)
+
+
+def banded_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    q_positions: jax.Array, kv_positions: jax.Array,
+    window: int, q_chunk: int = 512,
+) -> jax.Array:
+    """Sliding-window attention that only *computes* the band.
+
+    Beyond-paper optimization used in §Perf: for each query chunk, slice the
+    KV band [chunk_start - window, chunk_end) with ``dynamic_slice`` instead
+    of masking the full sequence — FLOPs drop from O(S^2) to O(S * window).
+    Requires q and kv to cover the same contiguous positions (prefill/train).
+    """
+    B, S, Hq, dh = q.shape
+    q_chunk = min(q_chunk, S)
+    n_chunks = -(-S // q_chunk)
+    assert S % q_chunk == 0, "pad seq to q_chunk multiple before calling"
+    band = window + q_chunk
+    # pad kv on the left by `window` so every band slice is in-bounds
+    k_pad = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    v_pad = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    p_pad = jnp.pad(kv_positions, ((0, 0), (window, 0)), constant_values=-1)
+    valid = jnp.pad(jnp.ones((B, S), bool), ((0, 0), (window, 0)),
+                    constant_values=False)
+
+    def one_chunk(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_positions, i * q_chunk, q_chunk,
+                                          axis=1)
+        start = i * q_chunk  # band starts at (global) start - window + window
+        ks = jax.lax.dynamic_slice_in_dim(k_pad, start, band, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v_pad, start, band, axis=1)
+        ps = jax.lax.dynamic_slice_in_dim(p_pad, start, band, axis=1)
+        ms = jax.lax.dynamic_slice_in_dim(valid, start, band, axis=1)
+        return chunked_attention(qs, ks, vs, qp, ps, kv_valid=ms,
+                                 causal=True, window=window,
+                                 kv_chunk=min(1024, band))
+
+    outs = jax.lax.map(one_chunk, jnp.arange(n_chunks))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, dh)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma / Griffin)  [arXiv:2402.19427]
+# ---------------------------------------------------------------------------
+
+_C_RGLRU = 8.0
+
+
+def rglru(x: jax.Array, gate_x: jax.Array, gate_a: jax.Array,
+          a_param: jax.Array, h0: Optional[jax.Array] = None,
+          reset: Optional[jax.Array] = None
+          ) -> Tuple[jax.Array, jax.Array]:
+    """Real-Gated Linear Recurrent Unit over a sequence.
+
+    x, gate_x, gate_a: (B, S, D); a_param: (D,) raw Lambda parameter.
+    Returns (y: (B, S, D), h_last: (B, D)). Uses associative_scan (the
+    recurrence is diagonal-linear) so prefill is O(log S) depth.
+    """
+    B, S, D = x.shape
+    log_a = -_C_RGLRU * jax.nn.softplus(a_param) * jax.nn.sigmoid(
+        gate_a.astype(jnp.float32))                       # (B,S,D) <= 0
+    a = jnp.exp(log_a)
+    gated_x = x.astype(jnp.float32) * jax.nn.sigmoid(gate_x.astype(jnp.float32))
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    if reset is not None:  # at sequence starts, do not normalize history
+        multiplier = jnp.where(reset[..., None], 1.0, multiplier)
+    inp = gated_x * multiplier
+
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0 with a=1*h0
+        inp = inp.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_seq, y = jax.lax.associative_scan(combine, (a, inp), axis=1)
+    return y.astype(x.dtype), y[:, -1, :].astype(x.dtype)
+
+
+def rglru_step(x: jax.Array, gate_x: jax.Array, gate_a: jax.Array,
+               a_param: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. x, gates: (B, D); h: (B, D)."""
+    log_a = -_C_RGLRU * jax.nn.softplus(a_param) * jax.nn.sigmoid(
+        gate_a.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gx = x.astype(jnp.float32) * jax.nn.sigmoid(gate_x.astype(jnp.float32))
+    h_new = a * h.astype(jnp.float32) + mult * gx
+    return h_new.astype(x.dtype), h_new.astype(x.dtype)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal temporal conv. x: (B,S,D), w: (K,D), b: (D,).
+    state: (B, K-1, D) trailing context. Returns (y, new_state)."""
+    K = w.shape[0]
+    B, S, D = x.shape
+    if state is None:
+        state = jnp.zeros((B, K - 1, D), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, D)
+    y = jnp.zeros((B, S, D), jnp.float32)
+    for i in range(K):  # K is tiny (4): unrolled
+        y = y + xp[:, i:i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = (y + b.astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, S:, :] if K > 1 else state
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell)  [arXiv:2405.04517]
+# ---------------------------------------------------------------------------
+
+def mlstm_chunkwise(
+    q: jax.Array, k: jax.Array, v: jax.Array,     # (B, S, H, dh)
+    i_gate: jax.Array, f_gate: jax.Array,         # (B, S, H) raw (pre-act)
+    state: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+    chunk: int = 256,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    """Stabilized chunkwise-parallel mLSTM.
+
+    Returns (h: (B,S,H,dh), (C,n,m)) with C: (B,H,dh,dh), n: (B,H,dh),
+    m: (B,H).  Within a chunk the attention-like parallel form is used;
+    between chunks the matrix memory is carried recurrently.
+    """
+    B, S, H, dh = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "pad sequence to chunk multiple"
+    n_chunks = S // chunk
+    scale = 1.0 / math.sqrt(dh)
+
+    def reshape_c(x):
+        return x.reshape(B, n_chunks, chunk, *x.shape[2:]).transpose(
+            1, 0, 2, *range(3, x.ndim + 1))
+
+    qc, kc, vc = (reshape_c(t.astype(jnp.float32)) for t in (q, k, v))
+    ic = reshape_c(i_gate.astype(jnp.float32))
+    fc = reshape_c(jax.nn.log_sigmoid(f_gate.astype(jnp.float32)))
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), NEG_INF, jnp.float32)
+    else:
+        C0, n0, m0 = (s.astype(jnp.float32) for s in state)
+
+    def step(carry, chunk_in):
+        C, n, m = carry
+        qj, kj, vj, ij, fj = chunk_in      # (B,ck,H,*)
+        # cumulative log forget inside the chunk
+        fcum = jnp.cumsum(fj, axis=1)                       # (B,ck,H)
+        ftot = fcum[:, -1, :]                               # (B,H)
+        # log weight of the carried state for each position t: fcum[t]
+        # intra-chunk weights D[t,s] = sum_{r=s+1..t} f + i_s
+        dmat = (fcum[:, :, None, :] - fcum[:, None, :, :]
+                + ij[:, None, :, :])                        # (B,t,s,H)
+        t_idx = jnp.arange(chunk)
+        causal = t_idx[:, None] >= t_idx[None, :]
+        dmat = jnp.where(causal[None, :, :, None], dmat, NEG_INF)
+        # stabilizers
+        m_inter = m[:, None, :] + fcum                      # (B,ck,H)
+        m_intra = jnp.max(dmat, axis=2)                     # (B,ck,H)
+        m_new_t = jnp.maximum(m_inter, m_intra)             # per-position
+        qjs = qj * scale
+        # inter (carried-state) contribution
+        w_inter = jnp.exp(m_inter - m_new_t)                # (B,ck,H)
+        h_inter = jnp.einsum("bthd,bhde->bthe", qjs, C) * w_inter[..., None]
+        qn = jnp.einsum("bthd,bhd->bth", qjs, n) * w_inter
+        # intra (within-chunk) contribution
+        wk = jnp.exp(dmat - m_new_t[:, :, None, :])         # (B,t,s,H)
+        qk = jnp.einsum("bthd,bshd->btsh", qjs, kj)
+        h_num = h_inter + jnp.einsum("btsh,btsh,bshd->bthd", wk, qk, vj)
+        denom = qn + jnp.einsum("btsh,btsh->bth", wk, qk)
+        h_out = h_num / jnp.maximum(jnp.abs(denom), 1.0)[..., None]
+        # ---- state update to end of chunk --------------------------------
+        m_end = jnp.maximum(m + ftot, jnp.max(
+            ftot[:, None, :] - fcum + ij, axis=1))          # (B,H)
+        decay_state = jnp.exp(m + ftot - m_end)             # (B,H)
+        wgt = jnp.exp(ftot[:, None, :] - fcum + ij - m_end[:, None, :])
+        C_new = C * decay_state[..., None, None] + jnp.einsum(
+            "bsh,bshd,bshe->bhde", wgt, kj, vj)
+        n_new = n * decay_state[..., None] + jnp.einsum(
+            "bsh,bshd->bhd", wgt, kj)
+        return (C_new, n_new, m_end), h_out
+
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return h.astype(q.dtype), (C, n, m)
+
+
+def mlstm_step(q: jax.Array, k: jax.Array, v: jax.Array,
+               i_gate: jax.Array, f_gate: jax.Array,
+               state: Tuple[jax.Array, jax.Array, jax.Array]
+               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    """Single-token recurrent mLSTM update. q,k,v: (B,H,dh); gates: (B,H)."""
+    C, n, m = (s.astype(jnp.float32) for s in state)
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    i = i_gate.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, i)
+    fw = jnp.exp(logf + m - m_new)
+    iw = jnp.exp(i - m_new)
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    C_new = C * fw[..., None, None] + iw[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n_new = n * fw[..., None] + iw[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf * scale, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf * scale, n_new)),
+                      1.0)
+    h = num / den[..., None]
+    return h.astype(q.dtype), (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory cell with exponential gating; simplified: diagonal
+# recurrent weights — documented in DESIGN.md)
+# ---------------------------------------------------------------------------
+
+def slstm_seq(zifo: jax.Array, r_diag: jax.Array,
+              state: Optional[Tuple[jax.Array, ...]] = None
+              ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """zifo: (B, S, 4, D) pre-activations for z,i,f,o; r_diag: (4, D)
+    diagonal recurrent weights applied to previous hidden state.
+    Returns (h: (B,S,D), state=(c,n,m,h))."""
+    B, S, _, D = zifo.shape
+    if state is None:
+        c0 = jnp.zeros((B, D), jnp.float32)
+        n0 = jnp.ones((B, D), jnp.float32)
+        m0 = jnp.zeros((B, D), jnp.float32)
+        h0 = jnp.zeros((B, D), jnp.float32)
+    else:
+        c0, n0, m0, h0 = (s.astype(jnp.float32) for s in state)
+
+    zs = zifo.transpose(1, 0, 2, 3).astype(jnp.float32)  # (S,B,4,D)
+    r = r_diag.astype(jnp.float32)
+
+    def step(carry, zt):
+        c, n, m, h = carry
+        z_in = zt[:, 0] + r[0] * h
+        i_in = zt[:, 1] + r[1] * h
+        f_in = zt[:, 2] + r[2] * h
+        o_in = zt[:, 3] + r[3] * h
+        z = jnp.tanh(z_in)
+        logf = jax.nn.log_sigmoid(f_in)
+        m_new = jnp.maximum(logf + m, i_in)
+        i_w = jnp.exp(i_in - m_new)
+        f_w = jnp.exp(logf + m - m_new)
+        c_new = f_w * c + i_w * z
+        n_new = f_w * n + i_w
+        h_new = jax.nn.sigmoid(o_in) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (c, n, m, h), hs = jax.lax.scan(step, (c0, n0, m0, h0), zs)
+    return hs.transpose(1, 0, 2).astype(zifo.dtype), (c, n, m, h)
+
+
+def paged_decode_attention(
+    q: jax.Array,               # (B, Hq, dh) one query token per sequence
+    pages: jax.Array,           # (B, n, kvs, 2, P, dh) slot-partitioned view
+    kv_positions: jax.Array,    # (B, n*P) global positions (-1 = empty)
+    q_positions: jax.Array,     # (B,)
+    window: int = 0,
+) -> jax.Array:
+    """Decode attention walking the header-centric page pool *in place*
+    (§Perf iteration 4) — the jnp mirror of the Pallas paged_attention
+    kernel.  No token-major transpose, no materialized (B, S, kvs, dh)
+    K/V copies: each page is dynamic-sliced, used, and discarded, so the
+    bytes term is one pass over the cache."""
+    B, n, kvs, _, P, dh = pages.shape
+    Hq = q.shape[1]
+    rep = Hq // kvs
+    scale = 1.0 / math.sqrt(dh)
+    qg = (q.reshape(B, kvs, rep, dh) * scale).astype(jnp.float32)
+    pos = kv_positions.reshape(B, n, P)
+
+    def body(j, carry):
+        m, l, acc = carry
+        pg = jax.lax.dynamic_slice_in_dim(pages, j, 1, axis=1)[:, 0]
+        pj = jax.lax.dynamic_slice_in_dim(pos, j, 1, axis=1)[:, 0]
+        kj = pg[:, :, 0]                              # (B, kvs, P, dh)
+        vj = pg[:, :, 1]
+        s = jnp.einsum("bgrd,bgpd->bgrp", qg, kj,
+                       preferred_element_type=jnp.float32)
+        mask = (pj >= 0) & (pj <= q_positions[:, None])
+        if window > 0:
+            mask = mask & (pj > q_positions[:, None] - window)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bgrp,bgpd->bgrd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    m0 = jnp.full((B, kvs, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, kvs, rep), jnp.float32)
+    a0 = jnp.zeros((B, kvs, rep, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(B, Hq, dh).astype(q.dtype)

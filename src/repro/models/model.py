@@ -1,0 +1,418 @@
+"""Model assembly: embedding -> scanned block stack -> head.
+
+The layer stack is executed with ``lax.scan`` over *pattern groups* so the
+compiled HLO contains each distinct layer kind once regardless of depth
+(essential for 48-layer 400B dry-run compiles).  A pattern group is one
+repetition of ``cfg.layer_pattern`` (or a single layer for homogeneous
+stacks); remainder layers (e.g. recurrentgemma's 38 = 12*3 + 2) are
+unrolled explicitly.
+
+Entry points:
+    init_params(rng, cfg, plan)
+    forward_train(params, cfg, plan, batch)      -> (logits, aux)
+    init_decode_caches(cfg, plan, batch, max_seq, ...)
+    prefill(params, cfg, plan, batch, caches)    -> (logits_last, caches)
+    decode_step(params, cfg, plan, caches, tokens, positions)
+                                                 -> (logits, caches)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, MLSTM, MOE, RGLRU, SLIDING, SLSTM,
+                                ModelConfig)
+from repro.core.padding import PaddingPlan
+from repro.models import blocks as B
+from repro.models import layers as Lyr
+from repro.paged import pool as pp
+
+PAGE_TOKENS = 64  # tokens per KV page (page bytes scale with kv_slots*dh)
+
+
+# ---------------------------------------------------------------------------
+# Pattern-group bookkeeping
+# ---------------------------------------------------------------------------
+
+def pattern_unit(cfg: ModelConfig) -> Tuple[str, ...]:
+    return cfg.layer_pattern if cfg.layer_pattern else cfg.pattern[:1]
+
+
+def group_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    """(#scanned groups, #remainder layers)."""
+    unit = pattern_unit(cfg)
+    return cfg.num_layers // len(unit), cfg.num_layers % len(unit)
+
+
+def _tree_index(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def _tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _run_groups(body, carry, xs, unroll: bool):
+    """lax.scan over layer groups, or a Python loop when ``unroll`` — the
+    unrolled form is used by the roofline dry-run variants because XLA's
+    cost_analysis visits a while body once regardless of trip count."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    G = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for g in range(G):
+        carry, y = body(carry, _tree_index(xs, g))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        return carry, _tree_stack(ys)
+    return carry, None
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: ModelConfig, plan: PaddingPlan) -> Dict[str, Any]:
+    unit = pattern_unit(cfg)
+    G, R = group_counts(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(rng, 8)
+
+    embed = (jax.random.normal(keys[0], (plan.vocab_padded, cfg.d_model),
+                               jnp.float32) * 0.02).astype(dt)
+    vmask = (jnp.arange(plan.vocab_padded) < plan.vocab).astype(dt)
+    embed = embed * vmask[:, None]
+
+    def init_stacked(rng_k, kind):
+        ks = jax.random.split(rng_k, G)
+        return jax.vmap(lambda k: B.init_block(k, kind, cfg, plan))(ks)
+
+    bkeys = jax.random.split(keys[1], len(unit))
+    blocks = [init_stacked(bkeys[i], kind) for i, kind in enumerate(unit)]
+
+    rkeys = jax.random.split(keys[2], max(R, 1))
+    rem = [B.init_block(rkeys[i], unit[i], cfg, plan) for i in range(R)]
+
+    params: Dict[str, Any] = {
+        "embed": embed,
+        "blocks": blocks,
+        "rem": rem,
+        "final_ln": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        head = (jax.random.normal(keys[3], (cfg.d_model, plan.vocab_padded),
+                                  jnp.float32) * 0.02).astype(dt)
+        params["lm_head"] = head * vmask[None, :]
+
+    if cfg.vision is not None:
+        params["vision_proj"] = B._dense(keys[4], cfg.d_model,
+                                         (cfg.d_model, cfg.d_model), dt)
+    if cfg.encoder is not None:
+        ekeys = jax.random.split(keys[5], cfg.encoder.num_layers + 2)
+        params["encoder"] = {
+            "blocks": [jax.vmap(
+                lambda k: B.init_block(k, ATTN, cfg, plan))(
+                    jax.random.split(ekeys[0], cfg.encoder.num_layers))],
+            "final_ln": jnp.zeros((cfg.d_model,), dt),
+            "frame_proj": B._dense(ekeys[1], cfg.d_model,
+                                   (cfg.d_model, cfg.d_model), dt),
+        }
+        # cross-attention params per decoder layer (stacked over G)
+        xkeys = jax.random.split(keys[6], G)
+        params["cross"] = jax.vmap(
+            lambda k: {"ln_x": jnp.zeros((cfg.d_model,), dt),
+                       **B.init_attention(k, cfg, plan)})(xkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head helpers
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x: (B,S,d), positions: (B,S)). For VLMs, patch embeddings
+    (stub frontend output) are prepended to token embeddings."""
+    tok = batch["tokens"]
+    x = params["embed"][tok]
+    if cfg.vision is not None and "patches" in batch:
+        img = batch["patches"].astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([img, x], axis=1)
+    Btot, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :],
+                                 (Btot, S))
+    return x, positions
+
+
+def lm_logits(params, cfg: ModelConfig, plan: PaddingPlan, x: jax.Array
+              ) -> jax.Array:
+    x = Lyr.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    mask = jnp.where(jnp.arange(plan.vocab_padded) < plan.vocab, 0.0,
+                     Lyr.NEG_INF)
+    return logits.astype(jnp.float32) + mask[None, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper) — bidirectional over stub frame embeddings
+# ---------------------------------------------------------------------------
+
+def run_encoder(params, cfg: ModelConfig, plan: PaddingPlan,
+                frames: jax.Array) -> jax.Array:
+    enc = params["encoder"]
+    x = frames.astype(jnp.dtype(cfg.dtype)) @ enc["frame_proj"]
+    Bt, F, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None, :],
+                                 (Bt, F))
+
+    def body(xc, gp):
+        h = Lyr.rmsnorm(xc, gp["ln1"], cfg.norm_eps)
+        q, k, v = B._project_qkv(gp["attn"], h, cfg, plan, positions)
+        attn = Lyr.chunked_attention(q, k, v, positions, positions,
+                                     causal=False)
+        xc = xc + attn.reshape(Bt, F, -1) @ gp["attn"]["wo"]
+        h = Lyr.rmsnorm(xc, gp["ln2"], cfg.norm_eps)
+        xc = xc + B.apply_mlp(gp["mlp"], h, cfg)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, enc["blocks"][0])
+    return Lyr.rmsnorm(x, enc["final_ln"], cfg.norm_eps)
+
+
+def cross_attention(p, x: jax.Array, cfg: ModelConfig, plan: PaddingPlan,
+                    mem_k: jax.Array, mem_v: jax.Array) -> jax.Array:
+    """x: (B,S,d); mem_k/v: (B,F,kv_slots,dh) precomputed from encoder."""
+    Bt, S, d = x.shape
+    dh = cfg.resolved_head_dim
+    h = Lyr.rmsnorm(x, p["ln_x"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(Bt, S, plan.q_heads_padded, dh)
+    qpos = jnp.zeros((Bt, S), jnp.int32)
+    kpos = jnp.zeros((Bt, mem_k.shape[1]), jnp.int32)
+    attn = Lyr.chunked_attention(q, mem_k, mem_v, qpos, kpos, causal=False)
+    return attn.reshape(Bt, S, -1) @ p["wo"]
+
+
+def encode_cross_kv(params, cfg: ModelConfig, plan: PaddingPlan,
+                    enc_out: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-decoder-layer cross K/V, stacked over groups: (G,B,F,kvs,dh)."""
+    dh = cfg.resolved_head_dim
+
+    def per_layer(cp):
+        k = (enc_out @ cp["wk"]).reshape(*enc_out.shape[:2], plan.kv_padded, dh)
+        v = (enc_out @ cp["wv"]).reshape(*enc_out.shape[:2], plan.kv_padded, dh)
+        if plan.kv_replication > 1:
+            k = jnp.repeat(k, plan.kv_replication, axis=2)
+            v = jnp.repeat(v, plan.kv_replication, axis=2)
+        return k, v
+
+    return jax.lax.map(per_layer, params["cross"])
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / teacher forcing)
+# ---------------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, plan: PaddingPlan,
+                  batch: Dict[str, jax.Array], banded: bool = False,
+                  unroll: bool = False, remat: bool = True
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,Vp), aux_loss scalar).
+
+    remat: activation checkpointing at layer-group granularity (standard
+    for training at 4k x 256 batch; without it the dry-run memory analysis
+    shows multi-TB activation footprints)."""
+    unit = pattern_unit(cfg)
+    G, R = group_counts(cfg)
+    x, positions = embed_inputs(params, cfg, batch)
+
+    cross_kv = None
+    if cfg.encoder is not None:
+        enc_out = run_encoder(params, cfg, plan, batch["frames"])
+        cross_kv = encode_cross_kv(params, cfg, plan, enc_out)
+
+    def group_body(carry, xs):
+        xc, aux = carry
+        gparams = xs[:len(unit)]
+        for i, kind in enumerate(unit):
+            fn = partial(B.apply_block_seq, unit[i], cfg=cfg, plan=plan,
+                         positions=positions, banded=banded)
+            blk = (jax.checkpoint(lambda p_, x_: B.apply_block_seq(
+                       unit[i], p_, cfg, plan, x_, positions,
+                       banded=banded), static_argnums=())
+                   if remat else
+                   (lambda p_, x_: B.apply_block_seq(
+                       unit[i], p_, cfg, plan, x_, positions,
+                       banded=banded)))
+            xc, ex = blk(gparams[i], xc)
+            if "aux" in ex:
+                aux = aux + ex["aux"]
+        if cfg.encoder is not None:
+            cp, (ck, cv) = xs[len(unit)], xs[len(unit) + 1]
+            xc = xc + cross_attention(cp, xc, cfg, plan, ck, cv)
+        return (xc, aux), None
+
+    xs: Tuple = tuple(params["blocks"])
+    if cfg.encoder is not None:
+        xs = xs + (params["cross"], cross_kv)
+    (x, aux), _ = _run_groups(group_body, (x, jnp.float32(0.0)), xs,
+                              unroll)
+
+    for i in range(R):
+        x, ex = B.apply_block_seq(unit[i], params["rem"][i], cfg, plan, x,
+                                  positions, banded=banded)
+        if "aux" in ex:
+            aux = aux + ex["aux"]
+
+    return lm_logits(params, cfg, plan, x), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def init_decode_caches(cfg: ModelConfig, plan: PaddingPlan, batch: int,
+                       max_seq: int, page_tokens: int = PAGE_TOKENS,
+                       layout: str = "header_centric",
+                       specs_only: bool = False) -> Dict[str, Any]:
+    """Caches mirror the params structure: one stacked cache per pattern
+    position (+ per-remainder-layer caches + cross-attn memory)."""
+    unit = pattern_unit(cfg)
+    G, R = group_counts(cfg)
+
+    def one(kind, stacked: bool):
+        c = B.init_block_cache(kind, cfg, plan, batch, max_seq, page_tokens,
+                               layout, specs_only=specs_only)
+        if not stacked:
+            return c
+        if specs_only:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((G,) + s.shape, s.dtype), c)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (G,) + a.shape).copy(), c)
+
+    caches: Dict[str, Any] = {
+        "groups": [one(kind, True) for kind in unit],
+        "rem": [one(unit[i], False) for i in range(R)],
+    }
+    if cfg.encoder is not None:
+        F = cfg.encoder.num_frames
+        shp = (G, batch, F, plan.kv_slots, cfg.resolved_head_dim)
+        dt = jnp.dtype(cfg.dtype)
+        mk = (jax.ShapeDtypeStruct if specs_only
+              else (lambda s, d: jnp.zeros(s, d)))
+        caches["cross_kv"] = (mk(shp, dt), mk(shp, dt))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Prefill: run the prompt, fill the caches
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, plan: PaddingPlan,
+            batch: Dict[str, jax.Array], caches: Dict[str, Any],
+            layout: str = "header_centric", banded: bool = False,
+            unroll: bool = False) -> Tuple[jax.Array, Dict[str, Any]]:
+    unit = pattern_unit(cfg)
+    G, R = group_counts(cfg)
+    x, positions = embed_inputs(params, cfg, batch)
+
+    if cfg.encoder is not None:
+        enc_out = run_encoder(params, cfg, plan, batch["frames"])
+        caches = dict(caches)
+        caches["cross_kv"] = encode_cross_kv(params, cfg, plan, enc_out)
+
+    def group_body(x_carry, xs):
+        xc = x_carry
+        gparams = xs[:len(unit)]
+        gcaches = list(xs[len(unit):len(unit) * 2])
+        for i, kind in enumerate(unit):
+            if kind in (ATTN, SLIDING, MOE):
+                xc, ex = B.apply_block_seq(kind, gparams[i], cfg, plan, xc,
+                                           positions, banded=banded,
+                                           want_kv=True)
+                k, v = ex["kv"]
+                gcaches[i] = pp.write_prefill(gcaches[i], k, v, layout)
+            else:
+                xc, ex = B.apply_block_seq(kind, gparams[i], cfg, plan, xc,
+                                           positions)
+                gcaches[i] = ex["state"]
+        if cfg.encoder is not None:
+            cp, (ck, cv) = xs[-2], xs[-1]
+            xc = xc + cross_attention(cp, xc, cfg, plan, ck, cv)
+        return xc, tuple(gcaches)
+
+    xs: Tuple = tuple(params["blocks"]) + tuple(caches["groups"])
+    if cfg.encoder is not None:
+        xs = xs + (params["cross"], caches["cross_kv"])
+    x, new_group_caches = _run_groups(group_body, x, xs, unroll)
+
+    new_rem = []
+    for i in range(R):
+        kind = unit[i]
+        if kind in (ATTN, SLIDING, MOE):
+            x, ex = B.apply_block_seq(kind, params["rem"][i], cfg, plan, x,
+                                      positions, banded=banded, want_kv=True)
+            k, v = ex["kv"]
+            new_rem.append(pp.write_prefill(caches["rem"][i], k, v, layout))
+        else:
+            x, ex = B.apply_block_seq(kind, params["rem"][i], cfg, plan, x,
+                                      positions)
+            new_rem.append(ex["state"])
+
+    out = {"groups": list(new_group_caches), "rem": new_rem}
+    if cfg.encoder is not None:
+        out["cross_kv"] = caches["cross_kv"]
+    logits = lm_logits(params, cfg, plan, x[:, -1:, :])
+    return logits, out
+
+
+# ---------------------------------------------------------------------------
+# Decode step: one token for every sequence in the batch
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, plan: PaddingPlan,
+                caches: Dict[str, Any], tokens: jax.Array,
+                positions: jax.Array, layout: str = "header_centric",
+                unroll: bool = False, identity_pages: bool = False
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: (B,) int32; positions: (B,) global positions."""
+    unit = pattern_unit(cfg)
+    G, R = group_counts(cfg)
+    x = params["embed"][tokens][:, None, :]          # (B,1,d)
+    pos2 = positions[:, None]
+
+    def group_body(xc, xs):
+        gparams = xs[:len(unit)]
+        gcaches = list(xs[len(unit):len(unit) * 2])
+        for i, kind in enumerate(unit):
+            xc, gcaches[i] = B.apply_block_decode(
+                kind, gparams[i], cfg, plan, xc, pos2, gcaches[i], layout,
+                identity_pages=identity_pages)
+        if cfg.encoder is not None:
+            cp, (ck, cv) = xs[-2], xs[-1]
+            xc = xc + cross_attention(cp, xc, cfg, plan, ck, cv)
+        return xc, tuple(gcaches)
+
+    xs: Tuple = tuple(params["blocks"]) + tuple(caches["groups"])
+    if cfg.encoder is not None:
+        xs = xs + (params["cross"], caches["cross_kv"])
+    x, new_group_caches = _run_groups(group_body, x, xs, unroll)
+
+    new_rem = []
+    for i in range(R):
+        x, c = B.apply_block_decode(unit[i], params["rem"][i], cfg, plan, x,
+                                    pos2, caches["rem"][i], layout,
+                                    identity_pages=identity_pages)
+        new_rem.append(c)
+
+    out = {"groups": list(new_group_caches), "rem": new_rem}
+    if cfg.encoder is not None:
+        out["cross_kv"] = caches["cross_kv"]
+    logits = lm_logits(params, cfg, plan, x)[:, 0, :]
+    return logits, out

@@ -1,0 +1,40 @@
+"""Optional sharding hints for model internals (contextvar-scoped).
+
+Model code is mesh-agnostic; the launcher can scope hints so that
+intermediate tensors with no operand-derivable sharding (notably the MoE
+dispatch buffer) get explicit ``with_sharding_constraint`` annotations.
+Discovered via the roofline (§Perf): without a hint, GSPMD partially
+replicates the expert GEMM on 256 devices.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+from jax.sharding import PartitionSpec as P
+
+_HINTS: contextvars.ContextVar[dict] = contextvars.ContextVar(
+    "shard_hints", default={})
+
+
+@contextlib.contextmanager
+def hints(**kw):
+    tok = _HINTS.set(dict(_HINTS.get(), **kw))
+    try:
+        yield
+    finally:
+        _HINTS.reset(tok)
+
+
+def get(name: str):
+    return _HINTS.get().get(name)
+
+
+def constrain(x, name: str):
+    """Apply with_sharding_constraint if a hint named ``name`` is set."""
+    spec = get(name)
+    if spec is None:
+        return x
+    import jax
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,5 @@
+from repro.paged.allocator import OutOfPages, PageAllocator
+from repro.paged.layout import (CANONICAL, LAYOUTS, kv_stride_order,
+                                pool_shape, to_layout)
+from repro.paged.pool import (PagedState, append_token, gather_kv,
+                              make_state, write_prefill)

@@ -1,0 +1,84 @@
+"""KV-cache layouts (paper §4.1, Table 2).
+
+A layout is the axis order of the page-pool array over the logical axes
+
+    block  — page index in the pool
+    head   — kv head (after padding/replication: ``kv_slots``)
+    kv     — K vs V (size 2)
+    token  — slot within a page (``page_tokens``)
+
+with ``head_dim`` always minor-most (lane-aligned).  The three layouts the
+paper compares:
+
+    raw             [K/V, Block, Token, Header]   (mainstream engines)
+    page_friendly   [Block, K/V, Token, Header]   (+ no shift on append)
+    header_centric  [Block, Header, K/V, Token]   (+ O(1) trim on transform)
+
+``kv_stride_order()`` maps between any two layouts so the attention kernel
+can consume a canonical order regardless of the storage layout — this is
+the paper's ``permute(*stride_order)`` trick, which keeps kernels unchanged
+when the storage layout changes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+AXES = ("block", "head", "kv", "token")  # head_dim implicit minor-most
+
+LAYOUTS: Dict[str, Tuple[str, ...]] = {
+    "raw": ("kv", "block", "token", "head"),
+    "page_friendly": ("block", "kv", "token", "head"),
+    "header_centric": ("block", "head", "kv", "token"),
+}
+
+# canonical order used by the reference attention math
+CANONICAL = "header_centric"
+
+
+def pool_shape(layout: str, num_pages: int, kv_slots: int, page_tokens: int,
+               head_dim: int) -> Tuple[int, ...]:
+    sizes = {"block": num_pages, "head": kv_slots, "kv": 2,
+             "token": page_tokens}
+    return tuple(sizes[a] for a in LAYOUTS[layout]) + (head_dim,)
+
+
+def kv_stride_order(src: str, dst: str) -> Tuple[int, ...]:
+    """Permutation p such that ``array.transpose(*p, 4)`` re-expresses a
+    ``src``-layout pool in ``dst`` layout (head_dim stays last)."""
+    s, d = LAYOUTS[src], LAYOUTS[dst]
+    return tuple(s.index(a) for a in d)
+
+
+def to_layout(pool: jax.Array, src: str, dst: str) -> jax.Array:
+    if src == dst:
+        return pool
+    perm = kv_stride_order(src, dst) + (4,)
+    return pool.transpose(*perm)
+
+
+def block_axis(layout: str) -> int:
+    return LAYOUTS[layout].index("block")
+
+
+def contiguous_segments_per_block(layout: str, kv_slots: int,
+                                  page_tokens: int, tp: int) -> int:
+    """How many *contiguous* memory segments one block splits into when its
+    kv heads are repartitioned across ``tp`` workers (paper Fig. 5).
+
+    header_centric: the heads for one worker are adjacent => ``tp`` segments.
+    page_friendly / raw: heads are minor to tokens => every (kv, token) row
+    fragments => ``2 * page_tokens`` segments (times 1 per destination
+    beyond the head split granularity).
+    """
+    order = LAYOUTS[layout]
+    before_head = order[: order.index("head")]
+    n = 1
+    sizes = {"block": 1, "kv": 2, "token": page_tokens}
+    for a in before_head:
+        if a != "block":
+            n *= sizes[a]
+    # one segment per destination worker per interleaving row
+    return n * tp

@@ -1,0 +1,176 @@
+"""Device-side paged KV pool operations (pure JAX, layout-aware).
+
+The pool is one array per layer whose axis order is given by the layout
+(see ``repro.paged.layout``).  All ops below work in the *canonical*
+(header-centric) view and transpose at the boundary, exactly the paper's
+``permute(*kv_stride_order())`` trick: kernels never change when the
+storage layout changes.
+
+The cache is a ring buffer over ``capacity = max_pages_per_seq *
+page_tokens`` token slots: full-attention caches never wrap (capacity >=
+max seq len); sliding-window caches set capacity = window so memory stays
+O(window).  ``positions`` records each slot's global position for masking.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.paged import layout as L
+
+
+class PagedState(NamedTuple):
+    """Per-layer paged KV cache (pytree).
+
+    pool: layout-ordered page pool; canonical view is
+          (num_pages, kv_slots, 2, page_tokens, head_dim)
+    page_table: (B, max_pages_per_seq) int32 pool slot per logical page
+    seq_lens: (B,) int32 tokens written so far (global, may exceed capacity)
+    positions: (B, capacity) int32 global position stored in each slot (-1
+          = empty)
+    """
+    pool: jax.Array
+    page_table: jax.Array
+    seq_lens: jax.Array
+    positions: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.positions.shape[1]
+
+
+def make_state(num_pages: int, kv_slots: int, page_tokens: int,
+               head_dim: int, batch: int, max_pages_per_seq: int,
+               dtype=jnp.bfloat16, storage_layout: str = L.CANONICAL
+               ) -> PagedState:
+    pool = jnp.zeros(L.pool_shape(storage_layout, num_pages, kv_slots,
+                                  page_tokens, head_dim), dtype)
+    # default identity mapping: seq b owns pages [b*mps, (b+1)*mps)
+    pt = (jnp.arange(batch)[:, None] * max_pages_per_seq
+          + jnp.arange(max_pages_per_seq)[None, :]).astype(jnp.int32)
+    pos = jnp.full((batch, max_pages_per_seq * page_tokens), -1, jnp.int32)
+    return PagedState(pool, pt, jnp.zeros((batch,), jnp.int32), pos)
+
+
+def state_specs(num_pages: int, kv_slots: int, page_tokens: int,
+                head_dim: int, batch: int, max_pages_per_seq: int,
+                dtype=jnp.bfloat16, storage_layout: str = L.CANONICAL,
+                prefix: Tuple[int, ...] = ()) -> PagedState:
+    """ShapeDtypeStruct stand-ins (dry-run; no allocation). ``prefix`` adds
+    leading dims (e.g. the layer-group axis for scan-stacked caches)."""
+    sds = jax.ShapeDtypeStruct
+    return PagedState(
+        pool=sds(prefix + L.pool_shape(storage_layout, num_pages, kv_slots,
+                                       page_tokens, head_dim), dtype),
+        page_table=sds(prefix + (batch, max_pages_per_seq), jnp.int32),
+        seq_lens=sds(prefix + (batch,), jnp.int32),
+        positions=sds(prefix + (batch, max_pages_per_seq * page_tokens),
+                      jnp.int32),
+    )
+
+
+def canonical(pool: jax.Array, storage_layout: str) -> jax.Array:
+    return L.to_layout(pool, storage_layout, L.CANONICAL)
+
+
+def from_canonical(pool_c: jax.Array, storage_layout: str) -> jax.Array:
+    return L.to_layout(pool_c, L.CANONICAL, storage_layout)
+
+
+def write_prefill(state: PagedState, k: jax.Array, v: jax.Array,
+                  storage_layout: str = L.CANONICAL) -> PagedState:
+    """Write a full prompt's K/V. k, v: (B, S, kv_slots, head_dim).
+
+    For ring caches (capacity < S) only the trailing ``capacity`` tokens
+    are kept. S (or capacity) must be a multiple of page_tokens."""
+    pool_c = canonical(state.pool, storage_layout)
+    NP, kvs, _, P, dh = pool_c.shape
+    B, S, _, _ = k.shape
+    cap = state.capacity
+    if S > cap:
+        k, v = k[:, S - cap:], v[:, S - cap:]
+        pos_vals = jnp.arange(S - cap, S, dtype=jnp.int32)
+        # ring offset: token with global pos p lives at slot p % cap
+        roll = (-(S % cap)) % cap
+        k = jnp.roll(k, roll, axis=1)
+        v = jnp.roll(v, roll, axis=1)
+        pos_vals = jnp.roll(pos_vals, roll)
+        Sw = cap
+    else:
+        pos_vals = jnp.concatenate([
+            jnp.arange(S, dtype=jnp.int32),
+            jnp.full((cap - S,), -1, jnp.int32)])
+        k = jnp.pad(k, ((0, 0), (0, cap - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, cap - S), (0, 0), (0, 0)))
+        Sw = cap
+    n = Sw // P
+    kv = jnp.stack([k, v], axis=2)                    # (B, Sw, 2, kvs, dh)
+    kv = kv.reshape(B, n, P, 2, kvs, dh).transpose(0, 1, 4, 3, 2, 5)
+    idx = state.page_table[:, :n].reshape(-1)
+    pool_c = pool_c.at[idx].set(kv.reshape(B * n, kvs, 2, P, dh))
+    positions = jnp.broadcast_to(pos_vals[None, :], (B, cap))
+    return PagedState(from_canonical(pool_c, storage_layout),
+                      state.page_table,
+                      jnp.full_like(state.seq_lens, S), positions)
+
+
+def append_token(state: PagedState, k: jax.Array, v: jax.Array,
+                 storage_layout: str = L.CANONICAL,
+                 identity_pages: bool = False) -> PagedState:
+    """Append one token per sequence. k, v: (B, kv_slots, head_dim).
+
+    identity_pages: slot-partitioned pools (see gather_kv) — the scatter
+    becomes batch-aligned so GSPMD keeps it local."""
+    pool_c = canonical(state.pool, storage_layout)
+    NP, kvs, _, P, dh = pool_c.shape
+    B = k.shape[0]
+    pos = state.seq_lens                              # (B,) global position
+    slot = pos % state.capacity
+    kv = jnp.stack([k, v], axis=1).transpose(0, 2, 1, 3)  # (B, kvs, 2, dh)
+    if identity_pages:
+        mps = NP // B
+        pool_b = pool_c.reshape(B, mps, kvs, 2, P, dh)
+        pool_b = pool_b.at[jnp.arange(B), slot // P, :, :, slot % P, :].set(kv)
+        pool_c = pool_b.reshape(NP, kvs, 2, P, dh)
+    else:
+        page_idx = state.page_table[jnp.arange(B), slot // P]
+        pool_c = pool_c.at[page_idx, :, :, slot % P, :].set(kv)
+    positions = state.positions.at[jnp.arange(B), slot].set(pos)
+    return PagedState(from_canonical(pool_c, storage_layout),
+                      state.page_table, state.seq_lens + 1, positions)
+
+
+def gather_kv(state: PagedState, storage_layout: str = L.CANONICAL,
+              identity_pages: bool = False
+              ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Materialize (k, v, kv_positions, valid) for attention: the jnp
+    reference path.  k, v: (B, capacity, kv_slots, dh).
+
+    identity_pages=True (§Perf optimization): the engine's pools are
+    slot-partitioned (sequence b owns pages [b*mps, (b+1)*mps), the
+    default ``make_state`` layout), so the dynamic page gather is a pure
+    reshape.  This matters under GSPMD: a dynamic gather over a sharded
+    pool cannot be proven local, so XLA all-gathers the ENTIRE pool per
+    layer; the reshape keeps every byte on its device.  (The Pallas
+    kernel path avoids the gather on real TPUs; this is the jnp
+    equivalent.)"""
+    pool_c = canonical(state.pool, storage_layout)
+    NP, kvs, _, P, dh = pool_c.shape
+    pt = state.page_table
+    B, n = pt.shape
+    if identity_pages:
+        assert NP == B * n, (NP, B, n)
+        pages = pool_c.reshape(B, n, kvs, 2, P, dh)
+    else:
+        pages = pool_c[pt]                            # (B, n, kvs, 2, P, dh)
+    pages = pages.transpose(0, 1, 4, 3, 2, 5)          # (B, n, P, 2, kvs, dh)
+    kv = pages.reshape(B, n * P, 2, kvs, dh)
+    # §Perf iteration 2: the reshape chain loses the kv-head sharding and
+    # GSPMD materializes the full head dimension per device (16x bytes);
+    # the launcher scopes a "decode_kv" hint to pin it back.
+    from repro.models import shardhints
+    kv = shardhints.constrain(kv, "decode_kv")
+    valid = state.positions >= 0
+    return kv[:, :, 0], kv[:, :, 1], state.positions, valid

@@ -1,0 +1,2 @@
+from repro.serving.engine import Engine
+from repro.serving.request import ServeRequest, State

@@ -1,0 +1,185 @@
+"""Continuous-batching serving engine over the paged KV substrate.
+
+Slot-based continuous batching (Orca-style iteration-level scheduling):
+the decode batch has ``max_batch`` fixed slots; a request occupies one
+slot from prefill until EOS/limit, then the slot is immediately reusable.
+Prefills are executed one request per step between decode iterations
+(vLLM default).  The KV pool is slot-partitioned (identity page tables).
+
+The engine runs on a single device or on an ``InstanceGroup`` (whose TP
+degree may be transformed live between steps — that path is exercised by
+examples/serve_transform.py and the integration tests).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.padding import PaddingPlan, make_plan
+from repro.models import model as M
+from repro.serving.request import ServeRequest, State
+
+
+def _sample(logits: jax.Array, temperature: float, rng: jax.Array
+            ) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits / temperature).astype(jnp.int32)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 4,
+                 max_seq: int = 256, page_tokens: int = 16,
+                 rng: Optional[jax.Array] = None,
+                 layout: str = "header_centric"):
+        self.cfg = cfg
+        self.plan = make_plan(cfg, 1)
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.page_tokens = page_tokens
+        self.layout = layout
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.rng = rng
+        self.params = params if params is not None else M.init_params(
+            jax.random.fold_in(rng, 1), cfg, self.plan)
+        self.caches = M.init_decode_caches(cfg, self.plan, max_batch,
+                                           max_seq, page_tokens, layout)
+        self.slots: List[Optional[ServeRequest]] = [None] * max_batch
+        self.waiting: List[ServeRequest] = []
+        self.steps = 0
+
+        cfgc, planc, layoutc = cfg, self.plan, layout
+
+        @jax.jit
+        def _decode(params, caches, tokens, positions):
+            return M.decode_step(params, cfgc, planc, caches, tokens,
+                                 positions, layoutc)
+
+        self._decode = _decode
+
+    # ------------------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        self.waiting.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    # -- prefill one request into its slot ------------------------------
+    def _prefill_one(self, req: ServeRequest, slot: int) -> None:
+        """Single-slot prefill via a masked batch: runs the prompt through
+        the model writing KV only for this slot's pages."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        # per-slot prefill uses a batch-1 cache view, then scatters the
+        # filled pages back into the engine cache (slot-partitioned pools
+        # make this a pure page-range copy — the page-friendly layout at
+        # work: no shifting, paper Table 2 row 2)
+        sub = M.init_decode_caches(self.cfg, self.plan, 1, self.max_seq,
+                                   self.page_tokens, self.layout)
+        logits, sub = M.prefill(self.params, self.cfg, self.plan,
+                                {"tokens": prompt}, sub, self.layout)
+        self._adopt_slot_cache(sub, slot, len(req.prompt))
+        tok = int(_sample(logits[:, -1], req.temperature,
+                          jax.random.fold_in(self.rng, req.rid))[0])
+        req.generated.append(tok)
+        req.t_first_token = time.monotonic()
+        req.state = State.DECODE
+        req.slot = slot
+        self.slots[slot] = req
+
+    def _adopt_slot_cache(self, sub, slot: int, seq_len: int) -> None:
+        """Copy the batch-1 cache into `slot` of the engine cache."""
+        def visit(dst, src):
+            from repro.paged.pool import PagedState
+            if isinstance(dst, PagedState):
+                mps = dst.page_table.shape[-1]
+                # pages for this slot occupy [slot*mps, (slot+1)*mps)
+                if dst.pool.ndim == src.pool.ndim:  # stacked group dims equal
+                    pool = jax.lax.dynamic_update_slice_in_dim(
+                        dst.pool, src.pool.astype(dst.pool.dtype),
+                        slot * mps, axis=dst.pool.ndim - 5)
+                    seq = jax.lax.dynamic_update_slice_in_dim(
+                        dst.seq_lens, src.seq_lens, slot,
+                        axis=dst.seq_lens.ndim - 1)
+                    pos = jax.lax.dynamic_update_slice_in_dim(
+                        dst.positions, src.positions, slot,
+                        axis=dst.positions.ndim - 2)
+                    return PagedState(pool, dst.page_table, seq, pos)
+                raise ValueError("cache rank mismatch")
+            if isinstance(dst, dict):
+                return {k: visit(dst[k], src[k]) for k in dst}
+            if isinstance(dst, (list, tuple)):
+                out = [visit(a, b) for a, b in zip(dst, src)]
+                return tuple(out) if isinstance(dst, tuple) else out
+            # recurrent state leaf: batch axis is -2 for conv (B,K,D),
+            # else ...; states are (.., B, feature...) with B at axis
+            # (ndim of src where size==1)
+            ax = _batch_axis(dst, src)
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=ax)
+
+        self.caches = {k: visit(self.caches[k], sub[k]) for k in self.caches}
+
+    # -- one engine iteration --------------------------------------------
+    def step(self) -> Dict[str, int]:
+        # admit waiting requests into free slots (one prefill per step)
+        if self.waiting:
+            slot = self._free_slot()
+            if slot is not None:
+                req = self.waiting.pop(0)
+                req.state = State.PREFILL
+                self._prefill_one(req, slot)
+
+        active = [r for r in self.slots if r is not None]
+        emitted = 0
+        if active:
+            tokens = np.zeros((self.max_batch,), np.int32)
+            positions = np.zeros((self.max_batch,), np.int32)
+            for r in active:
+                tokens[r.slot] = r.generated[-1]
+                positions[r.slot] = r.context_len - 1
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(tokens),
+                jnp.asarray(positions))
+            nxt = _sample(logits, 0.0, self.rng)  # greedy batch default
+            nxt = np.asarray(nxt)
+            for r in active:
+                tok = int(nxt[r.slot])
+                if r.temperature > 0:
+                    sub_rng = jax.random.fold_in(
+                        jax.random.fold_in(self.rng, r.rid), r.context_len)
+                    tok = int(_sample(logits[r.slot][None], r.temperature,
+                                      sub_rng)[0])
+                r.generated.append(tok)
+                emitted += 1
+                if (len(r.generated) >= r.max_new_tokens
+                        or (r.eos_id is not None and tok == r.eos_id)
+                        or r.context_len >= self.max_seq):
+                    r.state = State.DONE
+                    r.t_done = time.monotonic()
+                    self.slots[r.slot] = None
+        self.steps += 1
+        return {"active": len(active), "waiting": len(self.waiting),
+                "emitted": emitted}
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.waiting and all(s is None for s in self.slots):
+                return
+            self.step()
+        raise RuntimeError("engine did not drain")
+
+
+def _batch_axis(dst, src) -> int:
+    """Find the batch axis: the one where dst is max_batch and src is 1."""
+    for ax in range(dst.ndim):
+        if src.shape[ax] == 1 and dst.shape[ax] != 1:
+            return ax
+    return max(dst.ndim - 2, 0)

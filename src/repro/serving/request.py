@@ -1,0 +1,45 @@
+"""Request objects and lifecycle for the serving engine."""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import List, Optional
+
+
+class State(Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclass
+class ServeRequest:
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0            # 0 = greedy
+    eos_id: Optional[int] = None
+    rid: int = field(default_factory=itertools.count().__next__)
+
+    # lifecycle
+    state: State = State.WAITING
+    slot: int = -1
+    generated: List[int] = field(default_factory=list)
+    t_submit: float = field(default_factory=time.monotonic)
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.state == State.DONE
+
+    @property
+    def context_len(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.t_first_token is None else (
+            self.t_first_token - self.t_submit)

@@ -1,0 +1,4 @@
+from repro.training.data import DataConfig, SyntheticStream
+from repro.training.optimizer import adamw
+from repro.training.schedule import cosine, wsd
+from repro.training.train_step import make_eval_step, make_train_step

@@ -1,0 +1,88 @@
+"""Pytree checkpointing to a directory of .npy files + a structure index.
+
+No external deps (orbax unavailable offline): leaves are saved as .npy,
+the treedef as JSON paths.  Handles nested dict/list/tuple pytrees and
+restores exact dtypes/shapes; round-trip tested in tests/test_training.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy cannot natively persist bf16/f8 — store bit patterns + dtype name
+_EXTENDED = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+             "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8)}
+
+
+def _flatten(tree, path="") -> List[Tuple[str, Any]]:
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out += _flatten(tree[k], f"{path}/d:{k}")
+        return out
+    if isinstance(tree, (list, tuple)):
+        tag = "l" if isinstance(tree, list) else "t"
+        out = []
+        for i, v in enumerate(tree):
+            out += _flatten(v, f"{path}/{tag}:{i}")
+        return out
+    return [(path, tree)]
+
+
+def save(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves = _flatten(tree)
+    index = {"step": step, "leaves": []}
+    for i, (p, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        dtype_name = str(arr.dtype)
+        if dtype_name in _EXTENDED:
+            arr = arr.view(_EXTENDED[dtype_name][1])
+        np.save(os.path.join(path, f"leaf_{i}.npy"), arr)
+        index["leaves"].append({"path": p, "file": f"leaf_{i}.npy",
+                                "dtype": dtype_name})
+    with open(os.path.join(path, "index.json"), "w") as f:
+        json.dump(index, f)
+
+
+def restore(path: str) -> Tuple[Any, int]:
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    tree: Any = None
+    for ent in index["leaves"]:
+        arr = np.load(os.path.join(path, ent["file"]))
+        if ent["dtype"] in _EXTENDED:
+            arr = arr.view(_EXTENDED[ent["dtype"]][0])
+        tree = _insert(tree, ent["path"].strip("/").split("/"), arr)
+    tree = _finalize(tree)
+    return tree, index["step"]
+
+
+def _insert(tree, parts, value):
+    if not parts:
+        return value
+    tag, key = parts[0].split(":", 1)
+    if tag == "d":
+        tree = tree if isinstance(tree, dict) else {}
+        tree[key] = _insert(tree.get(key), parts[1:], value)
+        return tree
+    # list/tuple: store as dict of ints + tag marker, finalize later
+    tree = tree if isinstance(tree, dict) else {}
+    tree["__seq__"] = tag
+    tree[int(key)] = _insert(tree.get(int(key)), parts[1:], value)
+    return tree
+
+
+def _finalize(tree):
+    if isinstance(tree, dict):
+        if "__seq__" in tree:
+            tag = tree.pop("__seq__")
+            items = [_finalize(tree[i]) for i in sorted(tree)]
+            return tuple(items) if tag == "t" else items
+        return {k: _finalize(v) for k, v in tree.items()}
+    return tree

@@ -1,0 +1,35 @@
+"""LR schedules, including WSD (Warmup-Stable-Decay) as used by MiniCPM
+[arXiv:2404.06395] — one of the assigned architectures cites it."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(peak_lr: float, warmup: int, stable: int, decay: int,
+        final_frac: float = 0.1):
+    """MiniCPM WSD: linear warmup -> constant -> exponential-ish decay."""
+    def fn(step):
+        step = step.astype(jnp.float32)
+        w = jnp.float32(warmup)
+        s = jnp.float32(stable)
+        d = jnp.float32(decay)
+        lr_warm = peak_lr * step / jnp.maximum(w, 1.0)
+        lr_stable = jnp.float32(peak_lr)
+        t = jnp.clip((step - w - s) / jnp.maximum(d, 1.0), 0.0, 1.0)
+        lr_decay = peak_lr * (final_frac ** t)
+        return jnp.where(step < w, lr_warm,
+                         jnp.where(step < w + s, lr_stable, lr_decay))
+    return fn
+
+
+def cosine(peak_lr: float, warmup: int, total: int,
+           final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        w = jnp.float32(warmup)
+        lr_warm = peak_lr * step / jnp.maximum(w, 1.0)
+        t = jnp.clip((step - w) / jnp.maximum(total - w, 1.0), 0.0, 1.0)
+        lr_cos = peak_lr * (final_frac + (1 - final_frac)
+                            * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < w, lr_warm, lr_cos)
+    return fn

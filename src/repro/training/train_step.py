@@ -1,0 +1,50 @@
+"""Training step: next-token cross-entropy + AdamW, pjit-shardable."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.padding import PaddingPlan
+from repro.models import model as M
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def loss_fn(params, cfg: ModelConfig, plan: PaddingPlan,
+            batch: Dict[str, jax.Array], unroll: bool = False
+            ) -> Tuple[jax.Array, Dict]:
+    toks = batch["tokens"]
+    inp = dict(batch)
+    inp["tokens"] = toks[:, :-1]
+    labels = toks[:, 1:]
+    logits, aux = M.forward_train(params, cfg, plan, inp, unroll=unroll)
+    # VLM: image positions are prepended — only text positions have labels
+    if cfg.vision is not None and "patches" in batch:
+        logits = logits[:, batch["patches"].shape[1]:, :]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(nll)
+    total = ce + AUX_WEIGHT * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, plan: PaddingPlan, opt_update,
+                    unroll: bool = False):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, plan, batch, unroll)
+        params, opt_state = opt_update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, plan: PaddingPlan):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, cfg, plan, batch)
+        return dict(metrics, loss=loss)
+    return eval_step

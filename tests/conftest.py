@@ -1,0 +1,12 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit tests and benches must
+see the real single CPU device; multi-device behavior is tested via
+subprocesses (test_transform_integration / test_dryrun_small)."""
+import jax
+import pytest
+
+jax.config.update("jax_threefry_partitionable", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,65 @@
+"""Hypothesis property tests on the page allocator invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.paged.allocator import OutOfPages, PageAllocator
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free"]),
+                          st.integers(0, 7), st.integers(1, 8)),
+                max_size=60))
+def test_no_double_allocation(ops):
+    a = PageAllocator(64)
+    live = {}
+    for op, rid, n in ops:
+        if op == "alloc":
+            try:
+                slots = a.alloc(rid, n)
+            except OutOfPages:
+                assert len(a.free) < n
+                continue
+            for s in slots:
+                # a slot may never be handed out twice while live
+                for other in live.values():
+                    assert s not in other
+            live.setdefault(rid, []).extend(slots)
+        else:
+            a.free_request(rid)
+            live.pop(rid, None)
+        # conservation: free + live == total
+        assert len(a.free) + sum(len(v) for v in live.values()) \
+            == a.num_pages
+        assert a.used == sum(len(v) for v in live.values())
+        assert a.peak_used <= a.num_pages
+
+
+def test_trim_needs_headroom_and_compacts():
+    a = PageAllocator(10)
+    a.alloc(1, 8)
+    a.shrink(1, 0.25)  # keep 1/4 of each page: 6 page-equivalents of holes
+    freed, copied = a.trim(1)
+    assert freed > 0
+    assert copied > 0          # token-first trimming copies bytes
+    assert a.used == 2          # ceil(8 * 0.25)
+    # peak shows the transient overhead (needed new pages before freeing)
+    assert a.peak_used == 10
+
+
+def test_headercentric_compaction_is_copy_free():
+    a = PageAllocator(10)
+    a.alloc(1, 8)
+    freed = a.compact_headercentric(1, 0.25)
+    assert freed == 6
+    assert a.used == 2
+    # no extra pages were ever needed
+    assert a.peak_used == 8
+
+
+def test_out_of_pages():
+    a = PageAllocator(4)
+    a.alloc(1, 4)
+    with pytest.raises(OutOfPages):
+        a.alloc(2, 1)
+    a.free_request(1)
+    a.alloc(2, 4)

@@ -1,0 +1,85 @@
+"""Config registry: exact assigned hyperparameters + reduced variants."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, all_configs, get_config
+
+EXPECTED = {
+    # arch: (L, d_model, H, kv, d_ff, vocab)
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+    "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+    "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+}
+
+
+def test_all_assigned_archs_present():
+    assert sorted(ASSIGNED_ARCHS) == sorted(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_exact_hyperparameters(arch):
+    cfg = get_config(arch)
+    L, d, H, kv, ff, v = EXPECTED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.citation
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_reduced_variant_bounds(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers == 2
+    assert r.d_model <= 512
+    if r.moe is not None:
+        assert r.moe.num_experts <= 4
+
+
+def test_moe_structure():
+    g = get_config("granite-moe-3b-a800m")
+    assert g.moe.num_experts == 40 and g.moe.top_k == 8
+    m = get_config("llama4-maverick-400b-a17b")
+    assert m.moe.num_experts == 128 and m.moe.top_k == 1
+    # maverick interleaves dense/MoE layers
+    assert m.pattern.count("moe") == 24
+
+
+def test_param_counts_plausible():
+    counts = {n: c.param_count() for n, c in all_configs().items()}
+    assert 7.5e9 < counts["llama3-8b"] < 8.5e9
+    assert 350e9 < counts["llama4-maverick-400b-a17b"] < 450e9
+    a = get_config("llama4-maverick-400b-a17b").active_param_count()
+    assert a < 20e9
+    assert 8e9 < counts["recurrentgemma-9b"] < 10e9
+
+
+def test_shapes():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_sub_quadratic_flags():
+    assert get_config("xlstm-1.3b").sub_quadratic
+    assert get_config("recurrentgemma-9b").sub_quadratic
+    assert not get_config("llama3-8b").sub_quadratic
+
+
+def test_pattern_tiling():
+    rg = get_config("recurrentgemma-9b")
+    assert len(rg.pattern) == 38
+    assert rg.pattern[:3] == ("rglru", "rglru", "sliding")
+    x = get_config("xlstm-1.3b")
+    assert x.pattern.count("slstm") == 6  # 48 layers, 7:1

@@ -1,0 +1,148 @@
+"""Pallas kernel validation: shape/dtype sweeps, interpret mode vs the
+pure-jnp oracle (ref.py), as required per kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.padded_ffn import padded_ffn as ffn_pallas
+from repro.kernels.paged_attention import paged_attention as pa_pallas
+from repro.core.weight_transform import (ffn_reference, pad_columns_for_tp,
+                                         pad_rows_for_tp)
+
+
+# ---------------------------------------------------------------------------
+# paged_attention: sweep (B, Hq, kvs, P, pages, dh) x dtype
+# ---------------------------------------------------------------------------
+SWEEP = [
+    # B, Hq, kvs, P, n_pages, dh
+    (1, 4, 4, 8, 2, 32),
+    (2, 8, 4, 16, 4, 64),
+    (3, 8, 8, 8, 3, 64),
+    (2, 16, 2, 32, 2, 128),
+    (1, 2, 1, 16, 5, 128),   # MQA replicated to 2 slots -> kvs=1,rep=2
+]
+
+
+@pytest.mark.parametrize("B,Hq,kvs,P,n_pages,dh", SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_vs_oracle(B, Hq, kvs, P, n_pages, dh, dtype):
+    rng = np.random.default_rng(hash((B, Hq, kvs, P, n_pages, dh)) % 2**32)
+    NP = B * n_pages
+    q = jnp.asarray(rng.normal(size=(B, Hq, dh)), dtype)
+    pool = jnp.asarray(rng.normal(size=(NP, kvs, 2, P, dh)), dtype)
+    pt = jnp.asarray(
+        rng.permutation(NP).reshape(B, n_pages), jnp.int32)
+    max_t = n_pages * P
+    sl = jnp.asarray(rng.integers(1, max_t + 1, size=(B,)), jnp.int32)
+    out = pa_pallas(q, pool, pt, sl, interpret=True)
+    want = ref.paged_attention_ref(q, pool, pt, sl)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_attention_scattered_page_table():
+    """Non-identity page tables (the paged property!) must work."""
+    rng = np.random.default_rng(7)
+    B, Hq, kvs, P, n_pages, dh = 2, 4, 2, 8, 3, 32
+    NP = 16  # more physical pages than used
+    q = jnp.asarray(rng.normal(size=(B, Hq, dh)), jnp.float32)
+    pool = jnp.asarray(rng.normal(size=(NP, kvs, 2, P, dh)), jnp.float32)
+    pt = jnp.asarray([[5, 0, 9], [14, 2, 7]], jnp.int32)
+    sl = jnp.asarray([17, 24], jnp.int32)
+    out = pa_pallas(q, pool, pt, sl, interpret=True)
+    want = ref.paged_attention_ref(q, pool, pt, sl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# padded_ffn: sweep shapes x tp x activation x dtype
+# ---------------------------------------------------------------------------
+FFN_SWEEP = [
+    # T, d, ff_per_shard, pad_per_shard, tp
+    (128, 128, 128, 0, 1),
+    (128, 128, 128, 128, 2),
+    (256, 256, 256, 128, 2),
+    (128, 128, 256, 128, 4),
+]
+
+
+@pytest.mark.parametrize("T,d,ffs,pad,tp", FFN_SWEEP)
+@pytest.mark.parametrize("act", ["swiglu", "geglu"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_padded_ffn_vs_unpadded_oracle(T, d, ffs, pad, tp, act, dtype):
+    rng = np.random.default_rng(hash((T, d, ffs, pad, tp, act)) % 2**32)
+    ff, ffp = ffs * tp, (ffs + pad) * tp
+    x = jnp.asarray(rng.normal(size=(T, d)), dtype)
+    u = jnp.asarray(rng.normal(size=(d, 2 * ff)) * 0.05, dtype)
+    dn = jnp.asarray(rng.normal(size=(ff, d)) * 0.05, dtype)
+    gate, up = jnp.split(u, 2, axis=1)
+    wi = jnp.concatenate([pad_columns_for_tp(gate, ff, ffp, tp),
+                          pad_columns_for_tp(up, ff, ffp, tp)], axis=1)
+    wo = pad_rows_for_tp(dn, ff, ffp, tp)
+    out = ffn_pallas(x, wi, wo, tp=tp, ff=ff, activation=act,
+                     interpret=True)
+    want = ffn_reference(x.astype(jnp.float32), u.astype(jnp.float32),
+                         dn.astype(jnp.float32), act)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_ops_wrappers_jnp_backend():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 4, 32)), jnp.float32)
+    pool = jnp.asarray(rng.normal(size=(4, 2, 2, 8, 32)), jnp.float32)
+    pt = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+    sl = jnp.asarray([9, 16], jnp.int32)
+    a = ops.paged_attention(q, pool, pt, sl, backend="jnp")
+    b = ops.paged_attention(q, pool, pt, sl, backend="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: prefill kernel sweep
+# ---------------------------------------------------------------------------
+from repro.kernels.flash_attention import flash_attention
+
+FLASH_SWEEP = [
+    # B, S, Hq, Hkv, dh, window, bq, bk
+    (1, 128, 4, 4, 32, 0, 64, 64),
+    (2, 256, 8, 2, 64, 0, 128, 128),
+    (1, 256, 4, 1, 64, 0, 64, 128),     # MQA
+    (1, 256, 4, 4, 32, 64, 64, 64),     # sliding window
+    (2, 128, 2, 2, 128, 0, 128, 64),
+]
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,dh,win,bq,bk", FLASH_SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_oracle(B, S, Hq, Hkv, dh, win, bq, bk, dtype):
+    rng = np.random.default_rng(hash((B, S, Hq, Hkv, dh, win)) % 2**32)
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)), dtype)
+    out = flash_attention(q, k, v, causal=True, window=win, block_q=bq,
+                          block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_bidirectional():
+    rng = np.random.default_rng(0)
+    B, S, H, dh = 1, 128, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

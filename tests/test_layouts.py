@@ -1,0 +1,126 @@
+"""Paper §4.1 / Table 2: the three KV layouts, stride-order mapping, and
+the contiguity property that makes header-centric migration O(1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.paged import layout as L
+from repro.paged import pool as pp
+
+
+def test_layout_orders_match_paper_table2():
+    assert L.LAYOUTS["raw"] == ("kv", "block", "token", "head")
+    assert L.LAYOUTS["page_friendly"] == ("block", "kv", "token", "head")
+    assert L.LAYOUTS["header_centric"] == ("block", "head", "kv", "token")
+
+
+@pytest.mark.parametrize("src", list(L.LAYOUTS))
+@pytest.mark.parametrize("dst", list(L.LAYOUTS))
+def test_stride_order_roundtrip(src, dst):
+    rng = np.random.default_rng(0)
+    shape = L.pool_shape(src, 3, 4, 8, 16)
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    y = L.to_layout(x, src, dst)
+    assert y.shape == L.pool_shape(dst, 3, 4, 8, 16)
+    z = L.to_layout(y, dst, src)
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(x))
+
+
+def test_to_layout_preserves_logical_elements():
+    """Element (block b, head h, kv c, token t, dim d) must be the same
+    scalar in every layout."""
+    NP, H, P, D = 2, 3, 4, 5
+    base = np.arange(NP * H * 2 * P * D, dtype=np.float32).reshape(
+        NP, H, 2, P, D)  # header_centric canonical
+    hc = jnp.asarray(base)
+    raw = L.to_layout(hc, "header_centric", "raw")
+    pf = L.to_layout(hc, "header_centric", "page_friendly")
+    for b, h, c, t in [(0, 0, 0, 0), (1, 2, 1, 3), (0, 1, 1, 2)]:
+        v = base[b, h, c, t]
+        np.testing.assert_array_equal(np.asarray(raw[c, b, t, h]), v)
+        np.testing.assert_array_equal(np.asarray(pf[b, c, t, h]), v)
+
+
+def test_contiguous_segments_table2():
+    """Header-centric: tp segments per block; token-first layouts fragment
+    into O(page_tokens) segments (Table 2 complexity classes)."""
+    P, H, tp = 64, 8, 4
+    hc = L.contiguous_segments_per_block("header_centric", H, P, tp)
+    pf = L.contiguous_segments_per_block("page_friendly", H, P, tp)
+    raw = L.contiguous_segments_per_block("raw", H, P, tp)
+    assert hc == tp
+    assert pf == 2 * P * tp
+    assert raw == 2 * P * tp  # token-major inside block as well
+    assert hc < pf and hc < raw
+
+
+# ---------------------------------------------------------------------------
+# Pool ops under every storage layout agree (the permute trick)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", list(L.LAYOUTS))
+def test_pool_ops_layout_invariant(layout):
+    B, kvs, P, dh, mps = 2, 4, 8, 16, 3
+    rng = np.random.default_rng(1)
+    st0 = pp.make_state(B * mps, kvs, P, dh, B, mps, jnp.float32, layout)
+    S = 16
+    k = jnp.asarray(rng.normal(size=(B, S, kvs, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, kvs, dh)), jnp.float32)
+    st1 = pp.write_prefill(st0, k, v, layout)
+    kk, vv, pos, valid = pp.gather_kv(st1, layout)
+    np.testing.assert_allclose(np.asarray(kk[:, :S]), np.asarray(k))
+    np.testing.assert_allclose(np.asarray(vv[:, :S]), np.asarray(v))
+    assert bool(valid[:, :S].all()) and not bool(valid[:, S:].any())
+    # append one token
+    k1 = jnp.asarray(rng.normal(size=(B, kvs, dh)), jnp.float32)
+    v1 = jnp.asarray(rng.normal(size=(B, kvs, dh)), jnp.float32)
+    st2 = pp.append_token(st1, k1, v1, layout)
+    kk2, vv2, pos2, valid2 = pp.gather_kv(st2, layout)
+    np.testing.assert_allclose(np.asarray(kk2[:, S]), np.asarray(k1))
+    assert bool(valid2[:, S].all())
+    assert int(st2.seq_lens[0]) == S + 1
+
+
+def test_ring_buffer_wraparound():
+    """Sliding-window cache: capacity < seq keeps only the window."""
+    B, kvs, P, dh, mps = 1, 2, 4, 8, 2   # capacity = 8 tokens
+    st0 = pp.make_state(mps, kvs, P, dh, B, mps, jnp.float32)
+    cap = st0.capacity
+    assert cap == 8
+    rng = np.random.default_rng(2)
+    S = 20
+    k = jnp.asarray(rng.normal(size=(B, S, kvs, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, kvs, dh)), jnp.float32)
+    st1 = pp.write_prefill(st0, k, v)
+    kk, vv, pos, valid = pp.gather_kv(st1)
+    # slot p%cap holds global position p for p in [S-cap, S)
+    for p in range(S - cap, S):
+        np.testing.assert_allclose(np.asarray(kk[0, p % cap]),
+                                   np.asarray(k[0, p]))
+        assert int(pos[0, p % cap]) == p
+    # appending continues the ring
+    k1 = jnp.asarray(rng.normal(size=(B, kvs, dh)), jnp.float32)
+    st2 = pp.append_token(st1, k1, k1)
+    kk2, _, pos2, _ = pp.gather_kv(st2)
+    assert int(pos2[0, S % cap]) == S
+    np.testing.assert_allclose(np.asarray(kk2[0, S % cap]),
+                               np.asarray(k1[0]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(kvs=st.sampled_from([1, 2, 4]), P=st.sampled_from([4, 8]),
+       tp=st.sampled_from([2, 4]), seed=st.integers(0, 1000))
+def test_headercentric_split_is_contiguous(kvs, P, tp, seed):
+    """The property that powers §4.1.2: slicing a header-centric block by
+    destination worker yields contiguous memory runs."""
+    if kvs % tp:
+        kvs = tp  # replicate/pad case: slots == tp
+    dh = 8
+    block = np.arange(kvs * 2 * P * dh).reshape(kvs, 2, P, dh)
+    flat = block.reshape(-1)
+    per = kvs // tp
+    for w in range(tp):
+        piece = block[w * per:(w + 1) * per].reshape(-1)
+        start = w * per * 2 * P * dh
+        np.testing.assert_array_equal(piece,
+                                      flat[start:start + piece.size])

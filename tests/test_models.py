@@ -1,0 +1,205 @@
+"""Per-architecture smoke tests (required): a REDUCED variant of each
+assigned family runs one forward/train step on CPU; output shapes + no
+NaNs.  Plus prefill/decode consistency against the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, smoke_shape
+from repro.core.padding import make_plan
+from repro.models import model as M
+from repro.training import adamw, make_train_step
+
+
+def _batch(cfg, rng, B, S, extra_token=0):
+    batch = {"tokens": jax.random.randint(rng, (B, S + extra_token), 0,
+                                          cfg.vocab_size)}
+    if cfg.vision is not None:
+        batch["patches"] = jax.random.normal(
+            rng, (B, cfg.vision.num_patches, cfg.d_model))
+    if cfg.encoder is not None:
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.encoder.num_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_train_step(arch, rng):
+    cfg = get_config(arch).reduced()
+    plan = make_plan(cfg, 2)
+    params = M.init_params(rng, cfg, plan)
+    B, S = 2, 32
+    batch = _batch(cfg, rng, B, S, extra_token=1)
+
+    logits, aux = M.forward_train(params, cfg, plan,
+                                  {**batch, "tokens": batch["tokens"][:, :-1]})
+    exp_s = S + (cfg.vision.num_patches if cfg.vision else 0)
+    assert logits.shape == (B, exp_s, plan.vocab_padded)
+    assert not bool(jnp.isnan(logits).any())
+
+    # one train step
+    _, opt_update = adamw(1e-3)
+    opt_init, _ = adamw(1e-3)
+    st = opt_init(params)
+    step = jax.jit(make_train_step(cfg, plan, opt_update))
+    params2, st2, metrics = step(params, st, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)).sum()),
+            params, params2))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_match_full_forward(arch, rng):
+    cfg = get_config(arch).reduced()
+    plan = make_plan(cfg, 2)
+    params = M.init_params(rng, cfg, plan)
+    B, S = 2, 32
+    batch = _batch(cfg, rng, B, S, extra_token=1)
+    toks = batch["tokens"]
+    extra = cfg.vision.num_patches if cfg.vision else 0
+
+    full, _ = M.forward_train(params, cfg, plan, batch)
+    caches = M.init_decode_caches(cfg, plan, B, max_seq=64)
+    pre_batch = {**batch, "tokens": toks[:, :S]}
+    lg, caches = M.prefill(params, cfg, plan, pre_batch, caches)
+    scale = float(jnp.abs(full[:, S - 1 + extra]).max()) + 1e-9
+    err_pre = float(jnp.abs(lg[:, -1] - full[:, S - 1 + extra]).max())
+    assert err_pre / scale < 2e-2, f"prefill mismatch {err_pre/scale}"
+
+    lg2, caches = M.decode_step(params, cfg, plan, caches,
+                                toks[:, S].astype(jnp.int32),
+                                jnp.full((B,), S + extra, jnp.int32))
+    err_dec = float(jnp.abs(lg2 - full[:, S + extra]).max())
+    assert err_dec / scale < 2e-2, f"decode mismatch {err_dec/scale}"
+
+
+def test_sliding_window_variant_matches_full_within_window(rng):
+    """A sliding-window model must equal the full-attention model while
+    the context is shorter than the window."""
+    from dataclasses import replace
+    cfg = get_config("llama3-8b").reduced()
+    win = replace(cfg, attention="sliding", window=64)
+    plan = make_plan(cfg, 2)
+    params = M.init_params(rng, cfg, plan)
+    batch = {"tokens": jax.random.randint(rng, (2, 32), 0, cfg.vocab_size)}
+    a, _ = M.forward_train(params, cfg, plan, batch)
+    b, _ = M.forward_train(params, win, plan, batch)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_banded_equals_masked_sliding(rng):
+    """The §Perf banded attention optimization must be numerically equal
+    to the masked implementation."""
+    from repro.models import layers as Lyr
+    B, S, H, dh, win = 1, 1024, 2, 16, 128
+    q = jax.random.normal(rng, (B, S, H, dh))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, H, dh))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, H, dh))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    a = Lyr.chunked_attention(q, k, v, pos, pos, causal=True, window=win)
+    b = Lyr.banded_attention(q, k, v, pos, pos, window=win)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_chunkwise_matches_stepwise(rng):
+    from repro.models import layers as Lyr
+    B, S, H, dh = 2, 32, 2, 8
+    ks = [jax.random.fold_in(rng, i) for i in range(5)]
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    h_par, st_par = Lyr.mlstm_chunkwise(q, k, v, ig, fg, chunk=8)
+    C = jnp.zeros((B, H, dh, dh))
+    n = jnp.zeros((B, H, dh))
+    m = jnp.full((B, H), Lyr.NEG_INF)
+    outs = []
+    st = (C, n, m)
+    for t in range(S):
+        h, st = Lyr.mlstm_step(q[:, t], k[:, t], v[:, t], ig[:, t],
+                               fg[:, t], st)
+        outs.append(h)
+    h_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h_seq),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_par[0]), np.asarray(st[0]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_scan_matches_stepwise(rng):
+    from repro.models import layers as Lyr
+    B, S, D = 2, 16, 8
+    ks = [jax.random.fold_in(rng, i) for i in range(4)]
+    x = jax.random.normal(ks[0], (B, S, D))
+    gx = jax.random.normal(ks[1], (B, S, D))
+    ga = jax.random.normal(ks[2], (B, S, D))
+    a_param = jnp.linspace(0.5, 2.0, D)
+    y, h_last = Lyr.rglru(x, gx, ga, a_param)
+    h = jnp.zeros((B, D))
+    outs = []
+    for t in range(S):
+        o, h = Lyr.rglru_step(x[:, t], gx[:, t], ga[:, t], a_param, h)
+        outs.append(o)
+    y_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_identity_pages_decode_matches_gather(rng):
+    """§Perf: the slot-partitioned (identity-page) decode fast path must
+    be numerically identical to the page-table gather path."""
+    cfg = get_config("llama3-8b").reduced()
+    plan = make_plan(cfg, 2)
+    params = M.init_params(rng, cfg, plan)
+    toks = jax.random.randint(rng, (2, 17), 0, cfg.vocab_size)
+    caches = M.init_decode_caches(cfg, plan, 2, max_seq=64)
+    _, caches = M.prefill(params, cfg, plan, {"tokens": toks[:, :16]},
+                          caches)
+    a, _ = M.decode_step(params, cfg, plan, caches, toks[:, 16],
+                         jnp.full((2,), 16, jnp.int32))
+    b, _ = M.decode_step(params, cfg, plan, caches, toks[:, 16],
+                         jnp.full((2,), 16, jnp.int32),
+                         identity_pages=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_mlstm_chunk_size_invariance(chunk, rng):
+    """Chunkwise mLSTM must be invariant to the chunk size (the chunk is
+    a compute schedule, not semantics)."""
+    from repro.models import layers as Lyr
+    B, S, H, dh = 1, 32, 2, 8
+    ks = [jax.random.fold_in(rng, i) for i in range(5)]
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    ref_h, ref_st = Lyr.mlstm_chunkwise(q, k, v, ig, fg, chunk=S)
+    h, st = Lyr.mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(ref_h),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st[0]), np.asarray(ref_st[0]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_paper_model_config_registered():
+    """The paper's own evaluation model must be buildable (used by the
+    calibration + Table-3 benchmarks + dry-run)."""
+    cfg = get_config("qwen2.5-32b")
+    assert cfg.num_layers == 64 and cfg.d_ff == 27648
+    r = cfg.reduced()
+    plan = make_plan(r, 2)
+    params = M.init_params(jax.random.PRNGKey(0), r, plan)
+    lg, _ = M.forward_train(params, r, plan, {
+        "tokens": jnp.zeros((1, 8), jnp.int32)})
+    assert not bool(jnp.isnan(lg).any())

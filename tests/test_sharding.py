@@ -1,0 +1,110 @@
+"""Sharding-layer unit tests: pspec trees, HLO collective parser, blocked
+MoE dispatch equivalence, shard hints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core.padding import make_plan
+from repro.launch import sharding as SH
+from repro.launch import specs as SP
+from repro.launch.hlo_analysis import collective_bytes
+from repro.models import model as M
+from repro.models import shardhints
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_pspecs_divisible(arch):
+    """Every sharded dim must divide the 16-wide model axis (the padding
+    plan's whole job); FSDP adds data-axis shards only when divisible."""
+    cfg = get_config(arch)
+    plan = make_plan(cfg, 16, mode="lane")
+    sds = SP.param_specs(cfg, plan)
+    ps = SH.param_pspecs(sds, cfg, plan, fsdp=True, data_size=16)
+    leaves_s, _ = jax.tree.flatten(sds)
+    leaves_p = jax.tree.leaves(ps, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_s) == len(leaves_p)
+    axis = {"model": 16, "data": 16}
+    n_sharded = 0
+    for s, spec in zip(leaves_s, leaves_p):
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names = names if isinstance(names, tuple) else (names,)
+            total = 1
+            for nm in names:
+                total *= axis[nm]
+            assert s.shape[dim] % total == 0, (arch, s.shape, spec)
+            n_sharded += 1
+    assert n_sharded > 0
+
+
+def test_cache_pspecs_decode_modes():
+    cfg = get_config("llama3-8b")
+    plan = make_plan(cfg, 16)
+    from repro.configs import SHAPES
+    c_sds = SP.cache_specs(cfg, plan, SHAPES["decode_32k"])
+    mesh = type("M", (), {"shape": {"data": 16, "model": 16}})()
+    ps = SH.cache_pspecs(c_sds, mesh, ("data",), 128, "tp")
+    pool_spec = ps["groups"][0].pool
+    assert pool_spec[1] in (("data",), "data")
+    assert pool_spec[2] == "model"
+
+
+def test_hlo_collective_parser():
+    txt = """
+  %ag = bf16[16,128,256]{2,1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[1024]{0} all-reduce(%y), to_apply=%sum
+  %a2a = bf16[8,64]{1,0} all-to-all(%z)
+  %a2at = (f32[4,8]{1,0}, f32[4,8]{1,0}) all-to-all(%u, %v), dimensions={0}
+  %cp = s32[4]{0} collective-permute(%w)
+  %agd = bf16[16,128,256]{2,1,0} all-gather-done(%ag)
+  %notacoll = f32[2,2]{1,0} add(%a, %b)
+"""
+    d = collective_bytes(txt)
+    assert d["all-gather"] == 16 * 128 * 256 * 2
+    assert d["all-reduce"] == 1024 * 4
+    # tuple-shaped all-to-all results are fully counted
+    assert d["all-to-all"] == 8 * 64 * 2 + 2 * 4 * 8 * 4
+    assert d["collective-permute"] == 4 * 4
+    assert d["count"] == 5  # -done not double counted
+
+
+def test_blocked_moe_dispatch_equals_unblocked(rng):
+    """Hierarchical (block-local) dispatch must equal global dispatch when
+    capacity is ample (no drops) — §Perf P2 iteration 4 correctness."""
+    cfg = get_config("granite-moe-3b-a800m").reduced()  # cf = 8.0
+    plan = make_plan(cfg, 2)
+    params = M.init_params(rng, cfg, plan)
+    batch = {"tokens": jax.random.randint(rng, (4, 32), 0, cfg.vocab_size)}
+    a, _ = M.forward_train(params, cfg, plan, batch)
+    with shardhints.hints(moe_blocks=4):
+        b, _ = M.forward_train(params, cfg, plan, batch)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_shardhints_scoping():
+    assert shardhints.get("zzz") is None
+    with shardhints.hints(zzz=5):
+        assert shardhints.get("zzz") == 5
+        with shardhints.hints(yyy=1):
+            assert shardhints.get("zzz") == 5
+    assert shardhints.get("zzz") is None
+    x = jnp.ones((4,))
+    assert shardhints.constrain(x, "nope") is x
+
+
+def test_long_context_variant():
+    from repro.launch.specs import long_context_variant, supports_shape
+    from repro.configs import SHAPES
+    lc = long_context_variant(get_config("llama3-8b"))
+    assert lc.sub_quadratic and lc.window == 4096
+    # native sub-quadratic archs unchanged
+    rg = get_config("recurrentgemma-9b")
+    assert long_context_variant(rg) is rg
+    ok, why = supports_shape(get_config("whisper-tiny"), SHAPES["long_500k"])
+    assert not ok and "skip" in why.lower() or not ok

@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the paper's system: engine + scheduler
++ transformation working together (single-device CPU path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cluster_sim import Cluster, Request
+from repro.core.scheduler import GygesScheduler
+from repro.core.transform_engine import (scale_down_schedule,
+                                         scale_up_schedule, schedule_cost)
+from repro.core.kv_transform import LinkModel, account_scale_up
+from repro.core.padding import make_plan
+from repro.serving import Engine, ServeRequest
+
+
+def test_schedules_follow_paper_rules():
+    up = scale_up_schedule(8, layers_per_step=2)
+    # MLP-first: every mlp step precedes every kv step (paper §4.3)
+    kinds = [op.component for step in up.steps for op in step]
+    first_kv = kinds.index("kv")
+    assert all(k == "mlp" for k in kinds[:first_kv])
+    # reversed traversal: last layer first
+    first_step_layers = [op.layer for op in up.steps[0]]
+    assert first_step_layers[0] == 7
+
+    down = scale_down_schedule(8, layers_per_step=1)
+    assert down.n_steps == 8  # layer-staggered
+    for step in down.steps:
+        layers = {op.layer for op in step}
+        assert len(layers) == 1  # one layer per step
+
+
+def test_overhead_small_like_fig11():
+    """Fig. 11: Gyges keeps per-step overhead small and total cost far
+    below the Seesaw-style baseline."""
+    from repro.core.transform_engine import seesaw_cost
+    cfg = get_config("qwen2.5-32b")
+    plan = make_plan(cfg, 4, mode="page")
+    link = LinkModel()
+    kv = account_scale_up("header_centric", 4, 60, 8, 64,
+                          cfg.resolved_head_dim, n_stages=8)
+    sched = scale_up_schedule(cfg.num_layers, layers_per_step=1)
+    total, per_step = schedule_cost(sched, cfg, plan, kv, link,
+                                    method="padded", overlap=True)
+    assert total < 0.1                      # well under one second
+    assert total < 0.05 * seesaw_cost(cfg, plan, cfg.num_layers, link)
+
+
+def test_engine_with_mixed_lengths_and_arrivals():
+    cfg = get_config("gemma-2b").reduced()
+    eng = Engine(cfg, max_batch=2, max_seq=96)
+    reqs = [ServeRequest(list(range(1, 1 + n)), max_new_tokens=4)
+            for n in (3, 17, 9, 30)]
+    eng.submit(reqs[0])
+    eng.submit(reqs[1])
+    eng.step()
+    eng.submit(reqs[2])
+    eng.submit(reqs[3])
+    eng.run_until_done(400)
+    assert all(r.done for r in reqs)
+    assert all(len(r.generated) == 4 for r in reqs)
+
+
+def test_cluster_survives_burst_of_longs():
+    cfg = get_config("qwen2.5-32b")
+    c = Cluster(cfg, n_hosts=2, scheduler=GygesScheduler())
+    reqs = [Request(i, float(i), 30_000, 50) for i in range(6)]
+    reqs += [Request(100 + i, 0.5 * i, 800, 100) for i in range(60)]
+    m = c.run(reqs, dt=0.25, drain=240.0)
+    assert m["finished"] == m["total"]
+    assert m["throughput_tps"] > 0

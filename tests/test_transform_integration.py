@@ -1,0 +1,139 @@
+"""Multi-device integration tests (subprocess with 8 fake host devices —
+the main pytest process must keep seeing 1 device, per the dry-run rule).
+
+Covers the paper's headline mechanism end-to-end: a live TP1->TP4->TP1
+transformation of a serving InstanceGroup with exact token continuity,
+and the KV pool reshard data plane."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(body: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_live_transformation_token_continuity():
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.core.instance import InstanceGroup
+
+        cfg = get_config("llama3-8b").reduced()
+        devs = jax.devices()[:4]
+        kw = dict(batch_per_replica=1, max_seq=64, rng=jax.random.PRNGKey(3))
+        inst = InstanceGroup(cfg, devs, **kw)
+        ref = InstanceGroup(cfg, devs, **kw)
+        B, S = inst.batch, 16
+        toks = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0,
+                                  cfg.vocab_size)
+        t0 = jnp.argmax(inst.prefill({"tokens": toks})[:, -1], -1)
+        ref.prefill({"tokens": toks})
+        t0 = t0.astype(jnp.int32)
+
+        t, want = t0, []
+        for i in range(6):
+            lg = ref.decode(t, jnp.full((B,), S + i, jnp.int32))
+            t = jnp.argmax(lg, -1).astype(jnp.int32)
+            want.append(np.asarray(t))
+        t, got = t0, []
+        for i in range(6):
+            if i == 2:
+                inst.transform(4)
+                assert inst.tp == 4
+            if i == 4:
+                inst.transform(1)
+            lg = inst.decode(t, jnp.full((B,), S + i, jnp.int32))
+            t = jnp.argmax(lg, -1).astype(jnp.int32)
+            got.append(np.asarray(t))
+        for a, b in zip(want, got):
+            assert (a == b).all(), (a, b)
+        assert inst.transform_count == 2
+        print("CONTINUITY_OK")
+    """)
+    assert "CONTINUITY_OK" in out
+
+
+@pytest.mark.slow
+def test_pool_reshard_scale_up_preserves_content():
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.core import kv_transform as KT
+
+        W, NP, kvs, Pg, dh = 4, 6, 8, 8, 16
+        mesh = Mesh(np.array(jax.devices()[:W]), ("tp",))
+        rng = np.random.default_rng(0)
+        host = jnp.asarray(rng.normal(size=(W, NP, kvs, 2, Pg, dh)),
+                           jnp.float32)
+        pools = jax.device_put(host, NamedSharding(mesh, P("tp")))
+        merged = KT.reshard_scale_up(pools, mesh, "tp")
+        assert merged.shape == (W * NP, kvs, 2, Pg, dh)
+        # content preserved
+        np.testing.assert_array_equal(
+            np.asarray(merged), np.asarray(host).reshape(W * NP, kvs, 2,
+                                                         Pg, dh))
+        # sharded by heads now: each device holds kvs/W heads of ALL pages
+        shard_shapes = {tuple(s.data.shape) for s in
+                        merged.addressable_shards}
+        assert shard_shapes == {(W * NP, kvs // W, 2, Pg, dh)}
+        back = KT.reshard_scale_down(merged, W, mesh, "tp")
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(host))
+        print("RESHARD_OK")
+    """)
+    assert "RESHARD_OK" in out
+
+
+@pytest.mark.slow
+def test_transformation_faithful_mode_mlp_only():
+    """paper-faithful transform_attn_weights=False: attention weights stay
+    replicated, transformation still exact."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.core.instance import InstanceGroup
+        cfg = get_config("gemma-2b").reduced()
+        devs = jax.devices()[:4]
+        kw = dict(batch_per_replica=1, max_seq=64,
+                  rng=jax.random.PRNGKey(5), transform_attn=False)
+        inst = InstanceGroup(cfg, devs, **kw)
+        ref = InstanceGroup(cfg, devs, **kw)
+        B, S = inst.batch, 8
+        toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                  cfg.vocab_size)
+        t0 = jnp.argmax(inst.prefill({"tokens": toks})[:, -1], -1).astype(
+            jnp.int32)
+        ref.prefill({"tokens": toks})
+        # different shardings change bf16 reduction order, so compare
+        # LOGITS with tolerance (token-exact equality is only guaranteed
+        # within one instance, which test 1 covers)
+        t = t0
+        ref_logits, fed = [], []
+        for i in range(4):
+            fed.append(t)
+            lg = ref.decode(t, jnp.full((B,), S + i, jnp.int32))
+            t = jnp.argmax(lg, -1).astype(jnp.int32)
+            ref_logits.append(np.asarray(lg, np.float32))
+        inst.transform(2)
+        for i in range(4):  # teacher-forced with ref tokens
+            lg = inst.decode(fed[i], jnp.full((B,), S + i, jnp.int32))
+            got = np.asarray(lg, np.float32)
+            scale = np.abs(ref_logits[i]).max() + 1e-9
+            err = np.abs(got - ref_logits[i]).max() / scale
+            assert err < 3e-2, f"step {i}: rel err {err}"
+        print("FAITHFUL_OK")
+    """)
+    assert "FAITHFUL_OK" in out

@@ -1,0 +1,87 @@
+"""Weight transformation accounting + padded split mechanics (§4.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import weight_transform as WT
+from repro.core.kv_transform import LinkModel
+from repro.core.padding import make_plan
+
+
+def test_padded_scale_up_is_zero_copy():
+    """Page-aligned padding -> scale-up releases pages without copying a
+    single byte (the paper's headline §4.2 property)."""
+    cfg = get_config("llama3-8b")
+    plan = make_plan(cfg, 4, mode="page")
+    assert plan.page_aligned
+    st = WT.account_scale_up(cfg, plan, 4, "padded")
+    assert st.bytes_copied == 0
+    assert st.bytes_transferred == 0
+    assert st.page_ops > 0
+    # swap path must copy the kept shard
+    sw = WT.account_scale_up(cfg, plan, 4, "swap")
+    assert sw.bytes_copied > 0
+    link = LinkModel()
+    assert st.time_s(link) < sw.time_s(link)
+
+
+def test_scale_down_bytes_are_physics():
+    """Scale-down must move (tp-1)/tp of the weights regardless of method
+    — padding only removes the extra local copies."""
+    cfg = get_config("llama3-8b")
+    plan = make_plan(cfg, 4, mode="page")
+    pad = WT.account_scale_down(cfg, plan, 4, "padded")
+    swp = WT.account_scale_down(cfg, plan, 4, "swap")
+    assert pad.bytes_transferred == swp.bytes_transferred > 0
+    assert pad.bytes_copied == 0 and swp.bytes_copied > 0
+    layer = WT.mlp_layer_bytes(cfg, plan, padded=True)
+    assert pad.bytes_transferred == layer - layer // 4
+
+
+def test_unaligned_model_falls_back_to_swap():
+    cfg = get_config("granite-moe-3b-a800m")
+    plan = make_plan(cfg, 4, mode="page")
+    assert not plan.page_aligned
+    st = WT.account_scale_up(cfg, plan, 4, "padded")
+    assert st.bytes_copied > 0  # cannot be zero-copy without alignment
+
+
+def test_pad_split_roundtrip():
+    """Slicing each shard's real columns back out of the padded tensor
+    recovers the original exactly."""
+    rng = np.random.default_rng(0)
+    d, ff, ffp, tp = 16, 24, 32, 4
+    w = jnp.asarray(rng.normal(size=(d, ff)), jnp.float32)
+    wp = WT.pad_columns_for_tp(w, ff, ffp, tp)
+    shard, shard_p = ff // tp, ffp // tp
+    rec = []
+    for i in range(tp):
+        rec.append(np.asarray(wp[:, i * shard_p:i * shard_p + shard]))
+        # padding tail must be exactly zero
+        tail = np.asarray(wp[:, i * shard_p + shard:(i + 1) * shard_p])
+        assert (tail == 0).all()
+    np.testing.assert_array_equal(np.concatenate(rec, 1), np.asarray(w))
+
+    wr = jnp.asarray(rng.normal(size=(ff, d)), jnp.float32)
+    wrp = WT.pad_rows_for_tp(wr, ff, ffp, tp)
+    rec = [np.asarray(wrp[i * shard_p:i * shard_p + shard]) for i in
+           range(tp)]
+    np.testing.assert_array_equal(np.concatenate(rec, 0), np.asarray(wr))
+
+
+def test_overlap_reduces_time():
+    cfg = get_config("qwen2.5-32b")
+    plan = make_plan(cfg, 4, mode="page")
+    link = LinkModel()
+    dn = WT.account_scale_down(cfg, plan, 4, "padded")
+    assert dn.time_s(link, overlap=True) < dn.time_s(link) * 0.5
+
+
+def test_moe_layer_bytes_include_experts():
+    g = get_config("granite-moe-3b-a800m")
+    plan = make_plan(g, 4, mode="page")
+    b = WT.mlp_layer_bytes(g, plan, padded=False)
+    expected = 3 * g.d_model * g.d_ff * 2 * g.moe.num_experts \
+        + g.d_model * g.moe.num_experts * 2
+    assert b == expected
