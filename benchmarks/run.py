@@ -31,8 +31,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(MODULES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: import every benchmark module (done "
+                         "at import time above) and run the fast KV-"
+                         "transform accounting + data-plane benchmark")
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(MODULES)
+    if args.smoke and not args.only:
+        names = ["fig9"]
+    else:
+        names = args.only.split(",") if args.only else list(MODULES)
 
     failures = 0
     for name in names:

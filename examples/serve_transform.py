@@ -12,6 +12,7 @@ import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 
+import dataclasses
 import time
 
 import jax
@@ -23,7 +24,10 @@ from repro.core.instance import InstanceGroup
 
 
 def main():
-    cfg = get_config("llama3-8b").reduced()
+    # float32: the demo asserts token-EXACT continuity, and bf16 cross-TP
+    # reduction order can flip near-tie argmaxes
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
     devs = jax.devices()[:4]
     print(f"devices: {len(devs)} | arch: {cfg.name}")
 
@@ -44,17 +48,29 @@ def main():
         want.append(np.asarray(t))
 
     t = t0
+    session = None
     for i in range(10):
         if i == 3:
-            print(">>> long request arrives: transforming 4x(TP1) -> TP4")
-            w0 = time.perf_counter()
-            inst.transform(4)
-            print(f"    transformed in {time.perf_counter()-w0:.3f}s "
-                  f"(weights resharded + KV pools all-to-all, mesh="
-                  f"{dict(inst.mesh.shape)})")
-        if i == 7:
-            print(">>> long request done: decomposing TP4 -> 4x(TP1)")
+            print(">>> long request arrives: transforming 4x(TP1) -> TP4 "
+                  "(scheduled: MLP-first, reversed traversal; one step "
+                  "per decode iteration)")
+            session = inst.begin_transform(4, layers_per_step=1)
+        if i == 7 and session is None:   # scale-up schedule has drained
+            print(">>> long request done: decomposing TP4 -> 4x(TP1) "
+                  "(one-shot reshard)")
             inst.transform(1)
+        if session is not None:
+            rep = session.step()
+            ops = ",".join(f"L{o.layer}.{o.component}" for o in rep.ops)
+            print(f"    schedule step [{ops}] "
+                  f"{'pallas+all_to_all' if rep.kernel_plane else 'gspmd'}"
+                  f" {rep.seconds*1e3:.1f}ms"
+                  f" (modeled {rep.modeled_s*1e3:.3f}ms)")
+            if session.done:
+                inst.finish_transform()
+                session = None
+                print(f"    transformation complete, mesh="
+                      f"{dict(inst.mesh.shape)}")
         lg = inst.decode(t, jnp.full((B,), S + i, jnp.int32))
         t = jnp.argmax(lg, -1).astype(jnp.int32)
         ok = (np.asarray(t) == want[i]).all()

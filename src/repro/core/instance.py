@@ -27,7 +27,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -36,6 +36,14 @@ from repro.models import model as M
 from repro.paged.pool import PagedState
 
 REP, TP = "rep", "tp"
+
+
+def mesh_context(mesh: Mesh):
+    """``jax.set_mesh`` appeared in newer jax; on 0.4.x a Mesh is itself
+    the context manager that scopes bare-PartitionSpec sharding."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 # ---------------------------------------------------------------------------
@@ -83,38 +91,40 @@ def param_pspecs(params, transform_attn: bool = True):
     return walk(params, "")
 
 
-def cache_pspecs(caches):
-    """KV pools: pages over ``rep`` (each replica owns its requests'
-    pages), kv heads over ``tp`` — one spec valid for all TP degrees.
-    Recurrent states shard batch over ``rep``."""
-    def one(c, bdim):
-        if isinstance(c, PagedState):
-            nd = c.pool.ndim  # (G?, NP, kvs, 2, P, dh) canonical
-            lead = [None] * (nd - 5)
-            return PagedState(
-                pool=P(*lead, REP, TP, None, None, None),
-                page_table=P(*([None] * (c.page_table.ndim - 2)), REP, None),
-                seq_lens=P(*([None] * (c.seq_lens.ndim - 1)), REP),
-                positions=P(*([None] * (c.positions.ndim - 2)), REP, None),
-            )
-        if isinstance(c, dict):
-            return {k: one(v, bdim) for k, v in c.items()}
-        if isinstance(c, (list, tuple)):
-            res = [one(v, bdim) for v in c]
-            return tuple(res) if isinstance(c, tuple) else res
-        # recurrent state leaf: batch at dim `bdim` -> shard over rep
-        if c.ndim <= bdim:
-            return P()
-        spec = [None] * c.ndim
-        spec[bdim] = REP
-        return P(*spec)
+def layer_cache_pspecs(c, bdim: int = 0):
+    """Cache specs for ONE layer's cache tree (``bdim`` = batch axis of
+    recurrent-state leaves; stacked group caches pass 1).  KV pools:
+    pages over ``rep`` (each replica owns its requests' pages), kv heads
+    over ``tp`` — one spec valid for all TP degrees."""
+    if isinstance(c, PagedState):
+        nd = c.pool.ndim  # (G?, NP, kvs, 2, P, dh) canonical
+        lead = [None] * (nd - 5)
+        return PagedState(
+            pool=P(*lead, REP, TP, None, None, None),
+            page_table=P(*([None] * (c.page_table.ndim - 2)), REP, None),
+            seq_lens=P(*([None] * (c.seq_lens.ndim - 1)), REP),
+            positions=P(*([None] * (c.positions.ndim - 2)), REP, None),
+        )
+    if isinstance(c, dict):
+        return {k: layer_cache_pspecs(v, bdim) for k, v in c.items()}
+    if isinstance(c, (list, tuple)):
+        res = [layer_cache_pspecs(v, bdim) for v in c]
+        return tuple(res) if isinstance(c, tuple) else res
+    # recurrent state leaf: batch at dim `bdim` -> shard over rep
+    if c.ndim <= bdim:
+        return P()
+    spec = [None] * c.ndim
+    spec[bdim] = REP
+    return P(*spec)
 
+
+def cache_pspecs(caches):
     out = {}
     for k, v in caches.items():
         if k == "rem":
-            out[k] = [one(c, 0) for c in v]
+            out[k] = [layer_cache_pspecs(c, 0) for c in v]
         else:
-            out[k] = one(v, 1)
+            out[k] = layer_cache_pspecs(v, 1)
     return out
 
 
@@ -140,6 +150,7 @@ class InstanceGroup:
         self.tp = 1
         self.mesh = self._mesh(1)
         self.transform_count = 0
+        self._session = None
 
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         host_params = params if params is not None else M.init_params(
@@ -156,19 +167,20 @@ class InstanceGroup:
 
     # -- mesh / sharding helpers ------------------------------------------
     def _mesh(self, tp: int) -> Mesh:
-        assert self.W % tp == 0
-        dev = np.array(self.devices).reshape(self.W // tp, tp)
-        return Mesh(dev, (REP, TP))
+        from repro.launch.mesh import make_instance_mesh
+        return make_instance_mesh(self.devices, tp)
 
     def _shardings(self, pspec_tree, mesh: Optional[Mesh] = None):
-        mesh = mesh or self.mesh
-        return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspec_tree,
-                            is_leaf=lambda x: isinstance(x, P))
+        from repro.core.transform_engine import shard_tree
+        return shard_tree(pspec_tree, mesh or self.mesh)
 
     # -- the paper's §4: the transformation itself -------------------------
     def transform(self, new_tp: int) -> None:
         """Cross-instance parallelism transformation: re-factorize the mesh
         and reshard every live array (weights + KV pools) to it."""
+        assert self._session is None, (
+            "scheduled transformation in progress: the live state is the "
+            "session's per-layer view, not self.params/self.caches")
         if new_tp == self.tp:
             return
         new_mesh = self._mesh(new_tp)
@@ -179,6 +191,41 @@ class InstanceGroup:
         self.mesh = new_mesh
         self.tp = new_tp
         self.transform_count += 1
+
+    # -- §4.3: the scheduled transformation (step-by-step data plane) ------
+    def begin_transform(self, new_tp: int, layers_per_step: int = 1,
+                        interpret=None):
+        """Start a step-wise transformation: unstack to per-layer state,
+        build the §4.3 schedule (MLP-first on scale-up, layer-staggered on
+        scale-down, reversed traversal) and return the live
+        ``TransformSession``.  While the session is open, ``decode`` runs
+        through the per-layer path so serving continues between steps."""
+        from repro.core import transform_engine as TE
+
+        return TE.open_owner_session(
+            self, new_tp, self._mesh(new_tp),
+            param_spec_fn=lambda t: param_pspecs(t, self.transform_attn),
+            cache_spec_fn=layer_cache_pspecs,
+            layers_per_step=layers_per_step, interpret=interpret)
+
+    def finish_transform(self) -> None:
+        """Restack per-layer state once every schedule step has run."""
+        from repro.core import transform_engine as TE
+
+        TE.close_owner_session(self)
+        self.transform_count += 1
+
+    def transform_scheduled(self, new_tp: int, layers_per_step: int = 1,
+                            between_steps=None, interpret=None):
+        """Run a full scheduled transformation; ``between_steps(report)``
+        fires after each step (e.g. to interleave decode iterations).
+        Returns the per-step ``StepReport`` list."""
+        if new_tp == self.tp:
+            return []
+        session = self.begin_transform(new_tp, layers_per_step, interpret)
+        reports = session.run(between_steps)
+        self.finish_transform()
+        return reports
 
     # -- serving ------------------------------------------------------------
     def _decode_fn(self):
@@ -193,14 +240,24 @@ class InstanceGroup:
         return self._decode_jit[self.tp]
 
     def prefill(self, batch: Dict[str, jax.Array]) -> jax.Array:
+        assert self._session is None, (
+            "scheduled transformation in progress: prefill would write "
+            "into the stale stacked caches that finish_transform discards")
         cfg, plan = self.cfg, self.plan
-        with jax.set_mesh(self.mesh):
+        with mesh_context(self.mesh):
             logits, self.caches = M.prefill(self.params, cfg, plan, batch,
                                             self.caches)
         return logits
 
     def decode(self, tokens: jax.Array, positions: jax.Array) -> jax.Array:
-        with jax.set_mesh(self.mesh):
+        if self._session is not None:
+            # mid-transformation: layers live on mixed mesh
+            # factorizations, so decode runs the per-layer path
+            s = self._session
+            logits, s.layers = M.decode_step_layers(
+                s.layers, s.static, self.cfg, self.plan, tokens, positions)
+            return logits
+        with mesh_context(self.mesh):
             logits, self.caches = self._decode_fn()(
                 self.params, self.caches, tokens, positions)
         return logits

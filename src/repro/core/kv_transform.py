@@ -25,6 +25,7 @@ Two planes:
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -63,10 +64,16 @@ class MigrationStats:
     stages: int = 1
 
     def time_s(self, link: LinkModel, overlap: bool = False) -> float:
-        t = (self.bytes_moved / link.bandwidth
-             + self.segments * link.segment_overhead
-             + self.trim_bytes / link.bandwidth)  # trim = local copy @ BW
-        return t * (1.0 - link.overlap_fraction) if overlap else t
+        # interconnect traffic + per-segment launch overhead can hide
+        # behind decode compute (§4.1 "Overlapping") ...
+        transfer = (self.bytes_moved / link.bandwidth
+                    + self.segments * link.segment_overhead)
+        if overlap:
+            transfer *= 1.0 - link.overlap_fraction
+        # ... but trims are LOCAL HBM copies serialized with the pool
+        # compaction on the critical path — the async-DMA stream does not
+        # hide them, so the token-first baseline pays them in full.
+        return transfer + self.trim_bytes / link.bandwidth
 
 
 # ---------------------------------------------------------------------------
@@ -213,3 +220,114 @@ def reshard_scale_down(pool: jax.Array, n_workers: int,
         return jax.lax.with_sharding_constraint(split, out_sharding)
 
     return go(pool)
+
+
+# ---------------------------------------------------------------------------
+# Data plane: the explicit kernel path (paper §4.1 as written)
+# ---------------------------------------------------------------------------
+#
+# ``reshard_scale_up`` above delegates the all-to-all to GSPMD; the paper
+# instead hand-implements it: each worker extracts contiguous
+# per-(page, head-slice) send segments, exchanges them, and DMAs arrivals
+# into its local pool.  ``migrate_scale_up_sharded`` is that pipeline —
+# pallas gather kernel -> lax.all_to_all -> placement — run per device
+# under shard_map, so it executes on a fake-device CPU mesh and on real
+# TPUs alike.  Content-equivalence with the GSPMD path is asserted in
+# tests/test_transform_integration.py.
+
+@functools.lru_cache(maxsize=64)
+def _sharded_migration_jit(direction: str, mesh: jax.sharding.Mesh,
+                           axis: str, shape: Tuple[int, ...], dtype,
+                           interpret: Optional[bool]):
+    """Jitted shard_map pipeline, cached so repeated schedule steps with
+    the same geometry reuse one compiled collective instead of
+    re-tracing per call (step timing then measures the migration, not
+    the compile)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P_
+
+    from repro.kernels import page_migrate as PM
+
+    W = mesh.shape[axis]
+    if direction == "up":
+        NPt, H, _, Pg, dh = shape
+        assert NPt % W == 0 and H % W == 0, (shape, W)
+        NP = NPt // W
+        hps = H // W
+
+        def per_worker(local):                  # local: (NP, H, 2, P, dh)
+            # send buffer for peer u = my pages' head-slice u — one
+            # contiguous segment per (page, destination): the
+            # header-centric property
+            pages = jnp.tile(jnp.arange(NP, dtype=jnp.int32), W)
+            hblk = jnp.repeat(jnp.arange(W, dtype=jnp.int32), NP)
+            send = PM.gather_page_slices(local, pages, hblk,
+                                         heads_per_slice=hps,
+                                         interpret=interpret)
+            send = send.reshape(W, NP, hps, 2, Pg, dh)
+            recv = jax.lax.all_to_all(send, axis, split_axis=0,
+                                      concat_axis=0, tiled=False)
+            # recv[u, p] = peer u's page p, my head slice; global page id
+            # u*NP + p -> local placement is the identity layout
+            return recv.reshape(W * NP, hps, 2, Pg, dh)
+
+        in_specs, out_specs = P_(axis), P_(None, axis)
+    else:
+        # shape is the GLOBAL pool: heads sharded over the axis, so the
+        # per-worker slice width is H/W
+        NPt, H, _, Pg, dh = shape
+        assert NPt % W == 0 and H % W == 0, (shape, W)
+        NP = NPt // W
+        hps = H // W
+
+        def per_worker(local):             # local: (NPt, hps, 2, P, dh)
+            # ship to peer u my head-slice of u's pages [u*NP, (u+1)*NP)
+            pages = jnp.arange(NPt, dtype=jnp.int32)
+            zeros = jnp.zeros((NPt,), jnp.int32)
+            send = PM.gather_page_slices(local, pages, zeros,
+                                         heads_per_slice=hps,
+                                         interpret=interpret)
+            send = send.reshape(W, NP, hps, 2, Pg, dh)
+            recv = jax.lax.all_to_all(send, axis, split_axis=0,
+                                      concat_axis=0, tiled=False)
+            # recv[u, p] = head-slice u of my local page p: scatter each
+            # into head block u of page p (in-place adopt; dst aliased)
+            dst = jnp.zeros((NP, W * hps, 2, Pg, dh), dtype)
+            src_pages = jnp.arange(W * NP, dtype=jnp.int32)
+            src_zeros = jnp.zeros((W * NP,), jnp.int32)
+            dst_pages = jnp.tile(jnp.arange(NP, dtype=jnp.int32), W)
+            dst_hblk = jnp.repeat(jnp.arange(W, dtype=jnp.int32), NP)
+            return PM.copy_page_slices(
+                recv.reshape(W * NP, hps, 2, Pg, dh), dst, src_pages,
+                src_zeros, dst_pages, dst_hblk, heads_per_slice=hps,
+                interpret=interpret)
+
+        in_specs, out_specs = P_(None, axis), P_(axis)
+
+    return jax.jit(shard_map(per_worker, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False))
+
+
+def migrate_scale_up_sharded(pool: jax.Array, mesh: jax.sharding.Mesh,
+                             axis: str, *,
+                             interpret: Optional[bool] = None) -> jax.Array:
+    """Header-centric TP1 x W -> TPW on a 1-D device axis.
+
+    pool: global (NP_total, H, 2, P, dh), page-sharded over ``axis``
+    (each of the W workers holds NP_total/W local pages, all heads).
+    Returns the same logical array head-sharded over ``axis`` (every
+    worker: all pages, its H/W head slice) — moved by the explicit
+    gather-kernel + all_to_all data plane.
+    """
+    return _sharded_migration_jit("up", mesh, axis, pool.shape,
+                                  pool.dtype, interpret)(pool)
+
+
+def migrate_scale_down_sharded(pool: jax.Array, mesh: jax.sharding.Mesh,
+                               axis: str, *,
+                               interpret: Optional[bool] = None
+                               ) -> jax.Array:
+    """Reverse of ``migrate_scale_up_sharded``: head-sharded -> page-
+    sharded, via per-(page, head-slice) send segments + scatter kernel."""
+    return _sharded_migration_jit("down", mesh, axis, pool.shape,
+                                  pool.dtype, interpret)(pool)

@@ -9,18 +9,26 @@ Builds per-layer transformation *schedules* implementing:
   * reversed traversal — last layer first, so in-flight requests cross the
     parallelism boundary exactly once.
 
-The schedule is consumed two ways: the cost benchmark (Fig. 11) integrates
-per-step overheads, and ``Instance.transform`` executes steps between
-decode iterations.
+The schedule is consumed three ways: the cost benchmark (Fig. 11)
+integrates per-step overheads, ``InstanceGroup.transform_scheduled``
+executes all steps back-to-back, and ``serving.Engine.transform`` runs
+one ``TransformSession.step()`` between decode iterations so migration
+overlaps serving.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import List, Literal, Tuple
+from typing import Any, Callable, Dict, List, Literal, Optional, Tuple
+
+import jax
 
 from repro.configs.base import ModelConfig
 from repro.core import weight_transform as WT
-from repro.core.kv_transform import LinkModel, MigrationStats, account_scale_up
+from repro.core.kv_transform import (LinkModel, MigrationStats, TPU_ICI,
+                                     account_scale_up,
+                                     migrate_scale_down_sharded,
+                                     migrate_scale_up_sharded)
 from repro.core.padding import PaddingPlan
 
 Component = Literal["mlp", "kv"]
@@ -99,3 +107,308 @@ def seesaw_cost(cfg: ModelConfig, plan: PaddingPlan, n_layers: int,
     through CPU shared memory — every byte crosses PCIe twice."""
     w_bytes = WT.mlp_layer_bytes(cfg, plan, padded=False) * n_layers
     return 2.0 * w_bytes / host_bw
+
+
+# ---------------------------------------------------------------------------
+# Schedule execution: the live data plane (§4.3 made real)
+# ---------------------------------------------------------------------------
+
+def shard_tree(pspec_tree, mesh):
+    """NamedShardings for a PartitionSpec tree on ``mesh`` (shared by the
+    instance group, the serving engine and the session executor)."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def begin_session(params, caches, cfg: ModelConfig, plan: PaddingPlan,
+                  tp_from: int, tp_to: int, mesh_from, mesh_to,
+                  param_spec_fn: Callable[[Any], Any],
+                  cache_spec_fn: Callable[[Any], Any], page_tokens: int,
+                  layers_per_step: int = 1,
+                  storage_layout: str = "header_centric",
+                  interpret: Optional[bool] = None) -> "TransformSession":
+    """Unstack stacked params/caches, build the §4.3 schedule for the
+    requested direction and return the live ``TransformSession``.  One
+    entry point for both ``InstanceGroup`` and the serving ``Engine`` so
+    the two transform paths cannot drift."""
+    from repro.models import model as M
+
+    if tp_to == tp_from:
+        raise ValueError(f"already at tp={tp_from}; scheduled "
+                         "transformation needs a different target degree")
+    layers, static = M.unstack_decode_state(params, cfg, caches)
+    n = len(layers)
+    if tp_to > tp_from:
+        sched = scale_up_schedule(n, layers_per_step, tp_from, tp_to)
+    else:
+        sched = scale_down_schedule(n, layers_per_step, tp_from, tp_to)
+    return TransformSession(
+        layers, static, sched, cfg, plan, mesh_from=mesh_from,
+        mesh_to=mesh_to, param_spec_fn=param_spec_fn,
+        cache_spec_fn=cache_spec_fn, page_tokens=page_tokens,
+        storage_layout=storage_layout, interpret=interpret)
+
+
+def finish_session(session: "TransformSession", cfg: ModelConfig):
+    """Restack a drained session back into the stacked decode
+    representation; returns (params, caches)."""
+    from repro.models import model as M
+
+    assert session.done, "schedule steps remain"
+    return M.restack_decode_state(session.layers, session.static, cfg)
+
+
+def open_owner_session(owner, tp_to: int, mesh_to, param_spec_fn,
+                       cache_spec_fn, layers_per_step: int = 1,
+                       storage_layout: str = "header_centric",
+                       interpret: Optional[bool] = None
+                       ) -> "TransformSession":
+    """Shared session lifecycle for anything owning stacked
+    ``params/caches/cfg/plan/tp/mesh/_session`` (the instance group and
+    the serving engine): open the session, hand ownership of the live
+    state to its per-layer view, and drop the stacked originals so the
+    rest of the transformation holds one copy.  (The unstack itself
+    still transiently copies every leaf while the originals are alive —
+    the representation change is eager — so the 2x peak moves to this
+    call, not the per-step migrations.)"""
+    assert owner._session is None, "transformation already in progress"
+    session = begin_session(
+        owner.params, owner.caches, owner.cfg, owner.plan,
+        tp_from=owner.tp, tp_to=tp_to, mesh_from=owner.mesh,
+        mesh_to=mesh_to, param_spec_fn=param_spec_fn,
+        cache_spec_fn=cache_spec_fn, page_tokens=owner.page_tokens,
+        layers_per_step=layers_per_step, storage_layout=storage_layout,
+        interpret=interpret)
+    owner._session = session
+    owner.params = owner.caches = None
+    return session
+
+
+def close_owner_session(owner) -> "TransformSession":
+    """Restack the drained session into the owner and flip its mesh/tp."""
+    session = owner._session
+    assert session is not None
+    owner.params, owner.caches = finish_session(session, owner.cfg)
+    owner.mesh = session.mesh_to
+    owner.tp = session.schedule.tp_to
+    owner._session = None
+    return session
+
+
+@dataclass
+class StepReport:
+    """What one executed schedule step did, measured vs. modeled."""
+    ops: List[TransformOp]
+    seconds: float                 # wall time, arrays block_until_ready
+    modeled_s: float               # accounting-plane prediction
+    kernel_plane: bool = False     # pallas gather/scatter + all_to_all?
+
+
+class TransformSession:
+    """Executes a ``Schedule`` step-by-step against per-layer state.
+
+    The state is the unstacked form produced by
+    ``models.model.unstack_decode_state``: a list of per-layer
+    ``{"kind", "params", "cache"}`` entries (every leaf its own
+    jax.Array, so each layer can live on its own mesh factorization
+    mid-transform) plus the non-layer ``static`` params.
+
+    Each ``step()`` executes the next schedule step:
+
+      * ``mlp`` ops re-shard the layer's weights to the target mesh (the
+        padded layout makes this pure page adoption/release; MLP
+        dominates the bytes — attention weights ride along per DESIGN.md
+        §6);
+      * ``kv`` ops migrate the layer's page pool.  When the transform is
+        a full merge/decompose (TP1 x W <-> TPW over all W devices) the
+        explicit data plane runs — pallas per-(page, head-slice) gather/
+        scatter kernels around a ``lax.all_to_all`` — otherwise a GSPMD
+        ``device_put`` reshard performs the same movement.
+
+    Between ``step()`` calls the owner keeps serving through the
+    per-layer decode path; ``done`` flips once every step has executed
+    and the owner restacks.
+    """
+
+    def __init__(self, layers: List[Dict[str, Any]],
+                 static: Dict[str, Any], schedule: Schedule,
+                 cfg: ModelConfig, plan: PaddingPlan,
+                 mesh_from, mesh_to,
+                 param_spec_fn: Callable[[Any], Any],
+                 cache_spec_fn: Callable[[Any], Any],
+                 page_tokens: int, link: LinkModel = TPU_ICI,
+                 storage_layout: str = "header_centric",
+                 interpret: Optional[bool] = None):
+        self.layers = layers
+        self.static = static
+        self.schedule = schedule
+        self.cfg, self.plan = cfg, plan
+        self.mesh_from, self.mesh_to = mesh_from, mesh_to
+        self._pspec = param_spec_fn
+        self._cspec = cache_spec_fn
+        self.page_tokens = page_tokens
+        self.link = link
+        self.storage_layout = storage_layout
+        self.interpret = interpret
+        self.reports: List[StepReport] = []
+        self._next = 0
+        self._tp_axis = "tp"
+
+    # -- progress -------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self._next >= self.schedule.n_steps
+
+    @property
+    def steps_remaining(self) -> int:
+        return self.schedule.n_steps - self._next
+
+    # -- helpers --------------------------------------------------------
+    def _shardings(self, pspec_tree, mesh):
+        return shard_tree(pspec_tree, mesh)
+
+    def _kernel_plane_eligible(self, pool: jax.Array) -> bool:
+        """The explicit kernel path handles the paper's canonical case: a
+        full merge (every device TP1 -> one TPW group) or decompose, with
+        the canonical 5-D header-centric pool and divisible heads/pages.
+        Token-first storage layouts fragment every page (Table 2), so
+        they take the GSPMD fallback — the accounting plane charges them
+        for exactly that."""
+        from repro.paged import layout as L
+        sched = self.schedule
+        W = self.mesh_to.size
+        if pool.ndim != 5 or not L.heads_contiguous(self.storage_layout):
+            return False
+        NPt, kvs = pool.shape[0], pool.shape[1]
+        full_up = (sched.direction == "up" and sched.tp_from == 1
+                   and sched.tp_to == W)
+        full_down = (sched.direction == "down" and sched.tp_to == 1
+                     and sched.tp_from == W)
+        return ((full_up or full_down) and kvs % W == 0 and NPt % W == 0)
+
+    def _flat_mesh(self):
+        import numpy as np
+        from jax.sharding import Mesh
+        return Mesh(np.asarray(self.mesh_to.devices).reshape(-1), ("x",))
+
+    def _migrate_pool(self, pool: jax.Array,
+                      pool_spec) -> Tuple[jax.Array, bool]:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        target = self._shardings(pool_spec, self.mesh_to)
+        if self._kernel_plane_eligible(pool):
+            flat = self._flat_mesh()
+            if self.schedule.direction == "up":
+                # page-sharded -> head-sharded through the send/recv
+                # kernels (one contiguous segment per (page, dst) pair)
+                src = jax.device_put(pool, NamedSharding(flat, P("x")))
+                out = migrate_scale_up_sharded(src, flat, "x",
+                                               interpret=self.interpret)
+            else:
+                src = jax.device_put(pool,
+                                     NamedSharding(flat, P(None, "x")))
+                out = migrate_scale_down_sharded(src, flat, "x",
+                                                 interpret=self.interpret)
+            # re-express on the owner's (rep, tp) mesh — same devices,
+            # same per-device bytes: a metadata move, not a copy
+            return jax.device_put(out, target), True
+        return jax.device_put(pool, target), False
+
+    def _modeled_op_s(self, op: TransformOp, cache) -> float:
+        sched = self.schedule
+        if op.component == "mlp":
+            acct = (WT.account_scale_up if sched.direction == "up"
+                    else WT.account_scale_down)
+            tp = sched.tp_to if sched.direction == "up" else sched.tp_from
+            return acct(self.cfg, self.plan, tp, "padded").time_s(
+                self.link, overlap=op.overlap)
+        pool = getattr(cache, "pool", None)
+        if pool is None:
+            return 0.0
+        # the accounting plane models a TP1 x k -> TPk merge; a partial
+        # transform a -> b re-splits heads among groups of k = max/min
+        # workers, so k (not max(tp)) sets the (k-1)/k moved fraction.
+        # Bytes and segments match on decompose by all-to-all symmetry.
+        lo = max(1, min(sched.tp_from, sched.tp_to))
+        k = max(sched.tp_from, sched.tp_to) // lo
+        stats = account_scale_up(
+            self.storage_layout, max(2, k), max(1, pool.shape[0] // k),
+            pool.shape[1], self.page_tokens, pool.shape[-1],
+            dtype_bytes=pool.dtype.itemsize)
+        return stats.time_s(self.link, overlap=op.overlap)
+
+    # -- execution ------------------------------------------------------
+    def step(self) -> StepReport:
+        """Execute the next schedule step; blocks until the moved arrays
+        are resident so the measured time is the real migration cost."""
+        assert not self.done, "schedule exhausted"
+        ops = self.schedule.steps[self._next]
+        used_kernel = False
+        modeled = 0.0
+        t0 = time.perf_counter()
+        moved: List[jax.Array] = []
+        for op in ops:
+            layer = self.layers[op.layer]
+            modeled += self._modeled_op_s(op, layer["cache"])
+            if op.component == "mlp":
+                shardings = self._shardings(self._pspec(layer["params"]),
+                                            self.mesh_to)
+                layer["params"] = jax.device_put(layer["params"], shardings)
+                moved.extend(jax.tree.leaves(layer["params"]))
+            else:
+                layer["cache"], used = self._migrate_cache(layer["cache"])
+                used_kernel |= used
+                moved.extend(jax.tree.leaves(layer["cache"]))
+        if self._next + 1 >= self.schedule.n_steps:
+            # non-layer params (embed/head: replicated) ride the last
+            # step onto the target mesh — inside the timed region so the
+            # step's measured cost covers everything it moves
+            self.static = jax.device_put(
+                self.static, self._shardings(self._pspec(self.static),
+                                             self.mesh_to))
+            moved.extend(jax.tree.leaves(self.static))
+        for a in moved:
+            a.block_until_ready()
+        rep = StepReport(ops=ops, seconds=time.perf_counter() - t0,
+                         modeled_s=modeled, kernel_plane=used_kernel)
+        self.reports.append(rep)
+        self._next += 1
+        return rep
+
+    def _migrate_cache(self, cache) -> Tuple[Any, bool]:
+        """Returns (migrated cache, whether the kernel plane ran)."""
+        from repro.paged.pool import PagedState
+        cspecs = self._cspec(cache)
+        used_kernel = False
+
+        def visit(c, spec):
+            nonlocal used_kernel
+            if isinstance(c, PagedState):
+                pool, used = self._migrate_pool(c.pool, spec.pool)
+                used_kernel |= used
+                meta = jax.device_put(
+                    (c.page_table, c.seq_lens, c.positions),
+                    self._shardings((spec.page_table, spec.seq_lens,
+                                     spec.positions), self.mesh_to))
+                return PagedState(pool, *meta)
+            if isinstance(c, dict):
+                return {k: visit(c[k], spec[k]) for k in c}
+            if isinstance(c, (list, tuple)):
+                out = [visit(a, b) for a, b in zip(c, spec)]
+                return tuple(out) if isinstance(c, tuple) else out
+            return jax.device_put(
+                c, self._shardings(spec, self.mesh_to))
+
+        return visit(cache, cspecs), used_kernel
+
+    def run(self, between_steps: Optional[Callable[[StepReport], None]]
+            = None) -> List[StepReport]:
+        """Execute every remaining step; ``between_steps`` fires after
+        each one (the Instance uses it to interleave decode work)."""
+        while not self.done:
+            rep = self.step()
+            if between_steps is not None:
+                between_steps(rep)
+        return self.reports

@@ -1,0 +1,300 @@
+"""Pallas TPU kernel: header-centric KV page migration (paper §4.1).
+
+The paper's core data-plane claim: with the header-centric layout
+``(block, head, kv, token, head_dim)`` a TP transformation moves each
+page as a handful of *contiguous* per-(page, head-slice) segments — one
+DMA per (page, destination-worker) pair — instead of the
+``2 * page_tokens`` fragments the token-first layouts produce.  This
+module is that DMA engine:
+
+  * ``copy_page_slices`` — the primitive: grid step ``i`` copies the
+    ``heads_per_slice``-wide head-slice ``src_hblocks[i]`` of page
+    ``src_pages[i]`` into head-slice ``dst_hblocks[i]`` of page
+    ``dst_pages[i]``.  Source/destination page ids and head blocks are
+    scalar-prefetched so the BlockSpec index maps drive the DMA directly
+    (same idiom as ``paged_attention``); the destination pool is aliased
+    in place, so unvisited pages are untouched — this is what makes the
+    header-centric trim O(1): keeping a head-slice is ONE block copy.
+  * ``gather_page_slices`` — send-buffer extraction: pack a list of
+    (page, head-slice) segments into a fresh contiguous buffer (what a
+    worker ships to each peer).
+  * ``migrate_scale_up_local`` / ``migrate_scale_down_local`` — whole
+    TP1xW <-> TPW migrations of W per-worker pools, single host.  Used to
+    validate the kernel against ``kv_transform.merge_pools_local`` and to
+    measure real wall time in ``benchmarks/bench_kv_transform.py``.
+  * ``migrate_scale_up_staged`` — the phased protocol of Fig. 5d: each
+    stage receives 1/n_stages of the incoming slices into *physical* page
+    slots and then frees the local pages it shipped, whose slots the next
+    stage reuses.  Returns the measured peak page occupancy so tests can
+    check it against ``kv_transform.simulate_phased_migration``.
+
+Everything is validated in interpret mode on CPU
+(tests/test_page_migrate.py); ``interpret=None`` auto-enables interpret
+off-TPU so the serving engine can call the same entry points everywhere.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _copy_kernel(src_pg, src_hb, dst_pg, dst_hb, src_ref, dst_in_ref,
+                 dst_ref):
+    # one contiguous (1, heads_per_slice, 2, P, dh) segment per grid step;
+    # the block index maps have already pointed both DMAs at the right
+    # (page, head-slice) windows, so the body is a pure VMEM copy.
+    del src_pg, src_hb, dst_pg, dst_hb, dst_in_ref
+    dst_ref[...] = src_ref[...]
+
+
+def copy_page_slices(src: jax.Array, dst: jax.Array, src_pages: jax.Array,
+                     src_hblocks: jax.Array, dst_pages: jax.Array,
+                     dst_hblocks: jax.Array, *, heads_per_slice: int,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Scatter head-slices between header-centric pools, in place.
+
+    src: (NPs, Hs, 2, P, dh); dst: (NPd, Hd, 2, P, dh) — returns dst with
+    segment ``i`` (= ``heads_per_slice`` heads starting at
+    ``src_hblocks[i] * heads_per_slice`` of page ``src_pages[i]``) written
+    at (``dst_pages[i]``, ``dst_hblocks[i] * heads_per_slice``).  Pages
+    not named in ``dst_pages`` keep their contents (dst is aliased).
+    """
+    n = src_pages.shape[0]
+    hps = heads_per_slice
+    _, Hs, _, P, dh = src.shape
+    _, Hd, _, _, _ = dst.shape
+    assert Hs % hps == 0 and Hd % hps == 0, (Hs, Hd, hps)
+    blk = (1, hps, 2, P, dh)
+
+    def src_index(i, spg, shb, dpg, dhb):
+        return (spg[i], shb[i], 0, 0, 0)
+
+    def dst_index(i, spg, shb, dpg, dhb):
+        return (dpg[i], dhb[i], 0, 0, 0)
+
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(n,),
+            in_specs=[pl.BlockSpec(blk, src_index),
+                      pl.BlockSpec(blk, dst_index)],
+            out_specs=pl.BlockSpec(blk, dst_index),
+        ),
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        input_output_aliases={5: 0},  # dst (after 4 prefetch args + src)
+        interpret=_auto_interpret(interpret),
+    )(src_pages.astype(jnp.int32), src_hblocks.astype(jnp.int32),
+      dst_pages.astype(jnp.int32), dst_hblocks.astype(jnp.int32), src, dst)
+
+
+def _gather_kernel(pg, hb, src_ref, out_ref):
+    del pg, hb
+    out_ref[...] = src_ref[...]
+
+
+def gather_page_slices(pool: jax.Array, pages: jax.Array,
+                       hblocks: jax.Array, *, heads_per_slice: int,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Pack (page, head-slice) segments into a contiguous send buffer.
+
+    pool: (NP, H, 2, P, dh) header-centric.  Returns
+    (n, heads_per_slice, 2, P, dh) with row ``i`` = the
+    ``hblocks[i]``-th head-slice of page ``pages[i]``.
+    """
+    n = pages.shape[0]
+    hps = heads_per_slice
+    _, H, _, P, dh = pool.shape
+    assert H % hps == 0, (H, hps)
+
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(n,),
+            in_specs=[pl.BlockSpec((1, hps, 2, P, dh),
+                                   lambda i, pg, hb: (pg[i], hb[i], 0, 0, 0))],
+            out_specs=pl.BlockSpec((1, hps, 2, P, dh),
+                                   lambda i, pg, hb: (i, 0, 0, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, hps, 2, P, dh), pool.dtype),
+        interpret=_auto_interpret(interpret),
+    )(pages.astype(jnp.int32), hblocks.astype(jnp.int32), pool)
+
+
+# ---------------------------------------------------------------------------
+# Whole-migration drivers (single host, W per-worker pools)
+# ---------------------------------------------------------------------------
+
+def migrate_scale_up_local(pools: jax.Array, *,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """TP1 x W -> TPW on W per-worker pools, all kernel traffic.
+
+    pools: (W, NP, H, 2, P, dh) — worker w's local pages, all heads.
+    Returns (W, W*NP, H/W, 2, P, dh) — worker w's post-migration pool:
+    every global page (u*NP + p), its head-slice w.  Matches
+    ``kv_transform.merge_pools_local`` restricted to each worker's heads.
+    """
+    W, NP, H, _, P, dh = pools.shape
+    assert H % W == 0, (H, W)
+    hps = H // W
+    # each worker extracts, for every destination u, its pages' slice u:
+    # (paper Fig. 5c — per-(page, head-slice) contiguous segments)
+    pages = jnp.tile(jnp.arange(NP, dtype=jnp.int32), W)       # (W*NP,)
+    hblk = jnp.repeat(jnp.arange(W, dtype=jnp.int32), NP)      # (W*NP,)
+    send = jax.vmap(
+        lambda pool: gather_page_slices(pool, pages, hblk,
+                                        heads_per_slice=hps,
+                                        interpret=interpret))(pools)
+    # send[w, u*NP + p] = worker w page p, head-slice u.  The "network":
+    # worker u receives from every w — transpose the worker/slice axes.
+    send = send.reshape(W, W, NP, hps, 2, P, dh)
+    recv = send.transpose(1, 0, 2, 3, 4, 5, 6)   # recv[u, w, p] from w
+    # scatter into each destination pool at global page id w*NP + p
+    dst = jnp.zeros((W, W * NP, hps, 2, P, dh), pools.dtype)
+    src_pages = jnp.arange(W * NP, dtype=jnp.int32)
+    zeros = jnp.zeros((W * NP,), jnp.int32)
+    return jax.vmap(
+        lambda buf, d: copy_page_slices(
+            buf.reshape(W * NP, hps, 2, P, dh), d, src_pages, zeros,
+            src_pages, zeros, heads_per_slice=hps, interpret=interpret)
+    )(recv, dst)
+
+
+def migrate_scale_down_local(pools: jax.Array, *,
+                             interpret: Optional[bool] = None) -> jax.Array:
+    """TPW -> TP1 x W reverse: pools (W, W*NP, H/W, 2, P, dh) ->
+    (W, NP, H, 2, P, dh).  Worker w keeps pages [w*NP, (w+1)*NP) and
+    receives their other head-slices from every peer."""
+    W, NPt, hps, _, P, dh = pools.shape
+    assert NPt % W == 0, (NPt, W)
+    NP = NPt // W
+    H = hps * W
+    # worker w ships, to each u, its head-slice of u's page range
+    pages = jnp.arange(NPt, dtype=jnp.int32)                    # (W*NP,)
+    zeros = jnp.zeros((NPt,), jnp.int32)
+    send = jax.vmap(
+        lambda pool: gather_page_slices(pool, pages, zeros,
+                                        heads_per_slice=hps,
+                                        interpret=interpret))(pools)
+    send = send.reshape(W, W, NP, hps, 2, P, dh)  # [w, u, p] slice w of
+    recv = send.transpose(1, 0, 2, 3, 4, 5, 6)    # u's page p
+    # destination: full-head pools; slice from worker w lands at head
+    # block w of local page p
+    dst = jnp.zeros((W, NP, H, 2, P, dh), pools.dtype)
+    src_pages = jnp.arange(W * NP, dtype=jnp.int32)
+    src_zeros = jnp.zeros((W * NP,), jnp.int32)
+    dst_pages = jnp.tile(jnp.arange(NP, dtype=jnp.int32), W)
+    dst_hblk = jnp.repeat(jnp.arange(W, dtype=jnp.int32), NP)
+    return jax.vmap(
+        lambda buf, d: copy_page_slices(
+            buf.reshape(W * NP, hps, 2, P, dh), d, src_pages, src_zeros,
+            dst_pages, dst_hblk, heads_per_slice=hps, interpret=interpret)
+    )(recv, dst)
+
+
+# ---------------------------------------------------------------------------
+# Staged migration (Fig. 5d): freed-page reuse under bounded headroom
+# ---------------------------------------------------------------------------
+
+def migrate_scale_up_staged(pools: jax.Array, n_stages: int,
+                            headroom_pages: int, *,
+                            interpret: Optional[bool] = None
+                            ) -> Tuple[jax.Array, int]:
+    """Phased TP1 x W -> TPW through a bounded physical pool.
+
+    The physical model behind ``simulate_phased_migration``: worker w's
+    HBM holds ``NP + headroom_pages`` fixed-size page slots.  Because the
+    header-centric layout keeps heads major inside a block, one physical
+    slot is exactly W contiguous *frames* of the post-migration page
+    geometry ``(H/W, 2, P, dh)`` — so sub-page free space is contiguous
+    and individually reusable (the Fig. 5b-vs-5c distinction).  Each
+    stage, driven host-side like the real control plane:
+
+      1. receives its share of incoming remote slices into free frames
+         (one ``copy_page_slices`` scatter — the DMA);
+      2. ships 1/n_stages of its local pages; their non-kept frames are
+         dead and, after the metadata exchange, usable by the *next*
+         stage's arrivals.
+
+    Returns (result, peak_pages) where result matches
+    ``migrate_scale_up_local`` exactly and peak_pages is the measured
+    transient occupancy (in page units) to compare against
+    ``kv_transform.simulate_phased_migration``.  Raises RuntimeError if a
+    stage would overflow the physical pool (protocol violation).
+    """
+    W, NP, H, _, P, dh = pools.shape
+    assert H % W == 0, (H, W)
+    hps = H // W
+    frames_cap = (NP + headroom_pages) * W
+    pools_np = np.asarray(pools)
+
+    send_total = NP * (W - 1) // W        # page-equivalents, as simulated
+    recv_total = send_total
+    per_stage = max(1, -(-recv_total // n_stages))
+
+    out = np.zeros((W, W * NP, hps, 2, P, dh), pools_np.dtype)
+    peak_pages = NP
+    for w in range(W):
+        # frame pool: local page p's H heads occupy frames [p*W, (p+1)*W);
+        # its kept slice w is frame p*W + w and never moves (O(1) trim).
+        frames = jnp.zeros((frames_cap, hps, 2, P, dh), pools.dtype)
+        frames = frames.at[:NP * W].set(
+            pools[w].reshape(NP * W, hps, 2, P, dh))
+        free: List[int] = list(range(NP * W, frames_cap))
+        # this worker's frame for global page w*NP+p:
+        frame_of = {(w, p): p * W + w for p in range(NP)}
+        # arrival order: stage-interleaved round-robin over peers
+        # (balanced all-to-all, paper §4.3)
+        incoming = [(u, p) for p in range(NP) for u in range(W) if u != w]
+        # dead frames released when local page p has shipped: everything
+        # but the kept slice, in page order
+        ship_queue = [p * W + u for p in range(NP) for u in range(W)
+                      if u != w]
+        sent = 0
+        live_frames = NP * W
+        while incoming or sent < send_total:
+            batch = incoming[:per_stage * W]
+            incoming = incoming[per_stage * W:]
+            if batch:
+                if len(free) < len(batch):
+                    raise RuntimeError(
+                        f"stage overflow: need {len(batch)} free frames, "
+                        f"have {len(free)} (headroom {headroom_pages} too "
+                        f"small for {n_stages} stages)")
+                slots = [free.pop(0) for _ in batch]
+                recv_buf = jnp.asarray(np.stack(
+                    [pools_np[u, p, w * hps:(w + 1) * hps]
+                     for u, p in batch]))
+                frames = copy_page_slices(
+                    recv_buf, frames,
+                    jnp.arange(len(batch), dtype=jnp.int32),
+                    jnp.zeros((len(batch),), jnp.int32),
+                    jnp.asarray(slots, jnp.int32),
+                    jnp.zeros((len(batch),), jnp.int32),
+                    heads_per_slice=hps, interpret=interpret)
+                for (u, p), s in zip(batch, slots):
+                    frame_of[(u, p)] = s
+                live_frames += len(batch)
+                peak_pages = max(peak_pages, -(-live_frames // W))
+            s = min(per_stage, send_total - sent)
+            sent += s
+            released, ship_queue = ship_queue[:s * W], ship_queue[s * W:]
+            free.extend(released)
+            live_frames -= len(released)
+        frames_np = np.asarray(frames)
+        for u in range(W):
+            for p in range(NP):
+                out[w, u * NP + p] = frames_np[frame_of[(u, p)]]
+    return jnp.asarray(out), peak_pages

@@ -182,6 +182,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+        cost = cost[0] if cost else {}
     txt = compiled.as_text()
     coll = collective_bytes(txt)
     n_dev = mesh.size

@@ -20,6 +20,21 @@ def make_host_mesh(n: int = 8):
     return jax.make_mesh((n,), ("worker",))
 
 
+def make_instance_mesh(devices, tp: int):
+    """The transformable instance-group mesh: W devices re-factorized as
+    ``(rep, tp)`` with ``rep * tp == W``.  Every TP degree of the same
+    device list reuses one PartitionSpec tree (core/instance.py) — a
+    parallelism transformation is re-factorizing this mesh and resharding
+    live arrays to it."""
+    import numpy as np
+
+    W = len(devices)
+    if W % tp:
+        raise ValueError(f"tp={tp} does not divide {W} devices")
+    dev = np.asarray(devices).reshape(W // tp, tp)
+    return jax.sharding.Mesh(dev, ("rep", "tp"))
+
+
 def batch_axes(mesh) -> tuple:
     """Axes a batch dimension shards over (pod+data when present)."""
     names = mesh.axis_names

@@ -416,3 +416,85 @@ def decode_step(params, cfg: ModelConfig, plan: PaddingPlan,
         out["cross_kv"] = caches["cross_kv"]
     logits = lm_logits(params, cfg, plan, x)[:, 0, :]
     return logits, out
+
+
+# ---------------------------------------------------------------------------
+# Per-layer (unstacked) decode: the transformation-time execution path
+# ---------------------------------------------------------------------------
+#
+# A live TP transformation moves the model ONE layer at a time (paper
+# §4.3: MLP-first / layer-staggered / reversed traversal), so mid-
+# transform different layers live on different mesh factorizations.  The
+# scan-stacked representation cannot express that (one jax.Array covers
+# every layer of a pattern position), so a transforming instance unstacks
+# into per-layer trees, decodes through this path while the schedule
+# executes, and restacks when the transformation completes.  Values are
+# bit-identical to the stacked path — only the iteration strategy
+# changes.
+
+def unstack_decode_state(params, cfg: ModelConfig, caches: Dict[str, Any]
+                         ) -> Tuple[List[Dict[str, Any]], Dict[str, Any]]:
+    """Split stacked params+caches into execution-ordered per-layer
+    entries ``{"kind", "params", "cache"}`` plus the non-layer ``static``
+    params (embed / final_ln / lm_head)."""
+    if cfg.encoder is not None or cfg.vision is not None:
+        raise NotImplementedError(
+            "per-layer transformation does not cover encoder/vision yet")
+    unit = pattern_unit(cfg)
+    G, R = group_counts(cfg)
+    layers: List[Dict[str, Any]] = []
+    for g in range(G):
+        for i, kind in enumerate(unit):
+            layers.append({
+                "kind": kind,
+                "params": _tree_index(params["blocks"][i], g),
+                "cache": _tree_index(caches["groups"][i], g),
+            })
+    for i in range(R):
+        layers.append({"kind": unit[i], "params": params["rem"][i],
+                       "cache": caches["rem"][i]})
+    static = {k: v for k, v in params.items() if k not in ("blocks", "rem")}
+    return layers, static
+
+
+def restack_decode_state(layers: List[Dict[str, Any]],
+                         static: Dict[str, Any], cfg: ModelConfig
+                         ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Inverse of ``unstack_decode_state``."""
+    unit = pattern_unit(cfg)
+    G, R = group_counts(cfg)
+    params: Dict[str, Any] = dict(static)
+    params["blocks"] = [
+        _tree_stack([layers[g * len(unit) + i]["params"]
+                     for g in range(G)])
+        for i in range(len(unit))]
+    params["rem"] = [l["params"] for l in layers[G * len(unit):]]
+    caches = {
+        "groups": [
+            _tree_stack([layers[g * len(unit) + i]["cache"]
+                         for g in range(G)])
+            for i in range(len(unit))],
+        "rem": [l["cache"] for l in layers[G * len(unit):]],
+    }
+    return params, caches
+
+
+def decode_step_layers(layers: List[Dict[str, Any]],
+                       static: Dict[str, Any], cfg: ModelConfig,
+                       plan: PaddingPlan, tokens: jax.Array,
+                       positions: jax.Array,
+                       layout: str = "header_centric",
+                       identity_pages: bool = False
+                       ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
+    """One decode step over per-layer state; numerically identical to
+    ``decode_step`` on the restacked equivalents."""
+    x = static["embed"][tokens][:, None, :]
+    pos2 = positions[:, None]
+    new_layers = []
+    for layer in layers:
+        x, c = B.apply_block_decode(layer["kind"], layer["params"], cfg,
+                                    plan, x, pos2, layer["cache"], layout,
+                                    identity_pages=identity_pages)
+        new_layers.append({**layer, "cache": c})
+    logits = lm_logits(static, cfg, plan, x)[:, 0, :]
+    return logits, new_layers

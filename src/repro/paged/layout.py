@@ -63,6 +63,16 @@ def block_axis(layout: str) -> int:
     return LAYOUTS[layout].index("block")
 
 
+def heads_contiguous(layout: str) -> bool:
+    """True iff one worker's head slice of a block is ONE contiguous
+    memory segment — the §4.1 property that lets the page-migration
+    kernel move a page as a single per-(page, head-slice) DMA.  Holds
+    exactly when no intra-block axis is major to ``head``."""
+    order = LAYOUTS[layout]
+    before = order[:order.index("head")]
+    return all(a == "block" for a in before)
+
+
 def contiguous_segments_per_block(layout: str, kv_slots: int,
                                   page_tokens: int, tp: int) -> int:
     """How many *contiguous* memory segments one block splits into when its

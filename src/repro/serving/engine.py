@@ -6,9 +6,17 @@ slot from prefill until EOS/limit, then the slot is immediately reusable.
 Prefills are executed one request per step between decode iterations
 (vLLM default).  The KV pool is slot-partitioned (identity page tables).
 
-The engine runs on a single device or on an ``InstanceGroup`` (whose TP
-degree may be transformed live between steps — that path is exercised by
-examples/serve_transform.py and the integration tests).
+Two placements:
+
+  * single device (default) — the unit-test configuration;
+  * ``devices=[...]`` — the engine owns a ``(rep, tp)`` mesh over those
+    devices (the paper's instance group) and its TP degree can be
+    **transformed live**: ``transform(tp_to)`` builds the §4.3 schedule
+    and ``step()`` executes ONE schedule step before each decode
+    iteration, so page migration (pallas gather/scatter + all_to_all)
+    interleaves with serving and in-flight request KV crosses the TP
+    boundary bit-exactly.  Exercised by tests/test_transform_integration
+    and examples/serve_transform.py.
 """
 from __future__ import annotations
 
@@ -36,13 +44,19 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 4,
                  max_seq: int = 256, page_tokens: int = 16,
                  rng: Optional[jax.Array] = None,
-                 layout: str = "header_centric"):
+                 layout: str = "header_centric",
+                 devices: Optional[List[jax.Device]] = None,
+                 transform_attn: bool = True):
         self.cfg = cfg
-        self.plan = make_plan(cfg, 1)
+        self.devices = devices
+        self.W = len(devices) if devices else 1
+        self.plan = (make_plan(cfg, self.W, mode="page") if devices
+                     else make_plan(cfg, 1))
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.page_tokens = page_tokens
         self.layout = layout
+        self.transform_attn = transform_attn
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.rng = rng
         self.params = params if params is not None else M.init_params(
@@ -52,6 +66,21 @@ class Engine:
         self.slots: List[Optional[ServeRequest]] = [None] * max_batch
         self.waiting: List[ServeRequest] = []
         self.steps = 0
+        self.tp = 1
+        self.mesh = None
+        self._session = None
+        self.transform_reports = []
+        if devices:
+            from repro.core import instance as I
+            assert layout == "header_centric", (
+                "mesh placement shards the canonical header-centric pool")
+            self.mesh = self._make_mesh(1)
+            self._pspecs = I.param_pspecs(self.params, transform_attn)
+            self._cspecs = I.cache_pspecs(self.caches)
+            self.params = jax.device_put(
+                self.params, self._shardings(self._pspecs, self.mesh))
+            self.caches = jax.device_put(
+                self.caches, self._shardings(self._cspecs, self.mesh))
 
         cfgc, planc, layoutc = cfg, self.plan, layout
 
@@ -61,6 +90,49 @@ class Engine:
                                  positions, layoutc)
 
         self._decode = _decode
+
+    # -- mesh helpers (mesh placement only) ------------------------------
+    def _make_mesh(self, tp: int):
+        from repro.launch.mesh import make_instance_mesh
+        return make_instance_mesh(self.devices, tp)
+
+    def _shardings(self, pspec_tree, mesh):
+        from repro.core.transform_engine import shard_tree
+        return shard_tree(pspec_tree, mesh)
+
+    # -- §4.3 live transformation ----------------------------------------
+    def transform(self, tp_to: int, layers_per_step: int = 1,
+                  interpret=None) -> int:
+        """Begin a live TP transformation.  Returns the number of
+        schedule steps; each subsequent ``step()`` executes one of them
+        before its decode iteration, and the engine returns to the
+        stacked fast path once the schedule drains.  In-flight requests
+        keep decoding throughout; their KV crosses the boundary
+        bit-exactly (the data plane only moves bytes)."""
+        from repro.core import instance as I
+        from repro.core import transform_engine as TE
+
+        assert self.mesh is not None, "transform requires devices="
+        assert self._session is None, "transformation already in progress"
+        if tp_to == self.tp:
+            return 0
+        session = TE.open_owner_session(
+            self, tp_to, self._make_mesh(tp_to),
+            param_spec_fn=lambda t: I.param_pspecs(t, self.transform_attn),
+            cache_spec_fn=I.layer_cache_pspecs,
+            layers_per_step=layers_per_step,
+            storage_layout=self.layout, interpret=interpret)
+        return session.schedule.n_steps
+
+    @property
+    def transforming(self) -> bool:
+        return self._session is not None
+
+    def _finish_transform(self) -> None:
+        from repro.core import transform_engine as TE
+
+        session = TE.close_owner_session(self)
+        self.transform_reports.extend(session.reports)
 
     # ------------------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
@@ -129,8 +201,16 @@ class Engine:
 
     # -- one engine iteration --------------------------------------------
     def step(self) -> Dict[str, int]:
+        # a live transformation in progress: execute ONE schedule step
+        # before this decode iteration (§4.3 — migration interleaves with
+        # serving); admissions pause until the new TP degree is resident
+        if self._session is not None:
+            if not self._session.done:
+                self._session.step()
+            if self._session.done:
+                self._finish_transform()
         # admit waiting requests into free slots (one prefill per step)
-        if self.waiting:
+        elif self.waiting:
             slot = self._free_slot()
             if slot is not None:
                 req = self.waiting.pop(0)
@@ -145,9 +225,8 @@ class Engine:
             for r in active:
                 tokens[r.slot] = r.generated[-1]
                 positions[r.slot] = r.context_len - 1
-            logits, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(tokens),
-                jnp.asarray(positions))
+            logits = self._decode_dispatch(
+                jnp.asarray(tokens), jnp.asarray(positions))
             nxt = _sample(logits, 0.0, self.rng)  # greedy batch default
             nxt = np.asarray(nxt)
             for r in active:
@@ -169,9 +248,25 @@ class Engine:
         return {"active": len(active), "waiting": len(self.waiting),
                 "emitted": emitted}
 
+    def _decode_dispatch(self, tokens: jax.Array,
+                         positions: jax.Array) -> jax.Array:
+        """One decode step on whichever representation is live: the
+        per-layer path mid-transformation (layers sit on mixed mesh
+        factorizations), the stacked jit otherwise."""
+        if self._session is not None:
+            s = self._session
+            logits, s.layers = M.decode_step_layers(
+                s.layers, s.static, self.cfg, self.plan, tokens,
+                positions, self.layout)
+            return logits
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           tokens, positions)
+        return logits
+
     def run_until_done(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if not self.waiting and all(s is None for s in self.slots):
+            if (not self.waiting and not self.transforming
+                    and all(s is None for s in self.slots)):
                 return
             self.step()
         raise RuntimeError("engine did not drain")

@@ -1,0 +1,105 @@
+"""Hypothesis, or a deterministic fallback when it is not installed.
+
+The property tests import ``given / settings / strategies`` from here
+instead of from ``hypothesis`` directly.  With hypothesis installed
+(the CI configuration — it is a declared dev dependency) the real
+library is re-exported unchanged, including the ``ci`` profile that
+``conftest.py`` registers.  Without it (minimal containers), a small
+shim runs each property test over ``max_examples`` pseudo-random
+samples drawn from a PRNG seeded by the test name — deterministic
+across runs, no shrinking, strictly weaker than hypothesis but far
+better than not collecting the module at all.
+
+Only the strategy surface this repo uses is implemented:
+``integers, floats, sampled_from, lists, tuples``.
+"""
+from __future__ import annotations
+
+try:                                    # pragma: no cover - CI path
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # the shim
+    import functools
+    import inspect
+    import random as _random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rnd: _random.Random):
+            return self._sample(rnd)
+
+    class strategies:                   # noqa: N801 - mimics module name
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda r: r.choice(seq))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=None):
+            hi = max_size if max_size is not None else min_size + 20
+
+            def sample(r):
+                n = r.randint(min_size, hi)
+                return [elem.example(r) for _ in range(n)]
+            return _Strategy(sample)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(
+                lambda r: tuple(e.example(r) for e in elems))
+
+    class settings:                     # noqa: N801
+        """Decorator recording max_examples; other kwargs accepted and
+        ignored (deadline, derandomize, ...)."""
+
+        def __init__(self, max_examples: int = 20, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._compat_max_examples = self.max_examples
+            return fn
+
+        @staticmethod
+        def register_profile(name, **_kw):
+            pass
+
+        @staticmethod
+        def load_profile(name):
+            pass
+
+    def given(*strats, **kw_strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                # @settings may sit above @given: read the attribute off
+                # the outer wrapper (where it lands) at call time
+                n = getattr(runner, "_compat_max_examples", 20)
+                rnd = _random.Random(
+                    f"repro:{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = [s.example(rnd) for s in strats]
+                    drawn_kw = {k: s.example(rnd)
+                                for k, s in kw_strats.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+            runner._compat_max_examples = getattr(
+                fn, "_compat_max_examples", 20)
+            # the drawn parameters are supplied here, not by pytest —
+            # hide the original signature so they are not mistaken for
+            # fixtures (real hypothesis does the same)
+            if hasattr(runner, "__wrapped__"):
+                del runner.__wrapped__
+            runner.__signature__ = inspect.Signature([])
+            return runner
+        return deco

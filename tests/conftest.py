@@ -1,12 +1,38 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — unit tests and benches must
-see the real single CPU device; multi-device behavior is tested via
-subprocesses (test_transform_integration / test_dryrun_small)."""
+see the host platform as-is; multi-device behavior is tested via
+subprocesses that set their own flags (test_transform_integration /
+test_dryrun_small)."""
+import os
+import random
+
 import jax
+import numpy as np
 import pytest
 
 jax.config.update("jax_threefry_partitionable", True)
+
+try:
+    from hypothesis import settings as _hsettings
+
+    # reproducible CI: fixed database-free derandomized runs; locally the
+    # default profile keeps shrinking + example database
+    _hsettings.register_profile("ci", derandomize=True, deadline=None,
+                                print_blob=True)
+    if os.environ.get("CI"):
+        _hsettings.load_profile("ci")
+except ImportError:
+    pass  # tests fall back to tests/_hypothesis_compat.py
 
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def deterministic_seeds():
+    """Every test starts from the same host-side PRNG state, so runs are
+    reproducible regardless of execution order or -k selections."""
+    random.seed(0x9796)
+    np.random.seed(0x9796)
+    yield

@@ -1,6 +1,6 @@
 """Hypothesis property tests on the page allocator invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.paged.allocator import OutOfPages, PageAllocator
 

@@ -63,6 +63,26 @@ def test_memory_saving_matches_paper_margin():
     assert saving > 0.9
 
 
+def test_trim_bytes_not_hidden_by_overlap():
+    """§4.1: trims are local HBM copies on the critical path — the
+    interconnect overlap fraction must not discount them (it previously
+    did, understating the token-first baseline's cost)."""
+    link = KT.LinkModel()
+    pf = KT.account_scale_up("page_friendly", 4, 512, 8, 64, 128)
+    assert pf.trim_bytes > 0
+    trim_s = pf.trim_bytes / link.bandwidth
+    # even with full overlap credit, the trim cost remains
+    assert pf.time_s(link, overlap=True) >= trim_s
+    transfer = (pf.bytes_moved / link.bandwidth
+                + pf.segments * link.segment_overhead)
+    expected = transfer * (1 - link.overlap_fraction) + trim_s
+    assert pf.time_s(link, overlap=True) == pytest.approx(expected)
+    # header-centric has no trims, so overlap still scales its full cost
+    hc = KT.account_scale_up("header_centric", 4, 512, 8, 64, 128)
+    assert hc.time_s(link, overlap=True) == pytest.approx(
+        hc.time_s(link) * (1 - link.overlap_fraction))
+
+
 @pytest.mark.parametrize("layout", ["header_centric", "page_friendly"])
 def test_segments_scale_with_pages(layout):
     a = KT.account_scale_up(layout, 4, 100, 8, 64, 128)

@@ -3,7 +3,7 @@ the contiguity property that makes header-centric migration O(1)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.paged import layout as L
 from repro.paged import pool as pp
@@ -13,6 +13,18 @@ def test_layout_orders_match_paper_table2():
     assert L.LAYOUTS["raw"] == ("kv", "block", "token", "head")
     assert L.LAYOUTS["page_friendly"] == ("block", "kv", "token", "head")
     assert L.LAYOUTS["header_centric"] == ("block", "head", "kv", "token")
+
+
+def test_heads_contiguous_only_for_header_centric():
+    """§4.1: only the header-centric order keeps one worker's head slice
+    of a block as a single segment (what the migration kernel requires);
+    the predicate must agree with the segment count model."""
+    assert L.heads_contiguous("header_centric")
+    assert not L.heads_contiguous("page_friendly")
+    assert not L.heads_contiguous("raw")
+    for name in L.LAYOUTS:
+        segs = L.contiguous_segments_per_block(name, 8, 16, tp=4)
+        assert L.heads_contiguous(name) == (segs == 4), (name, segs)
 
 
 @pytest.mark.parametrize("src", list(L.LAYOUTS))

@@ -128,7 +128,7 @@ def test_e2e_method_ordering():
     assert tps["gyges"] > tps["loongserve"]
 
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 
 @settings(max_examples=10, deadline=None)
