@@ -2,9 +2,15 @@
 long-tail production-style trace, Gyges vs KunServe-style (dynamic PP)
 vs LoongServe-style (dynamic SP) vs the static hybrid deployment.
 Seesaw is excluded as in the paper (unsatisfactory performance — see
-bench_overall_cost for its transformation cost)."""
+bench_overall_cost for its transformation cost).
+
+``--smoke`` instead drives a LIVE mini-cluster (2 transformable engines
+on fake devices) through a mixed short/long trace and reports the same
+metrics schema — the CI proof that the §5 control plane runs end-to-end
+on real arrays, not just in the simulator."""
 from __future__ import annotations
 
+import os
 from typing import List
 
 from repro.configs import get_config
@@ -43,8 +49,56 @@ def run(duration: float = 420.0) -> List[str]:
     return rows
 
 
+def run_smoke() -> List[str]:
+    """Live mini-cluster smoke: 2 engines, mixed short/long trace, at
+    least one scheduler-initiated live scale-up.  Sets the fake-device
+    flag itself (before the first jax import) when run standalone."""
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.core.scheduler import ScaleDown, ScaleUp
+    from repro.serving.cluster import ClusterEngine
+    from repro.serving.request import ServeRequest
+
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    devs = jax.devices()
+    n_inst = 2 if len(devs) >= 2 else 1
+    w = len(devs) // n_inst
+    cluster = ClusterEngine(cfg, devs[:n_inst * w], n_instances=n_inst,
+                            max_batch=w, max_seq=16 * max(w, 2),
+                            dwell_steps=4)
+    rng = np.random.default_rng(0)
+    base = cluster.engines[0].max_seq_at(1)
+    full = cluster.engines[0].max_seq_at(w)
+    reqs = [ServeRequest(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, size=max(2, base - 9)).tolist(),
+                max_new_tokens=8) for i in range(6)]
+    if full > base:    # >=2 devices per engine: one long request
+        reqs.append(ServeRequest(rid=99, prompt=rng.integers(
+            0, cfg.vocab_size, size=full - 9).tolist(), max_new_tokens=8))
+    m = cluster.run(reqs, max_steps=5_000)
+    return ["fig14.live-smoke,arch,instances,devices_per_instance,"
+            "finished,total,n_transforms,scale_ups,scale_downs",
+            f"fig14.live-smoke,{cfg.name},{n_inst},{w},"
+            f"{m['finished']},{m['total']},{m['n_transforms']:.0f},"
+            f"{sum(isinstance(a, ScaleUp) for a in cluster.actions)},"
+            f"{sum(isinstance(a, ScaleDown) for a in cluster.actions)}"]
+
+
 def main():
-    for r in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="live 2-instance mini-cluster instead of the "
+                         "Fig. 14 simulation sweep")
+    args = ap.parse_args()
+    for r in (run_smoke() if args.smoke else run()):
         print(r)
 
 

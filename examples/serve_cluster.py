@@ -1,0 +1,80 @@
+"""Control-plane demo: the §5 scheduler drives LIVE engines.
+
+Two transformable instances (4 fake devices each) serve a mixed trace.
+The Gyges scheduler routes every request; when a long request fits no
+instance it *decides* a scale-up, the control plane executes it via
+``Engine.transform`` (one §4.3 schedule step per decode iteration), and
+after the long request drains the Alg-2 scan decomposes the instance
+back to TP1.  A second long request is routed to the already-scaled
+instance — no extra transformation (paper Fig. 13).
+
+    python examples/serve_cluster.py     # sets its own XLA_FLAGS
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.scheduler import ScaleDown, ScaleUp
+from repro.serving.cluster import ClusterEngine
+from repro.serving.request import ServeRequest
+
+
+def main():
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    cluster = ClusterEngine(cfg, jax.devices(), n_instances=2,
+                            max_batch=4, max_seq=64, dwell_steps=4)
+    e0 = cluster.engines[0]
+    print(f"cluster: 2 instances x {e0.W} devices | "
+          f"TP1 ceiling {e0.max_seq_at(1)} tok, "
+          f"TP{e0.max_tp} ceiling {e0.max_seq_at(e0.max_tp)} tok")
+
+    rng = np.random.default_rng(0)
+
+    def req(rid, plen, new):
+        return ServeRequest(rid=rid, prompt=rng.integers(
+            0, cfg.vocab_size, size=plen).tolist(), max_new_tokens=new)
+
+    shorts = [req(i, 6, 8) for i in range(4)]          # fit TP1
+    long_a = req(100, 24, 16)                          # 40 tok -> TP4
+    long_b = req(101, 30, 16)                          # rides the TP4
+
+    for r in shorts[:2]:
+        cluster.submit(r)
+    for _ in range(3):
+        cluster.step()
+    n_before = len(cluster.actions)
+    cluster.submit(long_a)   # unplaceable -> scheduler decides ScaleUp
+    cluster.step()
+    for act in cluster.actions[n_before:]:
+        assert isinstance(act, ScaleUp)
+        print(f">>> scheduler decision: ScaleUp(instance {act.iid} -> "
+              f"TP{act.tp_to}) [{act.reason}]")
+    for r in shorts[2:]:
+        cluster.submit(r)
+    cluster.submit(long_b)
+    cluster.run()
+    ups = [a for a in cluster.actions if isinstance(a, ScaleUp)]
+    downs = [a for a in cluster.actions if isinstance(a, ScaleDown)]
+    for act in downs:
+        print(f">>> scheduler decision: ScaleDown(instance {act.iid} -> "
+              f"TP{act.tp_to}) [{act.reason}]")
+    assert len(ups) == 1, "second long request must NOT scale up again"
+    assert len(downs) >= 1 and all(e.tp == 1 for e in cluster.engines)
+    assert all(r.finished for r in shorts + [long_a, long_b])
+    m = cluster.metrics()
+    print(f"served {m['total']} requests ({m['finished']} finished), "
+          f"{cluster.n_transforms} transformations, final TPs "
+          f"{[e.tp for e in cluster.engines]}")
+    print("one scale-up, one scale-down, zero dropped tokens ✓")
+
+
+if __name__ == "__main__":
+    main()

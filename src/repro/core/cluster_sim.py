@@ -19,12 +19,16 @@ Baselines:
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, Hardware, H20
 from repro.core.scheduler import BaseScheduler, GygesScheduler, SchedulerConfig
+from repro.serving.metrics import summarize
+from repro.serving.request import Request
+
+__all__ = ["Request", "SimInstance", "Cluster", "hybrid_trace",
+           "longtail_trace"]
 
 # PP/SP keep only ~1/N workers busy; calibrated so that the e2e gap matches
 # the paper's reported 43.5% extra degradation vs TP transformation.
@@ -34,30 +38,6 @@ ENGINE_EFFICIENCY = {"gyges": 1.0, "gyges-": 1.0, "basic": 1.0,
 # no KV head shards; seesaw bounces via host memory: §6.2.3 "41x")
 TRANSFORM_TIME_FACTOR = {"gyges": 1.0, "gyges-": 1.0, "basic": 1.0,
                          "seesaw": 1.0, "kunserve": 0.3, "loongserve": 0.3}
-
-
-@dataclass
-class Request:
-    rid: int
-    arrive: float
-    in_len: int
-    out_len: int
-    t_first_token: Optional[float] = None
-    t_finish: Optional[float] = None
-    tokens_done: float = 0.0
-    prefilled: float = 0.0
-
-    @property
-    def ttft(self) -> Optional[float]:
-        return None if self.t_first_token is None else (
-            self.t_first_token - self.arrive)
-
-    @property
-    def tpot(self) -> Optional[float]:
-        if self.t_finish is None or self.t_first_token is None \
-                or self.out_len <= 1:
-            return None
-        return (self.t_finish - self.t_first_token) / (self.out_len - 1)
 
 
 class SimInstance:
@@ -79,6 +59,15 @@ class SimInstance:
     # ---- InstanceView protocol -------------------------------------------
     def max_seq(self) -> int:
         return self.cm.max_seq(self.tp)
+
+    def max_seq_at(self, tp: int) -> int:
+        return self.cm.max_seq(tp)
+
+    @property
+    def max_tp(self) -> int:
+        # sim instances grow by MERGING TP1 neighbours (Cluster.
+        # execute_scale_up), never in place — decide_scale_up skips them
+        return self.tp
 
     def kv_capacity(self) -> int:
         return self.cm.kv_capacity_tokens(self.tp)
@@ -349,41 +338,27 @@ class Cluster:
             out = sum(i.tick(now, dt) for i in self.instances)
             self.total_tokens += out
             self.timeline.append((now, out / dt))
-            # Alg 2: periodic scale-down scan
+            # Alg 2: periodic scale-down scan — the scheduler returns
+            # declarative actions; the sim control plane executes them
             any_long_wait = any(
                 r.in_len + r.out_len > self.cm.max_seq(1)
                 for r in self.waiting)
-            for inst in list(self.instances):
-                if (inst.tp > 1 and not self.static
-                        and now > inst.transform_until + self.scale_down_dwell
-                        and self.scheduler.want_scale_down(
-                            inst, any_long_wait)):
-                    self.execute_scale_down(inst, now)
+            if not self.static:
+                eligible = [
+                    i for i in self.instances if i.tp > 1
+                    and now > i.transform_until + self.scale_down_dwell]
+                by_iid = {i.iid: i for i in eligible}
+                for act in self.scheduler.schedule_parallelism(
+                        eligible, any_long_wait):
+                    self.execute_scale_down(by_iid[act.iid], now)
             now += dt
         return self.metrics(t_end)
 
     def metrics(self, t_end: float) -> Dict[str, float]:
-        reqs = self.all_requests
-        fin = [r for r in reqs if r.t_finish is not None]
-        ttfts = [r.ttft for r in reqs if r.ttft is not None]
-        tpots = [r.tpot for r in fin if r.tpot is not None]
-        tokens = self.total_tokens
-        return {
-            "throughput_tps": tokens / t_end,
-            "finished": len(fin),
-            "total": len(reqs),
-            "ttft_p50": _pct(ttfts, 50), "ttft_p99": _pct(ttfts, 99),
-            "tpot_p50": _pct(tpots, 50), "tpot_p99": _pct(tpots, 99),
-            "n_transforms": float(self.n_transforms),
-        }
-
-
-def _pct(xs: List[float], p: float) -> float:
-    if not xs:
-        return float("nan")
-    xs = sorted(xs)
-    k = min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))
-    return xs[k]
+        """Shared schema (serving.metrics): key-identical with the live
+        ``ClusterEngine.metrics()``."""
+        return summarize(self.all_requests, t_end, self.total_tokens,
+                         self.n_transforms)
 
 
 # ---------------------------------------------------------------------------

@@ -1,15 +1,23 @@
 """Transformation-aware scheduler (paper §5, Algorithms 1 and 2)
 plus the RR / LLF baselines used in §6.2.4.
 
-The scheduler operates on ``SimInstance`` views (from cluster_sim) but is
-written against a narrow protocol (load, tp, max_seq, has_long_request,
-reserved) so the same logic drives both the event-driven simulator and
-the real ``InstanceGroup``-backed engine.
+The scheduler operates against a narrow ``InstanceView`` protocol (load,
+tp, max_seq, has_long_request, reserved), so the SAME policy object
+drives both the event-driven simulator (``cluster_sim.SimInstance``) and
+live serving engines (``serving.engine.Engine`` implements the protocol;
+``serving.cluster.ClusterEngine`` is the control plane).
+
+Parallelism decisions are *declarative*: ``schedule_parallelism`` (Alg 2)
+and ``decide_scale_up`` (Alg 1 lines 14-16) return ``ScaleUp`` /
+``ScaleDown`` actions naming an instance and a target TP degree; the
+owning control plane executes them — the live cluster via
+``Engine.transform(tp_to)`` (one §4.3 schedule step per decode
+iteration), the simulator via its merge/split bookkeeping.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Protocol, Sequence
+from dataclasses import dataclass
+from typing import List, Optional, Protocol, Sequence, Union
 
 MAX = float("inf")
 
@@ -18,17 +26,54 @@ class InstanceView(Protocol):
     iid: int
     tp: int
     reserved: bool
+    max_tp: int                      # largest in-place TP (== tp if the
+                                     # instance only grows by merging)
 
     def load(self) -> float: ...
     def kv_used_fraction(self) -> float: ...
     def max_seq(self) -> int: ...
+    def max_seq_at(self, tp: int) -> int: ...
     def kv_free_tokens(self) -> int: ...
     def has_long_request(self) -> bool: ...
 
 
+# --------------------------------------------------------------------------
+# Declarative parallelism actions (executed by the owning control plane)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ScaleUp:
+    """Grow instance ``iid`` to TP ``tp_to`` (Alg 1 execute_scale_up)."""
+    iid: int
+    tp_to: int
+    reason: str = ""
+
+
+@dataclass(frozen=True)
+class ScaleDown:
+    """Shrink instance ``iid`` to TP ``tp_to`` (Alg 2)."""
+    iid: int
+    tp_to: int = 1
+    reason: str = ""
+
+
+Action = Union[ScaleUp, ScaleDown]
+
+
+def min_tp_for(inst: InstanceView, total_tokens: int) -> int:
+    """Smallest TP degree (doubling from the current one, capped at
+    ``max_tp``) whose admission ceiling fits ``total_tokens``."""
+    hi = getattr(inst, "max_tp", inst.tp)
+    tp = max(inst.tp, 1)
+    while tp < hi and inst.max_seq_at(tp) < total_tokens:
+        tp *= 2
+    return min(tp, hi)
+
+
 @dataclass
 class SchedulerConfig:
-    long_threshold: int = 4096       # input length that makes a req "long"
+    long_threshold: int = 4096       # router-side long-request classifier
+                                     # (§5.1): inputs above this are long
     scale_down_load: float = 0.35    # Alg 2 THRESHOLD
     reserve_fraction: float = 0.10   # capacity reserved on candidate
                                      # scale-up groups (check_reserve)
@@ -41,8 +86,15 @@ class BaseScheduler:
     def __init__(self, cfg: Optional[SchedulerConfig] = None):
         self.cfg = cfg or SchedulerConfig()
 
-    def is_long(self, input_len: int, inst: InstanceView) -> bool:
-        return input_len > inst.max_seq()
+    def is_long(self, total_len: int,
+                inst: Optional[InstanceView] = None) -> bool:
+        """Router-side long-request classifier (paper §5.1): a request is
+        long if its context footprint exceeds ``cfg.long_threshold``, or
+        — when judged against a concrete instance — that instance's
+        current admission ceiling."""
+        if total_len > self.cfg.long_threshold:
+            return True
+        return inst is not None and total_len > inst.max_seq()
 
     # hooks implemented by subclasses -------------------------------------
     def pick(self, instances: Sequence[InstanceView], input_len: int,
@@ -60,6 +112,44 @@ class BaseScheduler:
             if inst.kv_used_fraction() < self.cfg.scale_down_load:
                 return True
         return False
+
+    # declarative decisions ------------------------------------------------
+    def schedule_parallelism(self, instances: Sequence[InstanceView],
+                             any_long_waiting: bool) -> List[Action]:
+        """Alg 2 as declarative actions.  ``instances`` is the caller's
+        dwell-gated candidate set; every instance passing the scale-down
+        predicate yields a ``ScaleDown`` the control plane executes."""
+        return [ScaleDown(iid=i.iid, tp_to=1,
+                          reason="low load, no long requests")
+                for i in instances
+                if i.tp > 1 and self.want_scale_down(i, any_long_waiting)]
+
+    def decide_scale_up(self, instances: Sequence[InstanceView],
+                        input_len: int, output_len_hint: int
+                        ) -> Optional[ScaleUp]:
+        """Alg 1 lines 14-16 for in-place growable instances (live
+        engines): when routing found no valid instance for a LONG
+        request, choose the least-loaded instance that can reach the
+        needed capacity and the smallest TP degree that fits it.  Short
+        requests never trigger a transformation — they wait for capacity
+        (returns None)."""
+        total = input_len + output_len_hint
+        if not instances:
+            return None
+        if not self.is_long(total) \
+                and any(total <= i.max_seq() for i in instances):
+            return None
+        best = None
+        for inst in instances:
+            hi = getattr(inst, "max_tp", inst.tp)
+            if hi <= inst.tp or inst.max_seq_at(hi) < total:
+                continue
+            tp_to = min_tp_for(inst, total)
+            key = (inst.load(), tp_to)
+            if best is None or key < best[0]:
+                best = (key, ScaleUp(iid=inst.iid, tp_to=tp_to,
+                                     reason=f"long request ({total} tok)"))
+        return best[1] if best else None
 
 
 class RoundRobinScheduler(BaseScheduler):
@@ -104,7 +194,10 @@ class GygesScheduler(BaseScheduler):
     # --- Algorithm 1 -------------------------------------------------------
     def pick(self, instances, input_len, output_len_hint):
         total = input_len + output_len_hint
-        long_req = any(total > i.max_seq() for i in instances if i.tp == 1)
+        # §5.1 long classification: the configured router threshold, or
+        # not fitting the cluster's TP1 instances
+        long_req = self.is_long(total) or any(
+            total > i.max_seq() for i in instances if i.tp == 1)
 
         t_load, t_instance = MAX, None            # line 2
         for inst in instances:                    # line 3

@@ -1,123 +1,114 @@
-"""Production serving launcher: transformation-aware cluster serving.
+"""Serving launcher: a thin CLI over the ``ClusterEngine`` control plane.
 
-Connects the three layers end-to-end on real devices:
-
-    GygesScheduler (paper §5)  ->  InstanceGroup (paper §4 transformation)
-                               ->  Engine-style slot decode loop
+The §5 scheduler (``GygesScheduler`` by default) routes every request and
+decides every transformation; this module only parses arguments, builds
+the trace, and prints what the control plane did.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
-        [--devices 4] [--requests 32] [--long-every 10] [--smoke]
+        [--instances 2] [--requests 16] [--long-every 5] [--scheduler gyges]
 
-With one CPU device this degenerates to a single TP1 instance; under
-XLA_FLAGS=--xla_force_host_platform_device_count=8 it demonstrates the
-full dynamic: short requests round-robin over 4x(TP1); a long request
-triggers a scale-up to TP4; idle load triggers the Alg-2 scale-down.
+With one CPU device this degenerates to a single TP1 instance; under 8
+fake host devices (set below by default) it demonstrates the full
+dynamic: short requests spread over TP1 instances, a long request
+triggers a scheduler-issued live scale-up (``Engine.transform``, one
+§4.3 schedule step per decode iteration), and the Alg-2 scan decomposes
+the instance once the long request drains.
 """
 from __future__ import annotations
 
 import argparse
-import time
-from typing import List
+import os
+
+# must precede the jax import so the fake-device flag takes effect
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, get_config
-from repro.core.instance import InstanceGroup
-from repro.core.scheduler import GygesScheduler, SchedulerConfig
+from repro.core.scheduler import SCHEDULERS, ScaleUp
+from repro.serving.cluster import ClusterEngine
+from repro.serving.request import ServeRequest
 
 
-class ServingCluster:
-    """One transformable instance group + the Gyges scheduler policy.
-
-    The group's current TP degree is chosen by Algorithm 1/2 logic driven
-    by the live request mix: long-context requests force scale-up; when
-    none remain and KV usage is low the group decomposes (dwell-gated)."""
-
-    def __init__(self, cfg, devices, max_seq: int = 256,
-                 long_threshold: int = 96):
-        self.group = InstanceGroup(cfg, devices, batch_per_replica=1,
-                                   max_seq=max_seq,
-                                   rng=jax.random.PRNGKey(0))
-        self.cfg = cfg
-        self.long_threshold = long_threshold
-        self.max_seq = max_seq
-        self.sched_cfg = SchedulerConfig()
-        self.last_scale_up = -1e9
-
-    def needs_scale_up(self, prompt_len: int) -> bool:
-        return prompt_len + 16 > self.long_threshold and self.group.tp == 1
-
-    def maybe_scale_down(self, active_long: int, now: float) -> None:
-        if (self.group.tp > 1 and active_long == 0
-                and now - self.last_scale_up > 2.0):       # dwell
-            print(f"[serve] Alg2 scale-down: TP{self.group.tp} -> "
-                  f"{self.group.W}x(TP1)")
-            self.group.transform(1)
-
-    def scale_up(self, now: float) -> None:
-        print(f"[serve] long request: scale-up {self.group.W}x(TP1) -> "
-              f"TP{self.group.W}")
-        self.group.transform(self.group.W)
-        self.last_scale_up = now
+def build_trace(n: int, long_every: int, cluster: ClusterEngine,
+                gen_tokens: int, seed: int = 0) -> list:
+    """Mixed short/long ServeRequests sized against the cluster's
+    admission ceilings: shorts fit a TP1 instance, longs need max TP."""
+    rng = np.random.default_rng(seed)
+    base = cluster.engines[0].max_seq_at(1)
+    full = cluster.engines[0].max_seq_at(cluster.engines[0].max_tp)
+    vocab = cluster.cfg.vocab_size
+    reqs = []
+    for i in range(n):
+        if long_every and (i + 1) % long_every == 0:
+            plen = max(1, full - gen_tokens - 1)
+        else:
+            plen = int(rng.integers(2, max(3, base - gen_tokens)))
+        prompt = rng.integers(0, vocab, size=plen).tolist()
+        reqs.append(ServeRequest(rid=i, prompt=prompt,
+                                 max_new_tokens=gen_tokens))
+    return reqs
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b", choices=ASSIGNED_ARCHS)
-    ap.add_argument("--devices", type=int, default=0,
-                    help="instance group width (0 = all available)")
-    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--scheduler", default="gyges",
+                    choices=sorted(SCHEDULERS))
+    ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--long-every", type=int, default=5,
-                    help="every Nth request is long-context")
+                    help="every Nth request is long-context (0 = none)")
     ap.add_argument("--gen-tokens", type=int, default=8)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="slots per instance (0 = one per device)")
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced model config (default)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced() if args.smoke \
         else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, dtype="float32")
     devs = jax.devices()
-    n = args.devices or min(len(devs), 4)
-    cluster = ServingCluster(cfg, devs[:n])
-    group = cluster.group
-    rng = np.random.default_rng(0)
-    print(f"[serve] {cfg.name} on {n} devices, batch {group.batch}")
+    w = len(devs) // args.instances
+    cluster = ClusterEngine(
+        cfg, devs, n_instances=args.instances,
+        max_batch=args.max_batch or w, max_seq=args.max_seq,
+        scheduler=None if args.scheduler == "gyges"
+        else SCHEDULERS[args.scheduler]())
+    print(f"[serve] {cfg.name}: {args.instances} instances x {w} devices, "
+          f"scheduler={cluster.scheduler.name}, "
+          f"TP1 ceiling {cluster.engines[0].max_seq_at(1)} tok, "
+          f"TP{w} ceiling {cluster.engines[0].max_seq_at(w)} tok")
 
-    t_start = time.time()
-    done = 0
-    i = 0
-    while done < args.requests:
-        now = time.time() - t_start
-        is_long = (i + 1) % args.long_every == 0
-        plen = (cluster.long_threshold + 16) if is_long else \
-            int(rng.integers(4, 17))
-        if cluster.needs_scale_up(plen):
-            cluster.scale_up(now)
-        # batch of `group.batch` identical-length prompts (slot decode)
-        toks = jnp.asarray(
-            rng.integers(0, cfg.vocab_size, size=(group.batch, plen)),
-            jnp.int32)
-        logits = group.prefill({"tokens": toks})
-        t = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-        outs = [np.asarray(t)]
-        for s in range(args.gen_tokens - 1):
-            lg = group.decode(t, jnp.full((group.batch,), plen + s,
-                                          jnp.int32))
-            t = jnp.argmax(lg, -1).astype(jnp.int32)
-            outs.append(np.asarray(t))
-        done += group.batch
-        i += 1
-        kind = "LONG " if is_long else "short"
-        print(f"[serve] {kind} batch {i}: len={plen} tp={group.tp} "
-              f"tokens/req={len(outs)}")
-        cluster.maybe_scale_down(active_long=0 if not is_long else 0,
-                                 now=time.time() - t_start)
-    dt = time.time() - t_start
-    total = done * args.gen_tokens
-    print(f"[serve] {done} requests, {total} tokens in {dt:.1f}s "
-          f"({total/dt:.1f} tok/s); transformations: "
-          f"{group.transform_count}")
+    trace = build_trace(args.requests, args.long_every, cluster,
+                        args.gen_tokens)
+    n_long = sum(1 for r in trace
+                 if cluster.scheduler.is_long(r.total_tokens))
+    print(f"[serve] trace: {len(trace)} requests ({n_long} long)")
+    seen = 0
+    for r in trace:
+        cluster.submit(r)
+        cluster.step()
+        for act in cluster.actions[seen:]:
+            kind = "scale-up" if isinstance(act, ScaleUp) else "scale-down"
+            print(f"[serve] step {cluster.steps}: {kind} instance "
+                  f"{act.iid} -> TP{act.tp_to} ({act.reason})")
+        seen = len(cluster.actions)
+    m = cluster.run()   # drain + Alg-2 quiet window
+    for act in cluster.actions[seen:]:
+        kind = "scale-up" if isinstance(act, ScaleUp) else "scale-down"
+        print(f"[serve] drain: {kind} instance {act.iid} -> TP{act.tp_to} "
+              f"({act.reason})")
+    print(f"[serve] final TPs: {[e.tp for e in cluster.engines]}")
+    print("[serve] " + ", ".join(
+        f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in m.items()))
 
 
 if __name__ == "__main__":

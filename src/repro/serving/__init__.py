@@ -1,2 +1,24 @@
-from repro.serving.engine import Engine
-from repro.serving.request import ServeRequest, State
+"""Serving: the live data plane (``Engine``), the multi-instance control
+plane (``ClusterEngine``), and the request/metrics contract shared with
+the simulator.
+
+``Engine``/``ClusterEngine`` are imported lazily (PEP 562) so that
+``repro.serving.request`` and ``repro.serving.metrics`` stay importable
+without initializing jax — the simulator imports them, and benchmark
+entry points must be able to set XLA_FLAGS before any jax import.
+"""
+from repro.serving.metrics import METRIC_KEYS, percentile, summarize
+from repro.serving.request import Request, ServeRequest, State
+
+__all__ = ["Engine", "ClusterEngine", "METRIC_KEYS", "percentile",
+           "summarize", "Request", "ServeRequest", "State"]
+
+
+def __getattr__(name):
+    if name == "Engine":
+        from repro.serving.engine import Engine
+        return Engine
+    if name == "ClusterEngine":
+        from repro.serving.cluster import ClusterEngine
+        return ClusterEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

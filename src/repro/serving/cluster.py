@@ -1,0 +1,240 @@
+"""Multi-instance serving control plane: the §5 scheduler drives LIVE
+engines.
+
+``ClusterEngine`` runs N live ``Engine`` instances on disjoint device
+subsets of one process (each engine owns its own ``(rep, tp)`` mesh) and
+drives them with the *same* ``BaseScheduler``/``GygesScheduler`` that
+drives the event simulator:
+
+* **routing** (Alg 1): ``submit`` asks ``scheduler.pick`` for an
+  instance view; every live engine implements the ``InstanceView``
+  protocol, so the policy is byte-for-byte the one the simulator runs;
+* **scale-up** (Alg 1 lines 14-16): a long request that no instance can
+  admit yields a declarative ``ScaleUp`` action from
+  ``scheduler.decide_scale_up``; the control plane executes it via
+  ``Engine.transform(tp_to)`` — the §4.3 schedule then runs one step per
+  decode iteration inside ``Engine.step``, so migration interleaves with
+  serving and in-flight tokens are bit-exact across the boundary;
+* **scale-down** (Alg 2): each cluster step, ``schedule_parallelism``
+  scans the dwell-gated instances and returns ``ScaleDown`` actions the
+  plane executes the same way.
+
+The sim/live split this closes: ``cluster_sim.Cluster`` and
+``ClusterEngine`` consume the same scheduler, the same request metrics
+(``serving.metrics.summarize``) and report a key-identical schema.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.scheduler import (Action, BaseScheduler, GygesScheduler,
+                                  ScaleUp, SchedulerConfig, min_tp_for)
+from repro.serving.engine import Engine
+from repro.serving.metrics import summarize
+from repro.serving.request import ServeRequest
+
+
+class ClusterEngine:
+    """N live transformable engines + one scheduler policy."""
+
+    def __init__(self, cfg: ModelConfig, devices: Sequence[jax.Device],
+                 n_instances: int = 2, max_batch: int = 2,
+                 max_seq: int = 64, page_tokens: int = 16,
+                 scheduler: Optional[BaseScheduler] = None,
+                 rng: Optional[jax.Array] = None, params=None,
+                 dwell_steps: int = 8, layout: str = "header_centric",
+                 transform_attn: bool = True):
+        if n_instances < 1 or len(devices) < n_instances:
+            raise ValueError(f"{n_instances} instances need at least "
+                             f"{n_instances} of {len(devices)} devices")
+        W = len(devices) // n_instances
+        self.cfg = cfg
+        self.dwell_steps = dwell_steps
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        if params is None:
+            from repro.core.padding import make_plan
+            from repro.models import model as M
+            params = M.init_params(jax.random.fold_in(rng, 1), cfg,
+                                   make_plan(cfg, W, mode="page"))
+        self.engines: List[Engine] = [
+            Engine(cfg, params=params, max_batch=max_batch,
+                   max_seq=max_seq, page_tokens=page_tokens, rng=rng,
+                   layout=layout, devices=list(devices[k * W:(k + 1) * W]),
+                   transform_attn=transform_attn, iid=k)
+            for k in range(n_instances)]
+        if scheduler is None:
+            base = self.engines[0].max_seq_at(1)
+            scheduler = GygesScheduler(SchedulerConfig(
+                long_threshold=base, target_tp=W))
+        self.scheduler = scheduler
+
+        self.waiting: List[ServeRequest] = []   # router-level queue
+        self.requests: List[ServeRequest] = []  # everything submitted
+        self.actions: List[Action] = []         # executed, in order
+        self.steps = 0
+        self.n_transforms = 0
+        self.total_tokens = 0
+        self._last_transform_step = {e.iid: -(10 ** 9) for e in self.engines}
+        # stamped at the first submit so engine construction / jit
+        # compile time does not dilute throughput_tps
+        self.t_start: Optional[float] = None
+        self._update_reserve()
+
+    # ------------------------------------------------------------------
+    def _engine(self, iid: int) -> Engine:
+        return next(e for e in self.engines if e.iid == iid)
+
+    def _transformable(self) -> List[Engine]:
+        """Scale actions may only target engines with no transformation
+        in flight (one open session per engine).  Routing, by contrast,
+        sees every engine: a transforming engine advertises its *target*
+        capacity (``Engine.max_seq``) and queues admissions until the new
+        degree is resident, so follow-up long requests ride the existing
+        transformation instead of triggering another one."""
+        return [e for e in self.engines if not e.transforming]
+
+    def _update_reserve(self) -> None:
+        """update_reserve() (Alg 2 line 9), live form: earmark the
+        least-loaded TP1 engine as the next scale-up candidate so short
+        requests keep transformation headroom free on it."""
+        if not isinstance(self.scheduler, GygesScheduler):
+            return
+        for e in self.engines:
+            e.reserved = False
+        tp1 = sorted((e for e in self.engines if e.tp == 1),
+                     key=lambda e: e.kv_used_fraction())
+        if tp1:
+            tp1[0].reserved = True
+
+    # ------------------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        total = req.total_tokens
+        if total > max(e.max_seq_at(e.max_tp) for e in self.engines):
+            raise ValueError(
+                f"request {req.rid}: {total} tokens exceeds every "
+                f"instance's maximum-TP capacity")
+        if self.t_start is None:
+            self.t_start = time.monotonic()
+        self.requests.append(req)
+        if not self._place(req):
+            self.waiting.append(req)
+
+    def _place(self, req: ServeRequest) -> bool:
+        total = req.total_tokens
+        inst = self.scheduler.pick(self.engines, len(req.prompt),
+                                   req.max_new_tokens)
+        if inst is not None and total > inst.max_seq():
+            # transformation-unaware pick (RR/LLF skip the valid() check):
+            # the chosen instance must scale up around itself — the
+            # paper's Fig. 13 pathology, reproduced live
+            if inst.transforming or inst.max_seq_at(inst.max_tp) < total:
+                return False
+            self._execute(ScaleUp(iid=inst.iid,
+                                  tp_to=min_tp_for(inst, total),
+                                  reason="unaware routing"))
+        if inst is not None:
+            inst.submit(req)
+            return True
+        act = self.scheduler.decide_scale_up(self._transformable(),
+                                             len(req.prompt),
+                                             req.max_new_tokens)
+        if act is None:
+            return False
+        self._execute(act)
+        # the request rides the transforming engine's queue; Engine.step
+        # admits it once the new TP degree is resident
+        self._engine(act.iid).submit(req)
+        return True
+
+    def _execute(self, act: Action) -> None:
+        eng = self._engine(act.iid)
+        n_steps = eng.transform(act.tp_to)
+        self.actions.append(act)
+        self.n_transforms += 1
+        self._last_transform_step[eng.iid] = self.steps
+        self._update_reserve()
+        kind = "up" if isinstance(act, ScaleUp) else "down"
+        assert n_steps > 0 or act.tp_to == eng.tp, (kind, act)
+
+    # ------------------------------------------------------------------
+    def _any_long_waiting(self) -> bool:
+        cap1 = max(e.max_seq_at(1) for e in self.engines)
+        return any(self.scheduler.is_long(r.total_tokens)
+                   or r.total_tokens > cap1 for r in self.waiting)
+
+    def step(self) -> Dict[str, int]:
+        """One control-plane iteration: retry routing, run Alg 2, then
+        one engine iteration each (a transforming engine executes one
+        §4.3 schedule step before its decode)."""
+        # FCFS retry of the router queue (stop at the first unplaceable)
+        while self.waiting:
+            if not self._place(self.waiting[0]):
+                break
+            self.waiting.pop(0)
+        # Alg 2 over dwell-gated, non-transforming instances
+        eligible = [
+            e for e in self.engines
+            if e.tp > 1 and not e.transforming
+            and self.steps - self._last_transform_step[e.iid]
+            >= self.dwell_steps]
+        for act in self.scheduler.schedule_parallelism(
+                eligible, self._any_long_waiting()):
+            self._execute(act)
+        emitted = active = queued = 0
+        for e in self.engines:
+            s = e.step()
+            emitted += s["emitted"]
+            active += s["active"]
+            queued += s["waiting"]
+            if e.transforming:
+                # dwell counts from transformation END (sim parity:
+                # now > transform_until + dwell) — keep re-stamping
+                # until the schedule drains
+                self._last_transform_step[e.iid] = self.steps
+        self.total_tokens += emitted
+        self.steps += 1
+        return {"active": active, "emitted": emitted,
+                "engine_waiting": queued, "router_waiting":
+                len(self.waiting),
+                "transforming": sum(e.transforming for e in self.engines)}
+
+    # ------------------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        return (not self.waiting
+                and all(not e.transforming and not e.waiting
+                        and all(s is None for s in e.slots)
+                        for e in self.engines))
+
+    def run(self, requests: Sequence[ServeRequest] = (),
+            max_steps: int = 10_000,
+            drain_steps: Optional[int] = None) -> Dict[str, float]:
+        """Submit ``requests`` and step until the cluster drains, then
+        keep stepping through a quiet window (default: one dwell period)
+        so Alg 2 can return scaled-up instances to TP1 — the sim's
+        ``drain`` parameter, live."""
+        for r in requests:
+            self.submit(r)
+        drain = self.dwell_steps + 2 if drain_steps is None else drain_steps
+        quiet = 0
+        for _ in range(max_steps):
+            if self.idle:
+                if quiet >= drain:
+                    return self.metrics()
+                quiet += 1
+            else:
+                quiet = 0
+            self.step()
+        raise RuntimeError("cluster did not drain")
+
+    def metrics(self) -> Dict[str, float]:
+        """Same schema as ``cluster_sim.Cluster.metrics`` — key-for-key
+        (tests/test_cluster_engine.py asserts it)."""
+        elapsed = 0.0 if self.t_start is None else (
+            time.monotonic() - self.t_start)
+        return summarize(self.requests, elapsed, self.total_tokens,
+                         self.n_transforms)

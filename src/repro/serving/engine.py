@@ -17,9 +17,18 @@ Two placements:
     interleaves with serving and in-flight request KV crosses the TP
     boundary bit-exactly.  Exercised by tests/test_transform_integration
     and examples/serve_transform.py.
+
+The engine also implements the ``InstanceView`` protocol from
+``core/scheduler.py`` (load, kv_used_fraction, max_seq, kv_free_tokens,
+has_long_request, reserved), so the §5 scheduler that drives the
+simulator drives live engines unchanged — ``serving/cluster.py`` is that
+control plane.  ``max_seq_alloc`` is the *allocated* per-slot ceiling
+(physical pool size, fixed); ``max_seq()`` is the *admission* ceiling,
+which scales with the live TP degree per the paper's memory model.
 """
 from __future__ import annotations
 
+import itertools
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -41,20 +50,25 @@ def _sample(logits: jax.Array, temperature: float, rng: jax.Array
 
 
 class Engine:
+    _ids = itertools.count()
+
     def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 4,
                  max_seq: int = 256, page_tokens: int = 16,
                  rng: Optional[jax.Array] = None,
                  layout: str = "header_centric",
                  devices: Optional[List[jax.Device]] = None,
-                 transform_attn: bool = True):
+                 transform_attn: bool = True,
+                 iid: Optional[int] = None):
         self.cfg = cfg
         self.devices = devices
         self.W = len(devices) if devices else 1
         self.plan = (make_plan(cfg, self.W, mode="page") if devices
                      else make_plan(cfg, 1))
         self.max_batch = max_batch
-        self.max_seq = max_seq
+        self.max_seq_alloc = max_seq
         self.page_tokens = page_tokens
+        self.iid = iid if iid is not None else next(Engine._ids)
+        self.reserved = False
         self.layout = layout
         self.transform_attn = transform_attn
         rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -62,11 +76,13 @@ class Engine:
         self.params = params if params is not None else M.init_params(
             jax.random.fold_in(rng, 1), cfg, self.plan)
         self.caches = M.init_decode_caches(cfg, self.plan, max_batch,
-                                           max_seq, page_tokens, layout)
+                                           self.max_seq_alloc, page_tokens,
+                                           layout)
         self.slots: List[Optional[ServeRequest]] = [None] * max_batch
         self.waiting: List[ServeRequest] = []
         self.steps = 0
         self.tp = 1
+        self.tp_pending: Optional[int] = None
         self.mesh = None
         self._session = None
         self.transform_reports = []
@@ -74,6 +90,10 @@ class Engine:
             from repro.core import instance as I
             assert layout == "header_centric", (
                 "mesh placement shards the canonical header-centric pool")
+            assert max_batch % self.W == 0, (
+                f"max_batch={max_batch} must be divisible by the device "
+                f"count {self.W}: batch (slots) shards over the rep axis, "
+                f"which is W-wide at TP1")
             self.mesh = self._make_mesh(1)
             self._pspecs = I.param_pspecs(self.params, transform_attn)
             self._cspecs = I.cache_pspecs(self.caches)
@@ -122,16 +142,73 @@ class Engine:
             cache_spec_fn=I.layer_cache_pspecs,
             layers_per_step=layers_per_step,
             storage_layout=self.layout, interpret=interpret)
+        self.tp_pending = tp_to
         return session.schedule.n_steps
 
     @property
     def transforming(self) -> bool:
         return self._session is not None
 
+    # -- InstanceView protocol (control-plane side, paper §5) -----------
+    # The scheduler in core/scheduler.py drives live engines through the
+    # same narrow view it drives SimInstances through; these methods are
+    # the live implementation of that protocol.
+
+    @property
+    def max_tp(self) -> int:
+        """Largest TP degree this engine can transform to in place."""
+        return self.W
+
+    def max_seq_at(self, tp: int) -> int:
+        """Admission ceiling at TP degree ``tp`` (the paper's memory
+        model): per-device KV budget is fixed, so the allocated
+        ``max_seq_alloc`` is the full-width (tp == W) ceiling and a TP-tp
+        instance aggregates tp devices' share of it.  Single-device
+        engines have no transformable axis and expose the full
+        allocation."""
+        if self.W <= 1:
+            return self.max_seq_alloc
+        base = max(1, self.max_seq_alloc // self.W)
+        return min(self.max_seq_alloc, base * tp)
+
+    def max_seq(self) -> int:
+        """Admission ceiling at the *policy* degree: while a scale-up is
+        in flight the engine is routable at its target capacity (queued
+        requests admit once the new degree is resident), so the router
+        sends follow-up long requests here instead of transforming a
+        second instance."""
+        return self.max_seq_at(self.tp_pending or self.tp)
+
+    def kv_capacity_tokens(self) -> int:
+        """Slot-partitioned pools: every slot owns max_seq() tokens."""
+        return self.max_batch * self.max_seq()
+
+    def kv_used_tokens(self) -> int:
+        used = sum(r.context_len for r in self.slots if r is not None)
+        return used + sum(len(r.prompt) for r in self.waiting)
+
+    def kv_used_fraction(self) -> float:
+        return self.kv_used_tokens() / max(self.kv_capacity_tokens(), 1)
+
+    def kv_free_tokens(self) -> int:
+        return max(0, self.kv_capacity_tokens() - self.kv_used_tokens())
+
+    def load(self) -> float:
+        # same shape as SimInstance.load: KV pressure + queue pressure
+        return self.kv_used_fraction() + 0.05 * len(self.waiting)
+
+    def has_long_request(self) -> bool:
+        """A request is long for Alg 2 if its final context would not fit
+        this engine at TP1 — scale-down must wait for it to finish."""
+        cap1 = self.max_seq_at(1)
+        live = [r for r in self.slots if r is not None] + self.waiting
+        return any(r.total_tokens > cap1 for r in live)
+
     def _finish_transform(self) -> None:
         from repro.core import transform_engine as TE
 
         session = TE.close_owner_session(self)
+        self.tp_pending = None
         self.transform_reports.extend(session.reports)
 
     # ------------------------------------------------------------------
@@ -153,8 +230,9 @@ class Engine:
         # filled pages back into the engine cache (slot-partitioned pools
         # make this a pure page-range copy — the page-friendly layout at
         # work: no shifting, paper Table 2 row 2)
-        sub = M.init_decode_caches(self.cfg, self.plan, 1, self.max_seq,
-                                   self.page_tokens, self.layout)
+        sub = M.init_decode_caches(self.cfg, self.plan, 1,
+                                   self.max_seq_alloc, self.page_tokens,
+                                   self.layout)
         logits, sub = M.prefill(self.params, self.cfg, self.plan,
                                 {"tokens": prompt}, sub, self.layout)
         self._adopt_slot_cache(sub, slot, len(req.prompt))
@@ -165,6 +243,14 @@ class Engine:
         req.state = State.DECODE
         req.slot = slot
         self.slots[slot] = req
+        # the prefill-emitted token counts against the budget too: a
+        # 1-token request (or an immediate EOS) must not reach decode
+        if (len(req.generated) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)
+                or req.context_len >= self.max_seq_alloc):
+            req.state = State.DONE
+            req.t_done = time.monotonic()
+            self.slots[slot] = None
 
     def _adopt_slot_cache(self, sub, slot: int, seq_len: int) -> None:
         """Copy the batch-1 cache into `slot` of the engine cache."""
@@ -201,6 +287,7 @@ class Engine:
 
     # -- one engine iteration --------------------------------------------
     def step(self) -> Dict[str, int]:
+        emitted = 0
         # a live transformation in progress: execute ONE schedule step
         # before this decode iteration (§4.3 — migration interleaves with
         # serving); admissions pause until the new TP degree is resident
@@ -216,9 +303,9 @@ class Engine:
                 req = self.waiting.pop(0)
                 req.state = State.PREFILL
                 self._prefill_one(req, slot)
+                emitted += 1        # the prefill emits the first token
 
         active = [r for r in self.slots if r is not None]
-        emitted = 0
         if active:
             tokens = np.zeros((self.max_batch,), np.int32)
             positions = np.zeros((self.max_batch,), np.int32)
@@ -240,7 +327,7 @@ class Engine:
                 emitted += 1
                 if (len(r.generated) >= r.max_new_tokens
                         or (r.eos_id is not None and tok == r.eos_id)
-                        or r.context_len >= self.max_seq):
+                        or r.context_len >= self.max_seq_alloc):
                     r.state = State.DONE
                     r.t_done = time.monotonic()
                     self.slots[r.slot] = None

@@ -1,0 +1,52 @@
+"""Request-level serving metrics shared by the simulator and the live
+cluster (paper §6 reporting: throughput, TTFT/TPOT percentiles,
+transformation count).
+
+``core.cluster_sim.Cluster.metrics`` and
+``serving.cluster.ClusterEngine.metrics`` both return exactly
+``summarize(...)`` so the two planes report a key-identical schema —
+the sim-vs-live parity contract tested by tests/test_cluster_engine.py.
+
+jax-free on purpose: the simulator and benchmark entry points import it
+before any jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+#: the schema every cluster (simulated or live) reports, in order
+METRIC_KEYS = ("throughput_tps", "finished", "total",
+               "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99",
+               "n_transforms")
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile (NaN on empty input)."""
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    k = min(len(xs) - 1, int(round(p / 100 * (len(xs) - 1))))
+    return xs[k]
+
+
+def summarize(requests: Sequence, duration_s: float, total_tokens: float,
+              n_transforms: int) -> Dict[str, float]:
+    """Aggregate per-request latency metrics into the shared schema.
+
+    ``requests`` may be trace records (``Request``) or live requests
+    (``ServeRequest``) — anything exposing ``finished`` / ``ttft`` /
+    ``tpot``.
+    """
+    fin = [r for r in requests if r.finished]
+    ttfts = [r.ttft for r in requests if r.ttft is not None]
+    tpots = [r.tpot for r in fin if r.tpot is not None]
+    return {
+        "throughput_tps": total_tokens / max(duration_s, 1e-9),
+        "finished": len(fin),
+        "total": len(requests),
+        "ttft_p50": percentile(ttfts, 50),
+        "ttft_p99": percentile(ttfts, 99),
+        "tpot_p50": percentile(tpots, 50),
+        "tpot_p99": percentile(tpots, 99),
+        "n_transforms": float(n_transforms),
+    }

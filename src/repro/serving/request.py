@@ -1,4 +1,18 @@
-"""Request objects and lifecycle for the serving engine."""
+"""Request objects shared by the live serving path and the simulator.
+
+Two request shapes, one metrics contract:
+
+* ``ServeRequest`` — a live token-level request (prompt ids, sampling
+  params, generated ids) served by ``serving.engine.Engine`` /
+  ``serving.cluster.ClusterEngine``;
+* ``Request`` — a trace record (arrival time + input/output lengths)
+  consumed by ``core.cluster_sim.Cluster`` and produced by the trace
+  generators.
+
+Both expose ``finished`` / ``ttft`` / ``tpot`` so that
+``serving.metrics.summarize`` reports the *identical* schema for a
+simulated cluster and a live one.
+"""
 from __future__ import annotations
 
 import itertools
@@ -36,10 +50,57 @@ class ServeRequest:
         return self.state == State.DONE
 
     @property
+    def finished(self) -> bool:
+        return self.t_done is not None
+
+    @property
     def context_len(self) -> int:
         return len(self.prompt) + len(self.generated)
+
+    @property
+    def total_tokens(self) -> int:
+        """Final context footprint (admission-control unit): the prompt
+        plus the full generation budget."""
+        return len(self.prompt) + self.max_new_tokens
 
     @property
     def ttft(self) -> Optional[float]:
         return None if self.t_first_token is None else (
             self.t_first_token - self.t_submit)
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.t_done is None or self.t_first_token is None \
+                or len(self.generated) <= 1:
+            return None
+        return (self.t_done - self.t_first_token) / (len(self.generated) - 1)
+
+
+@dataclass
+class Request:
+    """Trace record: a request as the simulator and the trace generators
+    see it (lengths and arrival time, no token ids)."""
+    rid: int
+    arrive: float
+    in_len: int
+    out_len: int
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+    tokens_done: float = 0.0
+    prefilled: float = 0.0
+
+    @property
+    def finished(self) -> bool:
+        return self.t_finish is not None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.t_first_token is None else (
+            self.t_first_token - self.arrive)
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.t_finish is None or self.t_first_token is None \
+                or self.out_len <= 1:
+            return None
+        return (self.t_finish - self.t_first_token) / (self.out_len - 1)

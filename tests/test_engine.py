@@ -18,7 +18,7 @@ def engine():
 
 def _reference_greedy(engine, prompt, n):
     cfg, plan = engine.cfg, engine.plan
-    caches = M.init_decode_caches(cfg, plan, 1, engine.max_seq,
+    caches = M.init_decode_caches(cfg, plan, 1, engine.max_seq_alloc,
                                   engine.page_tokens)
     lg, caches = M.prefill(engine.params, cfg, plan,
                            {"tokens": jnp.asarray(prompt, jnp.int32)[None]},
@@ -83,4 +83,4 @@ def test_engine_respects_max_seq(engine):
     engine.submit(r)
     engine.run_until_done(400)
     assert r.done
-    assert len(long_prompt) + len(r.generated) <= engine.max_seq
+    assert len(long_prompt) + len(r.generated) <= engine.max_seq_alloc

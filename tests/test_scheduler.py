@@ -5,9 +5,42 @@ from repro.configs import get_config
 from repro.core.cluster_sim import Cluster, Request, hybrid_trace
 from repro.core.costmodel import CostModel
 from repro.core.scheduler import (GygesScheduler, LeastLoadScheduler,
-                                  RoundRobinScheduler, SCHEDULERS)
+                                  RoundRobinScheduler, SCHEDULERS,
+                                  ScaleDown, ScaleUp, SchedulerConfig)
 
 CFG = get_config("qwen2.5-32b")
+
+
+class StubView:
+    """Minimal InstanceView for policy-only tests (no sim, no jax)."""
+
+    def __init__(self, iid, tp=1, max_tp=4, base_seq=16, used=0.0,
+                 reserved=False, long_active=False):
+        self.iid = iid
+        self.tp = tp
+        self.max_tp = max_tp
+        self.base_seq = base_seq
+        self.reserved = reserved
+        self._used = used
+        self._long = long_active
+
+    def max_seq_at(self, tp):
+        return self.base_seq * tp
+
+    def max_seq(self):
+        return self.max_seq_at(self.tp)
+
+    def kv_used_fraction(self):
+        return self._used
+
+    def kv_free_tokens(self):
+        return int(self.max_seq() * 4 * (1 - self._used))
+
+    def load(self):
+        return self._used
+
+    def has_long_request(self):
+        return self._long
 
 
 def test_cost_model_reproduces_table1():
@@ -110,6 +143,58 @@ def test_reserved_instances_divert_short_requests():
     other = V(1, False, 0.94)
     pick = sched.pick([reserved, other], 100, 50)
     assert pick is other
+
+
+def test_long_threshold_is_the_router_classifier():
+    """Satellite: SchedulerConfig.long_threshold is the §5.1 router-side
+    long-request classifier — below it a request is short (unless it
+    exceeds a concrete instance's ceiling), above it long everywhere."""
+    sched = GygesScheduler(SchedulerConfig(long_threshold=100))
+    assert not sched.is_long(100)
+    assert sched.is_long(101)
+    # against a concrete instance, the admission ceiling also classifies
+    tiny = StubView(0, tp=1, base_seq=30)
+    assert sched.is_long(50, tiny)          # 50 > 30 even though <= 100
+    assert not sched.is_long(20, tiny)
+    # and the classification drives routing: with a low threshold the
+    # same total prefers the existing TP>1 instance; with a high one it
+    # prefers TP1 (short-request 4xTP1 preference)
+    tp1 = StubView(0, tp=1, base_seq=1000, used=0.01)
+    tp4 = StubView(1, tp=4, base_seq=1000, used=0.01)
+    low = GygesScheduler(SchedulerConfig(long_threshold=40))
+    high = GygesScheduler(SchedulerConfig(long_threshold=4000))
+    assert low.pick([tp1, tp4], 50, 10) is tp4
+    assert high.pick([tp1, tp4], 50, 10) is tp1
+
+
+def test_decide_scale_up_returns_declarative_action():
+    """Alg 1 lines 14-16: an unplaceable long request yields a ScaleUp
+    naming the least-loaded growable instance and the SMALLEST TP degree
+    whose ceiling fits; shorts never trigger a transformation."""
+    sched = GygesScheduler(SchedulerConfig(long_threshold=16))
+    busy = StubView(0, tp=1, max_tp=4, base_seq=16, used=0.6)
+    idle = StubView(1, tp=1, max_tp=4, base_seq=16, used=0.1)
+    act = sched.decide_scale_up([busy, idle], 24, 6)   # total 30 <= 32
+    assert act == ScaleUp(iid=1, tp_to=2, reason=act.reason)
+    act = sched.decide_scale_up([busy, idle], 40, 8)   # total 48 <= 64
+    assert act.iid == 1 and act.tp_to == 4
+    # short request: wait, never transform
+    assert sched.decide_scale_up([busy, idle], 4, 4) is None
+    # nothing can grow enough
+    assert sched.decide_scale_up(
+        [StubView(0, tp=4, max_tp=4, base_seq=16)], 100, 10) is None
+
+
+def test_schedule_parallelism_returns_scale_downs():
+    sched = GygesScheduler()
+    cold = StubView(0, tp=4, used=0.05)
+    hot = StubView(1, tp=4, used=0.9)
+    busy_long = StubView(2, tp=4, used=0.05, long_active=True)
+    tp1 = StubView(3, tp=1, used=0.0)
+    acts = sched.schedule_parallelism([cold, hot, busy_long, tp1],
+                                      any_long_waiting=False)
+    assert acts == [ScaleDown(iid=0, tp_to=1, reason=acts[0].reason)]
+    assert sched.schedule_parallelism([cold], any_long_waiting=True) == []
 
 
 def test_e2e_method_ordering():
