@@ -90,6 +90,59 @@ def run_smoke() -> List[str]:
             f"{sum(isinstance(a, ScaleDown) for a in cluster.actions)}"]
 
 
+def run_merge_smoke() -> List[str]:
+    """Live cross-instance merge smoke: a request longer than any single
+    engine's full-TP ceiling forces the scheduler to BORROW a whole idle
+    engine (paper Fig. 3) — donor parked, devices adopted, §4.3 session
+    across the widened mesh — then Alg 2 splits and revives the donor.
+    Reports wall time of the merged period alongside the shared metrics
+    schema."""
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.scheduler import ScaleDown, ScaleUp
+    from repro.serving.cluster import ClusterEngine
+    from repro.serving.request import ServeRequest
+
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    devs = jax.devices()
+    if len(devs) < 2:
+        return ["fig3.merge-smoke,SKIPPED (needs >= 2 devices)"]
+    n_inst, w = 2, len(devs) // 2
+    cluster = ClusterEngine(cfg, devs[:2 * w], n_instances=n_inst,
+                            max_batch=max(2, w), max_seq=16 * w,
+                            dwell_steps=4)
+    rng = np.random.default_rng(0)
+    single = cluster.engines[0].max_seq_at(w)        # one engine, full TP
+    merged = cluster.engines[0].max_seq_at(2 * w)    # whole pool
+    reqs = [ServeRequest(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, size=4).tolist(), max_new_tokens=6)
+            for i in range(4)]
+    reqs.append(ServeRequest(rid=99, prompt=rng.integers(
+        0, cfg.vocab_size, size=single + 1).tolist(),
+        max_new_tokens=merged - single - 2))
+    t0 = time.perf_counter()
+    m = cluster.run(reqs, max_steps=10_000)
+    wall = time.perf_counter() - t0
+    merges = [a for a in cluster.actions
+              if isinstance(a, ScaleUp) and a.donor_iids]
+    downs = [a for a in cluster.actions if isinstance(a, ScaleDown)]
+    assert merges, "merge smoke did not merge"
+    assert all(e.tp == 1 and not e.parked for e in cluster.engines)
+    return ["fig3.merge-smoke,arch,devices,single_ceiling_tok,"
+            "merged_ceiling_tok,merges,scale_downs,finished,total,"
+            "n_transforms,wall_s",
+            f"fig3.merge-smoke,{cfg.name},{len(devs)},{single},{merged},"
+            f"{len(merges)},{len(downs)},{m['finished']},{m['total']},"
+            f"{m['n_transforms']:.0f},{wall:.1f}"]
+
+
 def main():
     import argparse
 
@@ -97,8 +150,17 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="live 2-instance mini-cluster instead of the "
                          "Fig. 14 simulation sweep")
+    ap.add_argument("--merge-smoke", action="store_true",
+                    help="live cross-instance merge scenario (a long "
+                         "request borrows a whole idle engine)")
     args = ap.parse_args()
-    for r in (run_smoke() if args.smoke else run()):
+    if args.merge_smoke:
+        rows = run_merge_smoke()
+    elif args.smoke:
+        rows = run_smoke()
+    else:
+        rows = run()
+    for r in rows:
         print(r)
 
 

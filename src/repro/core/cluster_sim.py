@@ -69,6 +69,12 @@ class SimInstance:
         # execute_scale_up), never in place — decide_scale_up skips them
         return self.tp
 
+    @property
+    def width(self) -> int:
+        # a TP-n sim instance spans n GPUs: what it contributes to a
+        # merge (InstanceView.width)
+        return self.tp
+
     def kv_capacity(self) -> int:
         return self.cm.kv_capacity_tokens(self.tp)
 
@@ -198,58 +204,61 @@ class Cluster:
         raise KeyError
 
     # ---- transformation actions ------------------------------------------
-    def execute_scale_up(self, now: float, need_tokens: int,
-                         seed: Optional[SimInstance] = None
-                         ) -> Optional[SimInstance]:
-        """Merge target_tp TP1 instances on one host into one TP-target
-        instance (paper Fig. 3).  With ``seed`` (transformation-unaware
-        baselines) the merge happens around the chosen instance; otherwise
-        the host with the most idle TP1 capacity is preferred."""
-        if self.static:
-            return None
-        if seed is not None and seed.tp > 1:
-            return None  # already scaled; cannot grow further here
-        best_host = None
-        for h in self.hosts:
-            if seed is not None and seed not in h:
-                continue
-            tp1 = [i for i in h if i.tp == 1]
-            if len(tp1) >= self.target_tp:
-                score = sum(i.kv_used_fraction() for i in tp1)
-                if best_host is None or score < best_host[0]:
-                    best_host = (score, h, tp1)
-        if best_host is None:
-            return None
-        _, host, tp1 = best_host
-        if seed is not None:
-            tp1.sort(key=lambda i: (i is not seed, i.kv_used_fraction()))
-            members = tp1[:self.target_tp]
-            merged = SimInstance(self.target_tp, self.cm, self.method)
-            for m in members:
-                merged.active += m.active
-                merged.prefill_q += m.prefill_q
-                host.remove(m)
-            merged.dirty()
-            merged.transform_until = now + self.cm.transform_time(
-                self.method) * TRANSFORM_TIME_FACTOR[self.method]
-            merged.n_transforms = 1
-            self.n_transforms += 1
-            host.append(merged)
-            return merged
-        tp1.sort(key=lambda i: i.kv_used_fraction())
-        members = tp1[:self.target_tp]
-        merged = SimInstance(self.target_tp, self.cm, self.method)
+    def _merge_members(self, host: List[SimInstance],
+                       members: List[SimInstance], now: float
+                       ) -> SimInstance:
+        """Replace ``members`` on ``host`` with one merged instance that
+        absorbs their queues (the sim analog of the live plane's
+        park-donors / adopt-devices / migrate-KV sequence)."""
+        merged = SimInstance(sum(m.tp for m in members), self.cm,
+                             self.method)
         for m in members:
             merged.active += m.active
             merged.prefill_q += m.prefill_q
             host.remove(m)
         merged.dirty()
-        merged.transform_until = now + self.cm.transform_time(self.method) \
-            * TRANSFORM_TIME_FACTOR[self.method]
+        merged.transform_until = now + self.cm.transform_time(
+            self.method) * TRANSFORM_TIME_FACTOR[self.method]
         merged.n_transforms = 1
         self.n_transforms += 1
         host.append(merged)
         return merged
+
+    def execute_scale_up(self, now: float, total_tokens: int,
+                         seed: Optional[SimInstance] = None
+                         ) -> Optional[SimInstance]:
+        """Merge TP1 instances on one host into one TP-N instance (paper
+        Fig. 3).  With ``seed`` (transformation-unaware baselines) the
+        merge happens around the chosen instance; otherwise donor choice
+        is delegated to ``scheduler.decide_merge`` — the SAME policy the
+        live ``ClusterEngine`` executes, so sim and live merge
+        identically (host with the idlest members preferred)."""
+        if self.static:
+            return None
+        if seed is not None and seed.tp > 1:
+            return None  # already scaled; cannot grow further here
+        if seed is not None:
+            host = self._host_of(seed)
+            tp1 = [i for i in host if i.tp == 1]
+            if len(tp1) < self.target_tp:
+                return None
+            tp1.sort(key=lambda i: (i is not seed, i.kv_used_fraction()))
+            return self._merge_members(host, tp1[:self.target_tp], now)
+        best = None
+        for h in self.hosts:
+            act = self.scheduler.decide_merge(h, total_tokens,
+                                              min_width=self.target_tp)
+            if act is None:
+                continue
+            chosen = {act.iid, *act.donor_iids}
+            members = [i for i in h if i.iid in chosen]
+            score = sum(i.kv_used_fraction() for i in members)
+            if best is None or score < best[0]:
+                best = (score, h, members)
+        if best is None:
+            return None
+        _, host, members = best
+        return self._merge_members(host, members, now)
 
     def execute_scale_down(self, inst: SimInstance, now: float) -> None:
         host = self._host_of(inst)
@@ -301,9 +310,9 @@ class Cluster:
                                      or inst.kv_free_tokens() < req.in_len):
                 # transformation-unaware pick: the chosen instance must
                 # scale up around itself (paper Fig. 13 pathology)
-                inst = self.execute_scale_up(now, req.in_len, seed=inst)
+                inst = self.execute_scale_up(now, total, seed=inst)
             if inst is None:
-                inst = self.execute_scale_up(now, req.in_len)  # Alg1 l.15
+                inst = self.execute_scale_up(now, total)  # Alg1 l.15
             if inst is not None and (total > inst.max_seq()
                                      or inst.kv_free_tokens() < req.in_len):
                 inst = None

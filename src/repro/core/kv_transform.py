@@ -223,6 +223,106 @@ def reshard_scale_down(pool: jax.Array, n_workers: int,
 
 
 # ---------------------------------------------------------------------------
+# Data plane: cross-pool migration (live cross-instance merge, paper Fig. 3)
+# ---------------------------------------------------------------------------
+#
+# A live merge parks a donor engine and hands its devices to the target.
+# Two pool operations make that real:
+#
+#   * ``resize_slot_capacity`` — the target's slot-partitioned pools grow
+#     by the donors' per-slot allocation (and shrink back on split), so
+#     physical KV memory follows the TP degree (the §3.4 memory model);
+#   * ``migrate_slot_pages`` — a donor slot's live pages land in the
+#     target pool: ``device_put`` moves the bytes across engines, then
+#     the §4.1 ``copy_page_slices`` kernel scatters them in place — one
+#     contiguous segment per page, the header-centric property.
+
+def resize_slot_capacity(state, new_mps: int, batch: int):
+    """Grow or shrink a slot-partitioned ``PagedState`` to ``new_mps``
+    pages per slot (identity page tables: slot ``b`` owns pool pages
+    ``[b*mps, (b+1)*mps)``).
+
+    Growth appends zero pages to every slot's range (existing content
+    keeps its page index within the slot); shrink truncates trailing
+    pages, which the caller must have verified empty (every live
+    context <= the new capacity).  Handles stacked leading dims (the
+    layer-group axis).  Ring/window caches must not be resized — their
+    capacity is the attention window, not the sequence ceiling."""
+    from repro.paged.pool import PagedState
+
+    pool, pt, seq_lens, pos = state
+    mps = pt.shape[-1]
+    if mps == new_mps:
+        return state
+    nd = pool.ndim
+    lead = pool.shape[:nd - 5]
+    NP, kvs, two, Pg, dh = pool.shape[nd - 5:]
+    assert NP == batch * mps, (NP, batch, mps)
+    pool_b = pool.reshape(*lead, batch, mps, kvs, two, Pg, dh)
+    ax = len(lead) + 1
+    if new_mps > mps:
+        pad = [(0, 0)] * pool_b.ndim
+        pad[ax] = (0, new_mps - mps)
+        pool_b = jnp.pad(pool_b, pad)
+    else:
+        pool_b = jax.lax.slice_in_dim(pool_b, 0, new_mps, axis=ax)
+    new_pool = pool_b.reshape(*lead, batch * new_mps, kvs, two, Pg, dh)
+    ident = (jnp.arange(batch)[:, None] * new_mps
+             + jnp.arange(new_mps)[None, :]).astype(pt.dtype)
+    new_pt = jnp.broadcast_to(ident, pt.shape[:-2] + (batch, new_mps))
+    pos_b = pos.reshape(*pos.shape[:-1], mps, Pg)
+    if new_mps > mps:
+        pad = [(0, 0)] * pos_b.ndim
+        pad[-2] = (0, new_mps - mps)
+        pos_b = jnp.pad(pos_b, pad, constant_values=-1)
+    else:
+        pos_b = jax.lax.slice_in_dim(pos_b, 0, new_mps, axis=pos_b.ndim - 2)
+    new_pos = pos_b.reshape(*pos.shape[:-1], new_mps * Pg)
+    return PagedState(new_pool, new_pt, seq_lens, new_pos)
+
+
+def migrate_slot_pages(src_pool: jax.Array, dst_pool: jax.Array,
+                       n_pages: int, dst_page_start: int, *,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Cross-pool page migration (the live-merge KV import): write the
+    first ``n_pages`` pages of ``src_pool`` (a donor slot's page range,
+    already ``device_put`` onto the destination devices) into
+    ``dst_pool`` starting at page ``dst_page_start``; every other
+    destination page is untouched.
+
+    Canonical header-centric pools (5-D, optionally one stacked leading
+    dim) take the §4.1 Pallas scatter — ``copy_page_slices`` with the
+    full head dimension as ONE slice, i.e. one contiguous segment per
+    page, which is exactly the layout property the paper's Fig. 5
+    sells.  Anything else falls back to a page-range ``dynamic_update``
+    copy of identical content."""
+    from repro.kernels import page_migrate as PM
+
+    nd = dst_pool.ndim
+    src = src_pool.astype(dst_pool.dtype)
+    assert nd == src.ndim and dst_pool.shape[nd - 4:] == src.shape[nd - 4:], (
+        f"incompatible page geometry: src {src.shape} vs dst "
+        f"{dst_pool.shape}")
+    if nd in (5, 6) and (nd == 5 or dst_pool.shape[0] == src.shape[0]):
+        kvs = dst_pool.shape[nd - 4]
+        src_pages = jnp.arange(n_pages, dtype=jnp.int32)
+        zeros = jnp.zeros((n_pages,), jnp.int32)
+        dst_pages = dst_page_start + src_pages
+
+        def scatter(s, d):
+            return PM.copy_page_slices(s, d, src_pages, zeros, dst_pages,
+                                       zeros, heads_per_slice=kvs,
+                                       interpret=interpret)
+
+        if nd == 5:
+            return scatter(src, dst_pool)
+        return jax.vmap(scatter)(src, dst_pool)
+    moved = jax.lax.slice_in_dim(src, 0, n_pages, axis=nd - 5)
+    return jax.lax.dynamic_update_slice_in_dim(dst_pool, moved,
+                                               dst_page_start, axis=nd - 5)
+
+
+# ---------------------------------------------------------------------------
 # Data plane: the explicit kernel path (paper §4.1 as written)
 # ---------------------------------------------------------------------------
 #

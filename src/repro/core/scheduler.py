@@ -12,28 +12,45 @@ and ``decide_scale_up`` (Alg 1 lines 14-16) return ``ScaleUp`` /
 ``ScaleDown`` actions naming an instance and a target TP degree; the
 owning control plane executes them — the live cluster via
 ``Engine.transform(tp_to)`` (one §4.3 schedule step per decode
-iteration), the simulator via its merge/split bookkeeping.
+iteration), the simulator via its merge/split bookkeeping.  A
+``ScaleUp`` whose ``donor_iids`` is non-empty is a CROSS-INSTANCE MERGE
+(paper Fig. 3): the named donors are parked and their devices widen the
+target instance; ``decide_merge`` is the donor-selection policy both
+planes share.  See docs/architecture.md for the module map and
+docs/transformation-lifecycle.md for an executed end-to-end walkthrough.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Protocol, Sequence, Union
+from typing import List, Optional, Protocol, Sequence, Tuple, Union
 
 MAX = float("inf")
 
 
 class InstanceView(Protocol):
-    iid: int
-    tp: int
-    reserved: bool
-    max_tp: int                      # largest in-place TP (== tp if the
-                                     # instance only grows by merging)
+    """The narrow protocol the scheduler sees (units in comments).
 
-    def load(self) -> float: ...
-    def kv_used_fraction(self) -> float: ...
-    def max_seq(self) -> int: ...
-    def max_seq_at(self, tp: int) -> int: ...
-    def kv_free_tokens(self) -> int: ...
+    Both ``cluster_sim.SimInstance`` and the live ``serving.Engine``
+    implement it, so one policy object drives both planes.
+    """
+
+    iid: int                         # stable instance id
+    tp: int                          # current tensor-parallel degree
+    reserved: bool                   # earmarked as a merge member
+                                     # (Alg 2 line 9 update_reserve)
+    max_tp: int                      # largest IN-PLACE TP degree (== tp
+                                     # if the instance only grows by
+                                     # merging, e.g. SimInstance)
+    width: int                       # devices the instance spans; what a
+                                     # merge donor contributes
+
+    def load(self) -> float: ...                 # unitless pressure score
+    def kv_used_fraction(self) -> float: ...     # [0, 1]
+    def max_seq(self) -> int: ...                # tokens, policy ceiling
+    def max_seq_at(self, tp: int) -> int: ...    # tokens at degree tp;
+                                                 # tp may exceed max_tp
+                                                 # (merge prospecting)
+    def kv_free_tokens(self) -> int: ...         # tokens
     def has_long_request(self) -> bool: ...
 
 
@@ -43,15 +60,33 @@ class InstanceView(Protocol):
 
 @dataclass(frozen=True)
 class ScaleUp:
-    """Grow instance ``iid`` to TP ``tp_to`` (Alg 1 execute_scale_up)."""
+    """Grow instance ``iid`` to TP degree ``tp_to`` (Alg 1 lines 14-16,
+    execute_scale_up).
+
+    Two execution forms, distinguished by ``donor_iids``:
+
+    * empty (default): an IN-PLACE re-factorization of the instance's
+      own devices (``tp_to <= max_tp``);
+    * non-empty: a CROSS-INSTANCE MERGE (paper Fig. 3) — the owning
+      control plane drains and parks each donor, hands its devices to
+      instance ``iid``, migrates the donors' live KV into the target's
+      pool, and transforms the target to ``tp_to`` across the widened
+      device set.  Invariant: target and donors are all at TP1 and
+      ``tp_to`` equals the combined device width.
+    """
     iid: int
     tp_to: int
     reason: str = ""
+    donor_iids: Tuple[int, ...] = ()
 
 
 @dataclass(frozen=True)
 class ScaleDown:
-    """Shrink instance ``iid`` to TP ``tp_to`` (Alg 2)."""
+    """Shrink instance ``iid`` to TP degree ``tp_to`` (Alg 2 line 7).
+
+    On a previously merged instance the control plane also releases the
+    borrowed devices back to the pool and revives the parked donors —
+    the declarative action itself stays width-agnostic."""
     iid: int
     tp_to: int = 1
     reason: str = ""
@@ -81,6 +116,17 @@ class SchedulerConfig:
 
 
 class BaseScheduler:
+    """Routing + parallelism policy skeleton.
+
+    Subclasses override ``pick`` (Alg 1 routing).  The resource-manager
+    half — ``want_scale_down`` / ``schedule_parallelism`` (Alg 2) and
+    ``decide_scale_up`` / ``decide_merge`` (Alg 1 lines 14-16) — lives
+    here so every scheduler, transformation-aware or not, manages
+    instance parallelism the same way; what differs across schedulers is
+    how often their routing *forces* an avoidable transformation
+    (Fig. 13).  All token quantities are final context footprints
+    (prompt + full generation budget), the admission-control unit."""
+
     name = "base"
 
     def __init__(self, cfg: Optional[SchedulerConfig] = None):
@@ -127,10 +173,14 @@ class BaseScheduler:
     def decide_scale_up(self, instances: Sequence[InstanceView],
                         input_len: int, output_len_hint: int
                         ) -> Optional[ScaleUp]:
-        """Alg 1 lines 14-16 for in-place growable instances (live
-        engines): when routing found no valid instance for a LONG
-        request, choose the least-loaded instance that can reach the
-        needed capacity and the smallest TP degree that fits it.  Short
+        """Alg 1 lines 14-16: when routing found no valid instance for a
+        LONG request (``input_len + output_len_hint`` tokens), return the
+        cheapest ``ScaleUp`` that creates the capacity.
+
+        Preference order: (1) IN-PLACE — the least-loaded instance whose
+        own devices can reach the needed ceiling, at the smallest TP
+        degree that fits (``min_tp_for``); (2) CROSS-INSTANCE MERGE
+        (``decide_merge``) when no instance can grow enough alone.  Short
         requests never trigger a transformation — they wait for capacity
         (returns None)."""
         total = input_len + output_len_hint
@@ -149,7 +199,48 @@ class BaseScheduler:
             if best is None or key < best[0]:
                 best = (key, ScaleUp(iid=inst.iid, tp_to=tp_to,
                                      reason=f"long request ({total} tok)"))
-        return best[1] if best else None
+        if best:
+            return best[1]
+        return self.decide_merge(instances, total)
+
+    def decide_merge(self, instances: Sequence[InstanceView],
+                     total_tokens: int, min_width: Optional[int] = None
+                     ) -> Optional[ScaleUp]:
+        """Compose a cross-instance merge (paper Fig. 3): pick TP1
+        instances, idlest first, until their combined device width both
+        reaches ``min_width`` (default ``cfg.target_tp``) and yields an
+        admission ceiling that fits ``total_tokens``.
+
+        The busiest chosen member becomes the merge TARGET (it keeps its
+        state in place — fewest live-KV exports); the rest are DONORS the
+        control plane parks.  Donor choice is the one policy shared by
+        the simulator (``Cluster.execute_scale_up``) and the live plane
+        (``ClusterEngine``), so sim and live merge identically.
+
+        Only widths that DIVIDE the pool width (the summed width of
+        ``instances``) are proposed: padding plans are built for the
+        full pool, so exactly its divisors keep weight shards aligned —
+        a width-6 merge on an 8-wide pool is not executable and the
+        loop keeps accumulating instead.  Returns None when fewer than
+        two TP1 instances exist or even merging every one cannot reach
+        the needed ceiling."""
+        min_w = self.cfg.target_tp if min_width is None else min_width
+        pool = sum(getattr(i, "width", i.tp) for i in instances)
+        members: List[InstanceView] = []
+        width = 0
+        for inst in sorted((i for i in instances if i.tp == 1),
+                           key=lambda i: i.kv_used_fraction()):
+            members.append(inst)
+            width += getattr(inst, "width", inst.tp)
+            if (len(members) >= 2 and width >= min_w
+                    and pool % width == 0
+                    and members[0].max_seq_at(width) >= total_tokens):
+                target = max(members, key=lambda i: i.kv_used_fraction())
+                donors = tuple(i.iid for i in members if i is not target)
+                return ScaleUp(
+                    iid=target.iid, tp_to=width, donor_iids=donors,
+                    reason=f"merge x{len(members)} ({total_tokens} tok)")
+        return None
 
 
 class RoundRobinScheduler(BaseScheduler):

@@ -17,29 +17,58 @@ drives the event simulator:
   serving and in-flight tokens are bit-exact across the boundary;
 * **scale-down** (Alg 2): each cluster step, ``schedule_parallelism``
   scans the dwell-gated instances and returns ``ScaleDown`` actions the
-  plane executes the same way.
+  plane executes the same way;
+* **cross-instance merge** (paper Fig. 3): the cluster owns ONE shared
+  device pool — every engine's devices are a loanable subset.  A
+  ``ScaleUp`` naming ``donor_iids`` is executed by draining + parking
+  each donor, exporting its in-flight KV, handing its devices to the
+  target (``Engine.adopt_devices`` grows the pool so physical KV
+  follows the TP degree), importing the donors' requests
+  (cross-engine ``device_put`` + §4.1 kernel scatter), and running the
+  SAME ``Engine.transform`` session across the widened mesh.  A later
+  ``ScaleDown`` on the merged engine transforms back onto its home
+  devices, returns the loan, and revives the parked donors.
 
 The sim/live split this closes: ``cluster_sim.Cluster`` and
-``ClusterEngine`` consume the same scheduler, the same request metrics
-(``serving.metrics.summarize``) and report a key-identical schema.
+``ClusterEngine`` consume the same scheduler (including the shared
+merge donor-selection policy, ``decide_merge``), the same request
+metrics (``serving.metrics.summarize``) and report a key-identical
+schema.  See docs/architecture.md (module map) and
+docs/transformation-lifecycle.md (an executed merge walkthrough).
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import (Action, BaseScheduler, GygesScheduler,
-                                  ScaleUp, SchedulerConfig, min_tp_for)
+                                  ScaleDown, ScaleUp, SchedulerConfig,
+                                  min_tp_for)
 from repro.serving.engine import Engine
 from repro.serving.metrics import summarize
 from repro.serving.request import ServeRequest
 
 
 class ClusterEngine:
-    """N live transformable engines + one scheduler policy."""
+    """N live transformable engines over one shared device pool, driven
+    by one scheduler policy.
+
+    Invariants the control plane maintains:
+
+    * every pool device is owned by exactly one non-parked engine (or on
+      loan to a merge target, recorded in ``_loans``);
+    * at most one transformation session per engine; scale actions only
+      target engines with none in flight;
+    * the padding plan is built for the FULL pool width, so any merged
+      TP degree keeps weight shards page-aligned (callers passing
+      ``params`` must build them with that plan — ``self.plan``);
+    * sim parity: ``metrics()`` is key-identical with
+      ``cluster_sim.Cluster.metrics`` and every scale decision comes
+      from the same ``BaseScheduler`` hooks the simulator consumes.
+    """
 
     def __init__(self, cfg: ModelConfig, devices: Sequence[jax.Device],
                  n_instances: int = 2, max_batch: int = 2,
@@ -54,17 +83,22 @@ class ClusterEngine:
         W = len(devices) // n_instances
         self.cfg = cfg
         self.dwell_steps = dwell_steps
+        self.total_width = n_instances * W      # the shared device pool
         rng = rng if rng is not None else jax.random.PRNGKey(0)
+        from repro.core.padding import make_plan
+        # plan for the FULL pool width: a merge may factorize any engine
+        # across every pool device, and page alignment must survive that
+        self.plan = make_plan(cfg, self.total_width, mode="page")
         if params is None:
-            from repro.core.padding import make_plan
             from repro.models import model as M
             params = M.init_params(jax.random.fold_in(rng, 1), cfg,
-                                   make_plan(cfg, W, mode="page"))
+                                   self.plan)
+        self._params_src = params               # revive() re-shards these
         self.engines: List[Engine] = [
             Engine(cfg, params=params, max_batch=max_batch,
                    max_seq=max_seq, page_tokens=page_tokens, rng=rng,
                    layout=layout, devices=list(devices[k * W:(k + 1) * W]),
-                   transform_attn=transform_attn, iid=k)
+                   transform_attn=transform_attn, iid=k, plan=self.plan)
             for k in range(n_instances)]
         if scheduler is None:
             base = self.engines[0].max_seq_at(1)
@@ -79,6 +113,9 @@ class ClusterEngine:
         self.n_transforms = 0
         self.total_tokens = 0
         self._last_transform_step = {e.iid: -(10 ** 9) for e in self.engines}
+        # device-pool ledger: target iid -> [(donor iid, loaned devices)]
+        self._loans: Dict[int, List[Tuple[int, List[jax.Device]]]] = {}
+        self._releasing: Set[int] = set()       # splits awaiting drain
         # stamped at the first submit so engine construction / jit
         # compile time does not dilute throughput_tps
         self.t_start: Optional[float] = None
@@ -88,14 +125,21 @@ class ClusterEngine:
     def _engine(self, iid: int) -> Engine:
         return next(e for e in self.engines if e.iid == iid)
 
+    def _active_engines(self) -> List[Engine]:
+        """Engines that currently own devices (parked donors are
+        invisible to routing and scheduling until revived)."""
+        return [e for e in self.engines if not e.parked]
+
     def _transformable(self) -> List[Engine]:
         """Scale actions may only target engines with no transformation
         in flight (one open session per engine).  Routing, by contrast,
-        sees every engine: a transforming engine advertises its *target*
-        capacity (``Engine.max_seq``) and queues admissions until the new
-        degree is resident, so follow-up long requests ride the existing
-        transformation instead of triggering another one."""
-        return [e for e in self.engines if not e.transforming]
+        sees every non-parked engine: a transforming engine advertises
+        its *target* capacity (``Engine.max_seq``) and queues admissions
+        until the new degree is resident, so follow-up long requests
+        ride the existing transformation instead of triggering another
+        one."""
+        return [e for e in self.engines
+                if not e.transforming and not e.parked]
 
     def _update_reserve(self) -> None:
         """update_reserve() (Alg 2 line 9), live form: earmark the
@@ -105,18 +149,22 @@ class ClusterEngine:
             return
         for e in self.engines:
             e.reserved = False
-        tp1 = sorted((e for e in self.engines if e.tp == 1),
+        tp1 = sorted((e for e in self._active_engines() if e.tp == 1),
                      key=lambda e: e.kv_used_fraction())
         if tp1:
             tp1[0].reserved = True
 
     # ------------------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
+        """Route one request (Alg 1).  Rejects only requests that exceed
+        the whole POOL's merged capacity — anything below that is
+        servable by borrowing idle engines."""
         total = req.total_tokens
-        if total > max(e.max_seq_at(e.max_tp) for e in self.engines):
+        if total > max(e.max_seq_at(self.total_width)
+                       for e in self._active_engines()):
             raise ValueError(
-                f"request {req.rid}: {total} tokens exceeds every "
-                f"instance's maximum-TP capacity")
+                f"request {req.rid}: {total} tokens exceeds the device "
+                f"pool's merged capacity")
         if self.t_start is None:
             self.t_start = time.monotonic()
         self.requests.append(req)
@@ -125,59 +173,143 @@ class ClusterEngine:
 
     def _place(self, req: ServeRequest) -> bool:
         total = req.total_tokens
-        inst = self.scheduler.pick(self.engines, len(req.prompt),
-                                   req.max_new_tokens)
+        inst = self.scheduler.pick(self._active_engines(),
+                                   len(req.prompt), req.max_new_tokens)
         if inst is not None and total > inst.max_seq():
             # transformation-unaware pick (RR/LLF skip the valid() check):
             # the chosen instance must scale up around itself — the
             # paper's Fig. 13 pathology, reproduced live
-            if inst.transforming or inst.max_seq_at(inst.max_tp) < total:
+            if inst.transforming:
                 return False
-            self._execute(ScaleUp(iid=inst.iid,
-                                  tp_to=min_tp_for(inst, total),
-                                  reason="unaware routing"))
+            if inst.max_seq_at(inst.max_tp) < total:
+                # not even this engine's own devices can ever fit it:
+                # fall through to the decide path, which can merge
+                inst = None
+            else:
+                self._execute(ScaleUp(iid=inst.iid,
+                                      tp_to=min_tp_for(inst, total),
+                                      reason="unaware routing"))
         if inst is not None:
             inst.submit(req)
             return True
         act = self.scheduler.decide_scale_up(self._transformable(),
                                              len(req.prompt),
                                              req.max_new_tokens)
-        if act is None:
+        if act is None or not self._execute(act):
             return False
-        self._execute(act)
         # the request rides the transforming engine's queue; Engine.step
         # admits it once the new TP degree is resident
         self._engine(act.iid).submit(req)
         return True
 
-    def _execute(self, act: Action) -> None:
+    # ---- action execution (the §5 control plane's write side) ---------
+    def _execute(self, act: Action) -> bool:
+        """Execute one declarative action.  Returns False when a merge's
+        preconditions fail (e.g. no free slots for the donors' in-flight
+        requests) — the caller leaves the request waiting and a later
+        retry re-decides."""
         eng = self._engine(act.iid)
-        n_steps = eng.transform(act.tp_to)
+        if isinstance(act, ScaleUp) and act.donor_iids:
+            n_steps = self._merge(act, eng)
+            if n_steps is None:
+                return False
+        elif isinstance(act, ScaleDown) and self._loans.get(act.iid):
+            n_steps = self._split(act, eng)
+        else:
+            n_steps = eng.transform(act.tp_to)
         self.actions.append(act)
         self.n_transforms += 1
         self._last_transform_step[eng.iid] = self.steps
         self._update_reserve()
         kind = "up" if isinstance(act, ScaleUp) else "down"
         assert n_steps > 0 or act.tp_to == eng.tp, (kind, act)
+        return True
+
+    def _merge(self, act: ScaleUp, eng: Engine) -> Optional[int]:
+        """Cross-instance merge (Fig. 3): park the donors, loan their
+        devices to ``eng``, migrate the donors' live KV into its grown
+        pool, then transform across the widened mesh.  Returns the
+        session's step count, or None if preconditions fail (nothing is
+        mutated in that case)."""
+        donors = [self._engine(i) for i in act.donor_iids]
+        if eng.transforming or eng.parked or eng.tp != 1:
+            return None
+        if any(d.transforming or d.parked or d.tp != 1 for d in donors):
+            return None
+        n_inflight = sum(1 for d in donors for s in d.slots
+                         if s is not None)
+        if n_inflight > eng.slots.count(None):
+            return None
+        assert all(d.seq_quantum == eng.seq_quantum for d in donors), (
+            "merging requires uniform per-device admission quanta")
+        loans: List[Tuple[int, List[jax.Device]]] = []
+        exported = []
+        adopted: List[jax.Device] = []
+        for d in donors:
+            # donor queue back to the router (FCFS head: they were
+            # admitted before anything currently waiting)
+            self.waiting[:0] = d.waiting
+            d.waiting = []
+            exported += d.export_active()
+            devs = d.park()
+            loans.append((d.iid, devs))
+            adopted += devs
+        eng.adopt_devices(adopted)
+        for req, sub in exported:
+            eng.import_request(req, sub, repin=False)
+        if exported:
+            eng.repin_cache_shardings()
+        n_steps = eng.transform(act.tp_to)
+        self._loans.setdefault(eng.iid, []).extend(loans)
+        return n_steps
+
+    def _split(self, act: ScaleDown, eng: Engine) -> int:
+        """Undo a merge: transform back onto the engine's home devices;
+        the loaned devices are returned and the donors revived once the
+        session drains (``_finalize_releases``)."""
+        assert act.tp_to == 1, "merged engines decompose fully (Alg 2)"
+        n_steps = eng.transform(act.tp_to, devices=eng.home_devices)
+        self._releasing.add(eng.iid)
+        return n_steps
+
+    def _finalize_releases(self) -> None:
+        """Second half of a split: once the shrinking engine's session
+        has drained (its arrays live only on its home devices again),
+        return each loan and revive the parked donor on it."""
+        for iid in list(self._releasing):
+            eng = self._engine(iid)
+            if eng.transforming:
+                continue
+            self._releasing.discard(iid)
+            for donor_iid, devs in self._loans.pop(iid, []):
+                donor = self._engine(donor_iid)
+                donor.revive(devs, self._params_src)
+                self._last_transform_step[donor_iid] = self.steps
+            self._update_reserve()
 
     # ------------------------------------------------------------------
     def _any_long_waiting(self) -> bool:
-        cap1 = max(e.max_seq_at(1) for e in self.engines)
+        cap1 = max(e.max_seq_at(1) for e in self._active_engines())
         return any(self.scheduler.is_long(r.total_tokens)
                    or r.total_tokens > cap1 for r in self.waiting)
 
     def step(self) -> Dict[str, int]:
-        """One control-plane iteration: retry routing, run Alg 2, then
-        one engine iteration each (a transforming engine executes one
-        §4.3 schedule step before its decode)."""
-        # FCFS retry of the router queue (stop at the first unplaceable)
+        """One control-plane iteration: retry routing, run Alg 2, one
+        engine iteration each (a transforming engine executes one §4.3
+        schedule step before its decode), then finalize any completed
+        splits (return device loans, revive parked donors)."""
+        # FCFS retry of the router queue (stop at the first unplaceable).
+        # Pop BEFORE placing: a merge inside _place prepends the donor's
+        # queue to self.waiting, so popping afterwards would drop one of
+        # those and leave the placed request queued twice.
         while self.waiting:
-            if not self._place(self.waiting[0]):
+            req = self.waiting.pop(0)
+            if not self._place(req):
+                self.waiting.insert(0, req)
                 break
-            self.waiting.pop(0)
         # Alg 2 over dwell-gated, non-transforming instances
         eligible = [
-            e for e in self.engines
+            e for e in self._active_engines()
             if e.tp > 1 and not e.transforming
             and self.steps - self._last_transform_step[e.iid]
             >= self.dwell_steps]
@@ -185,7 +317,7 @@ class ClusterEngine:
                 eligible, self._any_long_waiting()):
             self._execute(act)
         emitted = active = queued = 0
-        for e in self.engines:
+        for e in self._active_engines():
             s = e.step()
             emitted += s["emitted"]
             active += s["active"]
@@ -195,17 +327,19 @@ class ClusterEngine:
                 # now > transform_until + dwell) — keep re-stamping
                 # until the schedule drains
                 self._last_transform_step[e.iid] = self.steps
+        self._finalize_releases()
         self.total_tokens += emitted
         self.steps += 1
         return {"active": active, "emitted": emitted,
                 "engine_waiting": queued, "router_waiting":
                 len(self.waiting),
-                "transforming": sum(e.transforming for e in self.engines)}
+                "transforming": sum(e.transforming for e in self.engines),
+                "parked": sum(e.parked for e in self.engines)}
 
     # ------------------------------------------------------------------
     @property
     def idle(self) -> bool:
-        return (not self.waiting
+        return (not self.waiting and not self._releasing
                 and all(not e.transforming and not e.waiting
                         and all(s is None for s in e.slots)
                         for e in self.engines))

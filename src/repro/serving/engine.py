@@ -20,11 +20,14 @@ Two placements:
 
 The engine also implements the ``InstanceView`` protocol from
 ``core/scheduler.py`` (load, kv_used_fraction, max_seq, kv_free_tokens,
-has_long_request, reserved), so the §5 scheduler that drives the
+has_long_request, reserved, width), so the §5 scheduler that drives the
 simulator drives live engines unchanged — ``serving/cluster.py`` is that
-control plane.  ``max_seq_alloc`` is the *allocated* per-slot ceiling
-(physical pool size, fixed); ``max_seq()`` is the *admission* ceiling,
-which scales with the live TP degree per the paper's memory model.
+control plane.  The physical-vs-policy capacity contract
+(``max_seq_alloc`` vs ``max_seq()``) is defined in ONE place:
+``Engine.max_seq_at``.  Engines also participate in cross-instance
+merges (adopt_devices / park / revive / export_active /
+import_request — see the "merge lifecycle" section below and
+docs/transformation-lifecycle.md).
 """
 from __future__ import annotations
 
@@ -58,12 +61,20 @@ class Engine:
                  layout: str = "header_centric",
                  devices: Optional[List[jax.Device]] = None,
                  transform_attn: bool = True,
-                 iid: Optional[int] = None):
+                 iid: Optional[int] = None,
+                 plan: Optional[PaddingPlan] = None):
+        """``plan`` overrides the padding plan; a cluster whose engines
+        may MERGE must pass one built for the full device-pool width so
+        weight shard boundaries stay page-aligned at every reachable TP
+        degree (a wider plan is valid at any narrower degree)."""
         self.cfg = cfg
-        self.devices = devices
+        self.devices = list(devices) if devices else None
         self.W = len(devices) if devices else 1
-        self.plan = (make_plan(cfg, self.W, mode="page") if devices
-                     else make_plan(cfg, 1))
+        if plan is not None:
+            self.plan = plan
+        else:
+            self.plan = (make_plan(cfg, self.W, mode="page") if devices
+                         else make_plan(cfg, 1))
         self.max_batch = max_batch
         self.max_seq_alloc = max_seq
         self.page_tokens = page_tokens
@@ -71,6 +82,26 @@ class Engine:
         self.reserved = False
         self.layout = layout
         self.transform_attn = transform_attn
+        # -- capacity contract (THE one place; see max_seq_at) ----------
+        # seq_quantum is the per-device admission share, FROZEN at
+        # construction; max_seq_alloc (the allocated per-slot pool
+        # ceiling) tracks seq_quantum * W as devices are adopted and
+        # released, so physical KV always backs the policy ceiling.
+        if devices:
+            assert max_seq % self.W == 0, (
+                f"max_seq={max_seq} must divide over the {self.W} devices"
+                " (per-device admission quantum must be whole)")
+            assert max_seq % page_tokens == 0, (
+                f"max_seq={max_seq} must be page-aligned "
+                f"(page_tokens={page_tokens}) so merge-time pool resizes "
+                "stay pure page-range copies")
+        self.seq_quantum = max_seq // self.W if devices else max_seq
+        # -- cross-instance merge lifecycle -----------------------------
+        self.home_devices = list(devices) if devices else None
+        self.adopted_devices: List[jax.Device] = []
+        self.parked = False
+        self._pending_devices: Optional[List[jax.Device]] = None
+        self._session_cross = False
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.rng = rng
         self.params = params if params is not None else M.init_params(
@@ -112,9 +143,9 @@ class Engine:
         self._decode = _decode
 
     # -- mesh helpers (mesh placement only) ------------------------------
-    def _make_mesh(self, tp: int):
+    def _make_mesh(self, tp: int, devices=None):
         from repro.launch.mesh import make_instance_mesh
-        return make_instance_mesh(self.devices, tp)
+        return make_instance_mesh(devices or self.devices, tp)
 
     def _shardings(self, pspec_tree, mesh):
         from repro.core.transform_engine import shard_tree
@@ -122,27 +153,49 @@ class Engine:
 
     # -- §4.3 live transformation ----------------------------------------
     def transform(self, tp_to: int, layers_per_step: int = 1,
-                  interpret=None) -> int:
-        """Begin a live TP transformation.  Returns the number of
-        schedule steps; each subsequent ``step()`` executes one of them
-        before its decode iteration, and the engine returns to the
-        stacked fast path once the schedule drains.  In-flight requests
-        keep decoding throughout; their KV crosses the boundary
-        bit-exactly (the data plane only moves bytes)."""
+                  interpret=None,
+                  devices: Optional[List[jax.Device]] = None) -> int:
+        """Begin a live TP transformation to degree ``tp_to``.  Returns
+        the number of §4.3 schedule steps; each subsequent ``step()``
+        executes one of them before its decode iteration, and the engine
+        returns to the stacked fast path once the schedule drains.
+
+        Two regimes:
+
+        * SAME device set (the default): in-flight requests keep
+          decoding throughout via the per-layer path; their KV crosses
+          the TP boundary bit-exactly (the data plane only moves bytes).
+        * CROSS device set — the target mesh spans adopted devices
+          (merge, after ``adopt_devices``) or a ``devices=`` subset
+          (split: the engine sheds its adopted devices when the session
+          drains).  Mid-session layers then live on two different device
+          assemblies, which one XLA computation cannot mix, so decode
+          PAUSES until the schedule drains; token streams stay exact,
+          only their timing shifts.
+
+        Invariants: no session may already be open; ``tp_to`` divides
+        the target device count; a merge transform requires
+        ``adopt_devices`` to have grown the pool first so migrated KV
+        has page-aligned room."""
         from repro.core import instance as I
         from repro.core import transform_engine as TE
 
         assert self.mesh is not None, "transform requires devices="
         assert self._session is None, "transformation already in progress"
-        if tp_to == self.tp:
+        target_devs = list(devices) if devices is not None else self.devices
+        if tp_to == self.tp and target_devs == self.devices:
             return 0
         session = TE.open_owner_session(
-            self, tp_to, self._make_mesh(tp_to),
+            self, tp_to, self._make_mesh(tp_to, target_devs),
             param_spec_fn=lambda t: I.param_pspecs(t, self.transform_attn),
             cache_spec_fn=I.layer_cache_pspecs,
             layers_per_step=layers_per_step,
             storage_layout=self.layout, interpret=interpret)
         self.tp_pending = tp_to
+        self._pending_devices = (target_devs
+                                 if target_devs != self.devices else None)
+        self._session_cross = (set(self.mesh.devices.flat)
+                               != set(target_devs))
         return session.schedule.n_steps
 
     @property
@@ -156,20 +209,38 @@ class Engine:
 
     @property
     def max_tp(self) -> int:
-        """Largest TP degree this engine can transform to in place."""
+        """Largest TP degree this engine can transform to in place
+        (its current device count; merging raises it)."""
+        return self.W
+
+    @property
+    def width(self) -> int:
+        """Devices this engine spans — what it contributes as a merge
+        donor (``InstanceView.width``)."""
         return self.W
 
     def max_seq_at(self, tp: int) -> int:
-        """Admission ceiling at TP degree ``tp`` (the paper's memory
-        model): per-device KV budget is fixed, so the allocated
-        ``max_seq_alloc`` is the full-width (tp == W) ceiling and a TP-tp
-        instance aggregates tp devices' share of it.  Single-device
-        engines have no transformable axis and expose the full
-        allocation."""
-        if self.W <= 1:
+        """Admission ceiling (tokens per request) at TP degree ``tp``.
+
+        THE capacity contract — the single place the physical/policy
+        split is defined (everything else derives from it):
+
+        * ``seq_quantum`` — per-device admission share (tokens), frozen
+          at construction (the paper's fixed per-device KV budget);
+        * ``max_seq_at(tp) == seq_quantum * tp`` — the POLICY ceiling at
+          degree ``tp``; ``tp`` may exceed ``max_tp`` when the scheduler
+          prospects a merge (borrowed devices bring their budget along);
+        * ``max_seq_alloc`` — the PHYSICAL per-slot pool ceiling, kept
+          ``== seq_quantum * W`` by adopt/release (asserted in
+          ``check_capacity_invariant``), so any in-place policy ceiling
+          (``tp <= W``) is always physically backed.
+
+        Single-device engines (``devices=None``) have no transformable
+        axis and expose the full allocation at any degree."""
+        assert tp >= 1, tp
+        if self.devices is None:
             return self.max_seq_alloc
-        base = max(1, self.max_seq_alloc // self.W)
-        return min(self.max_seq_alloc, base * tp)
+        return self.seq_quantum * tp
 
     def max_seq(self) -> int:
         """Admission ceiling at the *policy* degree: while a scale-up is
@@ -178,6 +249,18 @@ class Engine:
         sends follow-up long requests here instead of transforming a
         second instance."""
         return self.max_seq_at(self.tp_pending or self.tp)
+
+    def check_capacity_invariant(self) -> None:
+        """Assert the ``max_seq_alloc``/``max_seq()`` contract from
+        ``max_seq_at``: physical backs policy at every lifecycle point
+        (construction, adopt, transform, release, revive)."""
+        if self.devices is None or self.parked:
+            return
+        assert self.max_seq_alloc == self.seq_quantum * self.W, (
+            self.max_seq_alloc, self.seq_quantum, self.W)
+        assert (self.tp_pending or self.tp) <= self.W, (
+            self.tp, self.tp_pending, self.W)
+        assert self.max_seq() <= self.max_seq_alloc
 
     def kv_capacity_tokens(self) -> int:
         """Slot-partitioned pools: every slot owns max_seq() tokens."""
@@ -210,6 +293,155 @@ class Engine:
         session = TE.close_owner_session(self)
         self.tp_pending = None
         self.transform_reports.extend(session.reports)
+        self._session_cross = False
+        if self._pending_devices is not None:
+            # split after a merge: the drained session landed every array
+            # on the retained subset — shed the adopted devices and shrink
+            # the pool back to this width's allocation
+            self.devices = list(self._pending_devices)
+            self.W = len(self.devices)
+            self.adopted_devices = []
+            self._pending_devices = None
+            self._resize_pool(self.seq_quantum * self.W)
+        self.check_capacity_invariant()
+
+    # -- cross-instance merge lifecycle (paper Fig. 3, §3.4) -------------
+    #
+    # The control plane (serving/cluster.py) drives a merge as:
+    #   donor.export_active() -> donor.park() -> target.adopt_devices()
+    #   -> target.import_request(...) -> target.transform(combined_W)
+    # and a split as transform(1, devices=home_devices) followed by
+    # donor.revive().  Each method keeps the capacity contract
+    # (max_seq_at) true at every intermediate point.
+
+    def adopt_devices(self, devs: List[jax.Device]) -> None:
+        """Widen this engine with a parked donor's devices.  The pool
+        grows by the donors' per-slot allocation BEFORE the transform so
+        migrated KV has page-aligned room; the mesh still spans the old
+        subset until ``transform`` carries the state across."""
+        assert self.mesh is not None and not self.transforming
+        assert self.tp == 1, "merge targets must be at TP1 (Fig. 3)"
+        assert devs, "nothing to adopt"
+        self.adopted_devices = self.adopted_devices + list(devs)
+        self.devices = self.devices + list(devs)
+        self.W = len(self.devices)
+        self._resize_pool(self.seq_quantum * self.W)
+        self.check_capacity_invariant()
+
+    def park(self) -> List[jax.Device]:
+        """Donor side of a merge: release every device and drop the live
+        state (the control plane has already exported in-flight KV via
+        ``export_active``).  Returns the released devices; the engine
+        stays constructed and is brought back by ``revive``."""
+        assert not self.transforming and not self.parked
+        assert all(s is None for s in self.slots) and not self.waiting, (
+            "park requires a drained engine (export_active first)")
+        devs = list(self.devices)
+        self.parked = True
+        self.params = self.caches = None
+        self.mesh = None
+        self.devices = []
+        return devs
+
+    def revive(self, devices: List[jax.Device], params) -> None:
+        """Rebuild a parked engine on ``devices`` (normally its own,
+        returned by a split): fresh TP1 mesh, re-sharded ``params``
+        (host or donor copies — weights are identical cluster-wide),
+        empty KV pool at this width's allocation."""
+        assert self.parked
+        self.devices = list(devices)
+        self.home_devices = list(devices)
+        self.W = len(devices)
+        self.parked = False
+        self.tp = 1
+        self.max_seq_alloc = self.seq_quantum * self.W
+        self.mesh = self._make_mesh(1)
+        self.params = jax.device_put(
+            params, self._shardings(self._pspecs, self.mesh))
+        caches = M.init_decode_caches(self.cfg, self.plan, self.max_batch,
+                                      self.max_seq_alloc, self.page_tokens,
+                                      self.layout)
+        self.caches = jax.device_put(
+            caches, self._shardings(self._cspecs, self.mesh))
+        self.slots = [None] * self.max_batch
+        self.check_capacity_invariant()
+
+    def _resize_pool(self, new_max_seq: int) -> None:
+        """Reallocate every full-attention paged pool at ``new_max_seq``
+        tokens per slot (ring/window caches keep their window).  Pure
+        page-range copies thanks to the slot-partitioned identity
+        layout; runs eagerly on the current mesh."""
+        from repro.core import kv_transform as KT
+        from repro.paged.pool import PagedState
+
+        if new_max_seq == self.max_seq_alloc:
+            return
+        # full-attention pools are allocated at the page-rounded ceiling;
+        # compare against THAT, not the raw token count, so an unaligned
+        # max_seq cannot misclassify them as window caches
+        old_cap = -(-self.max_seq_alloc // self.page_tokens) \
+            * self.page_tokens
+        new_mps = -(-new_max_seq // self.page_tokens)
+
+        def visit(c):
+            if isinstance(c, PagedState):
+                if c.positions.shape[-1] != old_cap:
+                    return c          # window cache: capacity is the window
+                return KT.resize_slot_capacity(c, new_mps, self.max_batch)
+            if isinstance(c, dict):
+                return {k: visit(v) for k, v in c.items()}
+            if isinstance(c, (list, tuple)):
+                out = [visit(v) for v in c]
+                return tuple(out) if isinstance(c, tuple) else out
+            return c
+
+        self.caches = {k: visit(v) for k, v in self.caches.items()}
+        self.max_seq_alloc = new_max_seq
+
+    def export_active(self) -> List[Tuple[ServeRequest, Dict]]:
+        """Donor-side KV export: pull every in-flight request out of its
+        slot as ``(request, batch-1 cache tree)`` pairs for
+        ``import_request`` on the merge target.  Slots are freed; the
+        byte-exact KV travels with the request."""
+        out = []
+        for slot, r in enumerate(self.slots):
+            if r is None:
+                continue
+            out.append((r, self._extract_slot_cache(slot)))
+            self.slots[slot] = None
+        return out
+
+    def import_request(self, req: ServeRequest, sub: Dict,
+                       repin: bool = True) -> None:
+        """Target-side KV import (cross-engine ``device_put`` + §4.1
+        kernel scatter): land a donor request's slot cache in a free
+        local slot and resume decoding it here, bit-exactly.
+
+        The kernel scatter runs on replicated views, so the canonical
+        cache shardings must be re-pinned afterwards; pass
+        ``repin=False`` when importing a batch and call
+        ``repin_cache_shardings`` once at the end (one whole-pool move
+        instead of one per request)."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        slot = self._free_slot()
+        assert slot is not None, "no free slot for donor import"
+        if self.mesh is not None:
+            # the cross-engine move: donor arrays -> this engine's devices
+            sub = jax.device_put(sub, jax.tree.map(
+                lambda _: NamedSharding(self.mesh, P()), sub))
+        self._import_slot_cache(sub, slot)
+        req.slot = slot
+        self.slots[slot] = req
+        if repin and self.mesh is not None:
+            self.repin_cache_shardings()
+
+    def repin_cache_shardings(self) -> None:
+        """Restore the canonical cache shardings on the current mesh
+        (after ops that computed on replicated views)."""
+        self.caches = jax.device_put(
+            self.caches, self._shardings(self._cspecs, self.mesh))
 
     # ------------------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
@@ -285,6 +517,86 @@ class Engine:
 
         self.caches = {k: visit(self.caches[k], sub[k]) for k in self.caches}
 
+    def _batch1_specs(self):
+        """Shape templates of a batch-1 cache tree (for locating batch
+        axes without allocating)."""
+        return M.init_decode_caches(self.cfg, self.plan, 1,
+                                    self.max_seq_alloc, self.page_tokens,
+                                    self.layout, specs_only=True)
+
+    def _extract_slot_cache(self, slot: int):
+        """Inverse of ``_adopt_slot_cache``: slice ``slot`` out of the
+        engine cache as a self-contained batch-1 tree (fresh identity
+        page table; pool pages are the slot's own range)."""
+        from repro.paged.pool import PagedState
+
+        def visit(src, tm):
+            if isinstance(src, PagedState):
+                mps = src.page_table.shape[-1]
+                nd = src.pool.ndim
+                pool = jax.lax.dynamic_slice_in_dim(
+                    src.pool, slot * mps, mps, axis=nd - 5)
+                pt = jnp.broadcast_to(
+                    jnp.arange(mps, dtype=src.page_table.dtype),
+                    src.page_table.shape[:-2] + (1, mps))
+                seq = jax.lax.dynamic_slice_in_dim(
+                    src.seq_lens, slot, 1, axis=src.seq_lens.ndim - 1)
+                pos = jax.lax.dynamic_slice_in_dim(
+                    src.positions, slot, 1, axis=src.positions.ndim - 2)
+                return PagedState(pool, pt, seq, pos)
+            if isinstance(src, dict):
+                return {k: visit(src[k], tm[k]) for k in src}
+            if isinstance(src, (list, tuple)):
+                out = [visit(a, b) for a, b in zip(src, tm)]
+                return tuple(out) if isinstance(src, tuple) else out
+            return jax.lax.dynamic_slice_in_dim(
+                src, slot, 1, axis=_batch_axis(src, tm))
+
+        tmpl = self._batch1_specs()
+        return {k: visit(self.caches[k], tmpl[k]) for k in self.caches}
+
+    def _import_slot_cache(self, sub, slot: int) -> None:
+        """Cross-pool counterpart of ``_adopt_slot_cache``: the source
+        tree comes from ANOTHER engine (a merge donor), so per-slot page
+        counts may differ — the donor's pages land at the head of this
+        slot's (wider) page range via ``kv_transform.migrate_slot_pages``
+        (§4.1 kernel scatter on canonical pools)."""
+        from repro.core import kv_transform as KT
+        from repro.paged.pool import PagedState
+
+        def visit(dst, src):
+            if isinstance(dst, PagedState):
+                mps_d = dst.page_table.shape[-1]
+                mps_s = src.page_table.shape[-1]
+                assert mps_s <= mps_d, (
+                    "donor slots cannot exceed the grown target slots")
+                pool = KT.migrate_slot_pages(src.pool, dst.pool, mps_s,
+                                             slot * mps_d)
+                seq = jax.lax.dynamic_update_slice_in_dim(
+                    dst.seq_lens, src.seq_lens.astype(dst.seq_lens.dtype),
+                    slot, axis=dst.seq_lens.ndim - 1)
+                cap_d, cap_s = (dst.positions.shape[-1],
+                                src.positions.shape[-1])
+                pos_src = src.positions
+                if cap_s < cap_d:
+                    pad = [(0, 0)] * pos_src.ndim
+                    pad[-1] = (0, cap_d - cap_s)
+                    pos_src = jnp.pad(pos_src, pad, constant_values=-1)
+                pos = jax.lax.dynamic_update_slice_in_dim(
+                    dst.positions, pos_src.astype(dst.positions.dtype),
+                    slot, axis=dst.positions.ndim - 2)
+                return PagedState(pool, dst.page_table, seq, pos)
+            if isinstance(dst, dict):
+                return {k: visit(dst[k], src[k]) for k in dst}
+            if isinstance(dst, (list, tuple)):
+                out = [visit(a, b) for a, b in zip(dst, src)]
+                return tuple(out) if isinstance(dst, tuple) else out
+            ax = _batch_axis(dst, src)
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=ax)
+
+        self.caches = {k: visit(self.caches[k], sub[k]) for k in self.caches}
+
     # -- one engine iteration --------------------------------------------
     def step(self) -> Dict[str, int]:
         emitted = 0
@@ -296,6 +608,15 @@ class Engine:
                 self._session.step()
             if self._session.done:
                 self._finish_transform()
+            if self._session is not None and self._session_cross:
+                # cross-instance merge/split in flight: mid-session the
+                # layers span two device assemblies, which one XLA
+                # computation cannot mix — decode pauses until the
+                # schedule drains (token streams stay exact; only their
+                # timing shifts)
+                self.steps += 1
+                return {"active": sum(s is not None for s in self.slots),
+                        "waiting": len(self.waiting), "emitted": 0}
         # admit waiting requests into free slots (one prefill per step)
         elif self.waiting:
             slot = self._free_slot()

@@ -50,8 +50,10 @@ def test_cluster_scheduler_drives_live_transform_bit_exact():
                                   dtype="float32")
         devs = jax.devices()
         W = 4
-        host_params = M.init_params(jax.random.PRNGKey(11), cfg,
-                                    make_plan(cfg, W, mode="page"))
+        # the cluster plans for the FULL device pool (merge support), so
+        # shared params must be built with that plan
+        plan = make_plan(cfg, len(devs), mode="page")
+        host_params = M.init_params(jax.random.PRNGKey(11), cfg, plan)
 
         rng = np.random.default_rng(0)
         def spec():
@@ -89,7 +91,7 @@ def test_cluster_scheduler_drives_live_transform_bit_exact():
 
         # reference: each request alone on a STATIC engine (same params)
         ref_eng = Engine(cfg, params=host_params, max_batch=W,
-                         max_seq=64, devices=devs[:W])
+                         max_seq=64, devices=devs[:W], plan=plan)
         for want, got in zip(mk(trace), live):
             ref_eng.submit(want)
             ref_eng.run_until_done(2000)

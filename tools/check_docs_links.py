@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Dead-link check for the markdown docs (CI `docs` job).
+
+Scans ``docs/**/*.md`` plus the top-level ``*.md`` files for inline
+markdown links ``[text](target)`` and fails if a *relative* target does
+not exist on disk (resolved against the linking file's directory).
+External links (``http(s)://``, ``mailto:``) and pure in-page anchors
+(``#...``) are skipped; a ``path#anchor`` target is checked for the
+path only.  Stdlib-only so it runs anywhere:
+
+    python tools/check_docs_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REPO = Path(__file__).resolve().parent.parent
+
+
+def md_files() -> list[Path]:
+    files = sorted(REPO.glob("*.md"))
+    files += sorted((REPO / "docs").rglob("*.md"))
+    return files
+
+
+def check(path: Path) -> list[str]:
+    errors = []
+    for n, line in enumerate(path.read_text().splitlines(), 1):
+        for target in LINK.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                errors.append(f"{path.relative_to(REPO)}:{n}: "
+                              f"dead link -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = md_files()
+    errors = [e for f in files for e in check(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
