@@ -7,15 +7,23 @@ bench_overall_cost for its transformation cost).
 ``--smoke`` instead drives a LIVE mini-cluster (2 transformable engines
 on fake devices) through a mixed short/long trace and reports the same
 metrics schema — the CI proof that the §5 control plane runs end-to-end
-on real arrays, not just in the simulator."""
+on real arrays, not just in the simulator.
+
+``--burst`` runs the chunked-prefill scenario: a long-prompt burst over
+a decoding background, whole-prompt prefill vs token-budgeted
+chunked policies (``core.scheduler.PrefillPolicy`` — the same object
+the live engine executes), reporting the background requests' TTFT
+p50/p99 and queue delay.  Asserts the headline claim: chunked
+decode-priority improves background TTFT p99 over whole-prompt
+prefill on the same trace."""
 from __future__ import annotations
 
 import os
 from typing import List
 
 from repro.configs import get_config
-from repro.core.cluster_sim import Cluster, longtail_trace
-from repro.core.scheduler import GygesScheduler
+from repro.core.cluster_sim import Cluster, burst_trace, longtail_trace
+from repro.core.scheduler import GygesScheduler, PrefillPolicy
 
 
 def run(duration: float = 420.0) -> List[str]:
@@ -23,7 +31,6 @@ def run(duration: float = 420.0) -> List[str]:
             "ttft_p99_s,tpot_p50_ms,tpot_p99_ms"]
     cfg = get_config("qwen2.5-32b")
     for qps in (0.6, 2.0, 6.0):
-        trace = longtail_trace(duration=duration, qps=qps, seed=21)
         runs = {
             "gyges": dict(method="gyges"),
             "gyges-no-overlap": dict(method="gyges-"),
@@ -34,6 +41,10 @@ def run(duration: float = 420.0) -> List[str]:
         }
         base = None
         for name, kw in runs.items():
+            # fresh trace per system: the sim MUTATES request state
+            # (prefilled/tokens_done/timestamps), so sharing one trace
+            # list across systems replays stale completions
+            trace = longtail_trace(duration=duration, qps=qps, seed=21)
             c = Cluster(cfg, n_hosts=1, scheduler=GygesScheduler(), **kw)
             m = c.run(trace, dt=0.25)
             if name == "gyges":
@@ -46,6 +57,64 @@ def run(duration: float = 420.0) -> List[str]:
         rows.append(f"fig14.qwen2.5-32b,{qps},derived,"
                     f"gyges_tps={base:.1f} (paper: 1.75x-6.57x over "
                     f"PP/SP transformation at saturation)")
+    return rows
+
+
+def run_burst(duration: float = 240.0) -> List[str]:
+    """Long-prompt burst over a decoding background (the head-of-line
+    scenario chunked prefill exists for).  One trace, four prefill
+    policies, same scheduler; the interesting column is the BACKGROUND
+    requests' TTFT p99: under whole-prompt prefill the burst's 60K-token
+    prompts monopolize each engine's step and every short behind them
+    waits; the budgeted decode-priority policy bounds that wait."""
+    from repro.serving.metrics import percentile
+
+    cfg = get_config("qwen2.5-32b")
+    bg_len = 800
+    # "whole-prompt" is the explicit unbudgeted prefill-priority policy:
+    # one monolithic prefill per request, FCFS, decodes stalled behind
+    # prompt processing — what the live engine did before chunking
+    policies = {
+        "whole-prompt": PrefillPolicy(token_budget=None, mode="prefill",
+                                      order="fcfs"),
+        "chunked-prefill-prio": PrefillPolicy(
+            token_budget=2048, mode="prefill", order="sjf"),
+        "chunked-mixed": PrefillPolicy(
+            token_budget=2048, mode="mixed", order="sjf"),
+        "chunked-decode-prio": PrefillPolicy(
+            token_budget=2048, mode="decode", max_defer_steps=2,
+            order="sjf"),
+    }
+    rows = ["burst.model,policy,bg_ttft_p50_s,bg_ttft_p99_s,"
+            "bg_qdelay_p99_s,bg_tpot_p99_ms,burst_ttft_p50_s,tps,"
+            "finished,total"]
+    p99 = {}
+    for name, pol in policies.items():
+        # fresh trace per policy (the sim mutates request state)
+        trace = burst_trace(duration=duration, seed=7)
+        c = Cluster(cfg, n_hosts=1, scheduler=GygesScheduler(),
+                    prefill_policy=pol)
+        m = c.run(trace, dt=0.25)
+        bg = [r for r in c.all_requests if r.in_len == bg_len]
+        burst = [r for r in c.all_requests if r.in_len != bg_len]
+        bgt = [r.ttft for r in bg if r.ttft is not None]
+        bgq = [r.queue_delay for r in bg if r.queue_delay is not None]
+        bgp = [r.tpot for r in bg if r.tpot is not None]
+        but = [r.ttft for r in burst if r.ttft is not None]
+        p99[name] = percentile(bgt, 99)
+        rows.append(
+            f"burst.qwen2.5-32b,{name},{percentile(bgt, 50):.2f},"
+            f"{percentile(bgt, 99):.2f},{percentile(bgq, 99):.2f},"
+            f"{percentile(bgp, 99) * 1e3:.0f},"
+            f"{percentile(but, 50):.2f},{m['throughput_tps']:.1f},"
+            f"{m['finished']:.0f},{m['total']:.0f}")
+    assert p99["chunked-decode-prio"] < p99["whole-prompt"], (
+        "chunked decode-priority must improve background TTFT p99 over "
+        "whole-prompt prefill", p99)
+    rows.append(
+        f"burst.qwen2.5-32b,derived,bg_ttft_p99 improvement = "
+        f"{p99['whole-prompt'] / max(p99['chunked-decode-prio'], 1e-9):.1f}x"
+        f" (decode-priority vs whole-prompt)")
     return rows
 
 
@@ -153,9 +222,15 @@ def main():
     ap.add_argument("--merge-smoke", action="store_true",
                     help="live cross-instance merge scenario (a long "
                          "request borrows a whole idle engine)")
+    ap.add_argument("--burst", action="store_true",
+                    help="long-prompt burst over decoding background: "
+                         "whole-prompt vs chunked prefill policies "
+                         "(background TTFT p50/p99)")
     args = ap.parse_args()
     if args.merge_smoke:
         rows = run_merge_smoke()
+    elif args.burst:
+        rows = run_burst()
     elif args.smoke:
         rows = run_smoke()
     else:

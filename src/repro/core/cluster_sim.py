@@ -23,12 +23,14 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, Hardware, H20
-from repro.core.scheduler import BaseScheduler, GygesScheduler, SchedulerConfig
+from repro.core.scheduler import (Action, BaseScheduler, GygesScheduler,
+                                  PrefillPolicy, ScaleDown, ScaleUp,
+                                  SchedulerConfig)
 from repro.serving.metrics import summarize
 from repro.serving.request import Request
 
 __all__ = ["Request", "SimInstance", "Cluster", "hybrid_trace",
-           "longtail_trace"]
+           "longtail_trace", "burst_trace"]
 
 # PP/SP keep only ~1/N workers busy; calibrated so that the e2e gap matches
 # the paper's reported 43.5% extra degradation vs TP transformation.
@@ -43,11 +45,26 @@ TRANSFORM_TIME_FACTOR = {"gyges": 1.0, "gyges-": 1.0, "basic": 1.0,
 class SimInstance:
     _ids = itertools.count()
 
-    def __init__(self, tp: int, cm: CostModel, method: str):
-        self.iid = next(SimInstance._ids)
+    def __init__(self, tp: int, cm: CostModel, method: str,
+                 iid: Optional[int] = None,
+                 prefill_policy: Optional[PrefillPolicy] = None,
+                 seq_quantum: Optional[int] = None, slots: int = 1):
+        """``prefill_policy`` is the SAME ``core.scheduler.PrefillPolicy``
+        the live engine consumes — the tick model runs its decisions
+        (``tokens_over_steps`` / ``service_order`` / ``decode_share``)
+        rather than a re-implementation.  ``seq_quantum`` (tokens per
+        GPU) switches the capacity model from the Table-1 memory curve
+        to the live engine's linear contract ``max_seq_at(tp) ==
+        seq_quantum * tp`` — the configuration the sim/live differential
+        parity harness replays; ``slots`` mirrors the live engine's
+        ``max_batch`` for the KV-capacity denominator."""
+        self.iid = next(SimInstance._ids) if iid is None else iid
         self.tp = tp
         self.cm = cm
         self.method = method
+        self.prefill_policy = prefill_policy
+        self.seq_quantum = seq_quantum
+        self.slots = slots
         self.active: List[Request] = []
         self.prefill_q: List[Request] = []
         self.reserved = False
@@ -55,12 +72,18 @@ class SimInstance:
         self.transform_until = -1.0
         self.n_transforms = 0
         self.tokens_out = 0.0
+        self.member_iids: List[int] = []   # merge members (split restores)
+        self._prefill_deferred = 0    # decode-priority deferral carry,
+                                      # persisted ACROSS ticks (bounded
+                                      # starvation spans tick boundaries)
 
     # ---- InstanceView protocol -------------------------------------------
     def max_seq(self) -> int:
-        return self.cm.max_seq(self.tp)
+        return self.max_seq_at(self.tp)
 
     def max_seq_at(self, tp: int) -> int:
+        if self.seq_quantum is not None:
+            return self.seq_quantum * tp
         return self.cm.max_seq(tp)
 
     @property
@@ -76,6 +99,8 @@ class SimInstance:
         return self.tp
 
     def kv_capacity(self) -> int:
+        if self.seq_quantum is not None:
+            return self.max_seq() * self.slots
         return self.cm.kv_capacity_tokens(self.tp)
 
     def kv_used(self) -> float:
@@ -103,7 +128,7 @@ class SimInstance:
 
     def has_long_request(self) -> bool:
         if self._long_cache is None:
-            tp1_cap = self.cm.max_seq(1)
+            tp1_cap = self.max_seq_at(1)
             self._long_cache = any(r.in_len + r.out_len > tp1_cap
                                    for r in self.active + self.prefill_q)
         return self._long_cache
@@ -117,31 +142,67 @@ class SimInstance:
         return base
 
     def tick(self, now: float, dt: float) -> float:
-        """Advance dt seconds; returns tokens generated."""
-        # prefill first (FCFS, one at a time as in vLLM default)
+        """Advance dt seconds; returns tokens generated.
+
+        Prefill runs under the shared ``PrefillPolicy``: the hardware
+        prefill rate is further capped by the policy's per-step token
+        budget aggregated over the engine steps this tick models
+        (``tokens_over_steps`` — the very function the live engine sums
+        one step at a time), served in the policy's order; the decode
+        half is then scaled by ``decode_share`` — prefill-priority
+        stalls decodes behind prompt processing (the live whole-prompt
+        head-of-line pathology), decode-priority protects them.  With
+        no policy the legacy behavior is preserved exactly (FCFS,
+        hardware-rate-limited, no decode coupling)."""
+        pol = self.prefill_policy
+        prefill_fraction = 0.0
         if self.prefill_q:
             eff = ENGINE_EFFICIENCY[self.method]
             stall = now < self.transform_until and self.method != "gyges"
             rate = self.cm.hw.prefill_tps * self.tp * eff * (
                 0.05 if stall else 1.0)
-            budget = rate * dt
-            while self.prefill_q and budget > 0:
-                r = self.prefill_q[0]
-                need = r.in_len - r.prefilled
-                adv = min(need, budget)
+            capacity = rate * dt
+            budget = capacity
+            if pol is not None:
+                # one modeled engine step per decode iteration the tick
+                # covers (the per-request decode cadence)
+                steps = max(1, int(round(self.cm.hw.per_req_tps * dt)))
+                allowed, self._prefill_deferred = pol.tokens_over_steps(
+                    len(self.active), steps, self._prefill_deferred)
+                budget = min(capacity, allowed)
+            queue = (pol.service_order(self.prefill_q,
+                                       lambda r: r.in_len - r.prefilled)
+                     if pol is not None else list(self.prefill_q))
+            consumed = 0.0
+            for r in queue:
+                if budget <= 0:
+                    break
+                adv = min(r.in_len - r.prefilled, budget)
+                if adv > 0 and r.t_prefill_start is None:
+                    r.t_prefill_start = now
                 r.prefilled += adv
                 budget -= adv
+                consumed += adv
                 if r.prefilled >= r.in_len:
                     r.t_first_token = now + dt
                     r.tokens_done = 1.0
-                    self.active.append(self.prefill_q.pop(0))
+                    self.active.append(r)
+                    self.prefill_q.remove(r)
+            prefill_fraction = consumed / max(capacity, 1e-9)
+        else:
+            self._prefill_deferred = 0    # no backlog (live-engine parity)
         if not self.active:
+            self._kv_cache = None
+            self._long_cache = None
             return 0.0
         tps = self.effective_tps(now)
+        scale = (pol.decode_share(prefill_fraction)
+                 if pol is not None else 1.0)
         # per-request decode rate is latency-bound (TPOT floor ~ 25 tok/s
         # at TP1, faster at higher TP); instance tps is the batch ceiling
         per_req = self.cm.hw.per_req_tps * (1.0 + 0.25 * (self.tp - 1))
-        share = min(tps * dt / len(self.active), per_req * dt)
+        share = min(tps * dt * scale / len(self.active),
+                    per_req * dt * scale)
         out = 0.0
         done = []
         for r in self.active:
@@ -167,35 +228,60 @@ class Cluster:
                  method: str = "gyges",
                  scheduler: Optional[BaseScheduler] = None,
                  static_layout: Optional[List[int]] = None,
-                 target_tp: int = 4):
+                 target_tp: int = 4,
+                 prefill_policy: Optional[PrefillPolicy] = None,
+                 seq_quantum: Optional[int] = None, max_batch: int = 1):
+        """``prefill_policy`` / ``seq_quantum`` / ``max_batch`` mirror
+        the live ``ClusterEngine`` configuration (see ``SimInstance``):
+        with them set, the sim serves the same chunked-prefill policy
+        over the same linear capacity contract, which is what lets the
+        differential parity harness diff decisions plane-against-plane.
+        Instance iids are the stable construction indexes (matching the
+        live plane's); a merge keeps the TARGET's iid and a split
+        restores the members' — identity follows what the live plane
+        does with parked/revived engines."""
         self.cm = CostModel(cfg, hw)
         self.cfg = cfg
         self.method = method
         self.scheduler = scheduler or GygesScheduler()
         self.gpus_per_host = gpus_per_host
         self.target_tp = target_tp
+        self.prefill_policy = prefill_policy
+        self.seq_quantum = seq_quantum
+        self.max_batch = max_batch
         self.static = static_layout is not None
         self.hosts: List[List[SimInstance]] = []
+        iid = itertools.count()
         for _ in range(n_hosts):
-            if static_layout:
-                insts = [SimInstance(tp, self.cm, method)
-                         for tp in static_layout]
-            else:
-                insts = [SimInstance(1, self.cm, method)
-                         for _ in range(gpus_per_host)]
-            self.hosts.append(insts)
+            tps = static_layout if static_layout else [1] * gpus_per_host
+            self.hosts.append([self._new_instance(tp, next(iid))
+                               for tp in tps])
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
         self.all_requests: List[Request] = []
         self.n_transforms = 0
         self.total_tokens = 0.0
+        self.actions: List[Action] = []         # executed, in order
+        self.placements: Dict[int, int] = {}    # rid -> instance iid
         self.scale_down_dwell = 20.0   # s at high TP before decomposing
         self.timeline: List[Tuple[float, float]] = []  # (t, cluster tps)
+
+    def _new_instance(self, tp: int, iid: Optional[int] = None
+                      ) -> SimInstance:
+        return SimInstance(tp, self.cm, self.method, iid=iid,
+                           prefill_policy=self.prefill_policy,
+                           seq_quantum=self.seq_quantum,
+                           slots=self.max_batch)
 
     # ------------------------------------------------------------------
     @property
     def instances(self) -> List[SimInstance]:
-        return [i for h in self.hosts for i in h]
+        """All instances in stable iid order — the order the live
+        plane's engine list has, so tie-breaks in pick/decide policies
+        (first-wins) resolve identically in both planes regardless of
+        merge/split history."""
+        return sorted((i for h in self.hosts for i in h),
+                      key=lambda i: i.iid)
 
     def _host_of(self, inst: SimInstance) -> List[SimInstance]:
         for h in self.hosts:
@@ -205,13 +291,22 @@ class Cluster:
 
     # ---- transformation actions ------------------------------------------
     def _merge_members(self, host: List[SimInstance],
-                       members: List[SimInstance], now: float
-                       ) -> SimInstance:
+                       members: List[SimInstance], now: float,
+                       target_iid: Optional[int] = None) -> SimInstance:
         """Replace ``members`` on ``host`` with one merged instance that
         absorbs their queues (the sim analog of the live plane's
-        park-donors / adopt-devices / migrate-KV sequence)."""
-        merged = SimInstance(sum(m.tp for m in members), self.cm,
-                             self.method)
+        park-donors / adopt-devices / migrate-KV sequence).  The merged
+        instance KEEPS the target's iid — like the live plane, where the
+        target engine transforms in place and the donors park — and
+        remembers its members so a later split restores their
+        identities (``Engine.revive`` parity)."""
+        if target_iid is None:
+            target_iid = max(members,
+                             key=lambda i: i.kv_used_fraction()).iid
+        merged = self._new_instance(sum(m.tp for m in members),
+                                    iid=target_iid)
+        merged.member_iids = [target_iid] + [
+            m.iid for m in members if m.iid != target_iid]
         for m in members:
             merged.active += m.active
             merged.prefill_q += m.prefill_q
@@ -221,6 +316,10 @@ class Cluster:
             self.method) * TRANSFORM_TIME_FACTOR[self.method]
         merged.n_transforms = 1
         self.n_transforms += 1
+        self.actions.append(ScaleUp(
+            iid=merged.iid, tp_to=merged.tp,
+            donor_iids=tuple(merged.member_iids[1:]),
+            reason=f"merge x{len(members)}"))
         host.append(merged)
         return merged
 
@@ -229,46 +328,55 @@ class Cluster:
                          ) -> Optional[SimInstance]:
         """Merge TP1 instances on one host into one TP-N instance (paper
         Fig. 3).  With ``seed`` (transformation-unaware baselines) the
-        merge happens around the chosen instance; otherwise donor choice
-        is delegated to ``scheduler.decide_merge`` — the SAME policy the
-        live ``ClusterEngine`` executes, so sim and live merge
-        identically (host with the idlest members preferred)."""
+        merge grows around the chosen instance via the SAME
+        ``decide_seed_scale_up`` policy the live plane executes;
+        otherwise donor choice is delegated to
+        ``scheduler.decide_merge`` — so sim and live merge identically
+        (host with the idlest members preferred)."""
         if self.static:
             return None
         if seed is not None and seed.tp > 1:
             return None  # already scaled; cannot grow further here
         if seed is not None:
             host = self._host_of(seed)
-            tp1 = [i for i in host if i.tp == 1]
-            if len(tp1) < self.target_tp:
-                return None
-            tp1.sort(key=lambda i: (i is not seed, i.kv_used_fraction()))
-            return self._merge_members(host, tp1[:self.target_tp], now)
+            act = self.scheduler.decide_seed_scale_up(
+                sorted(host, key=lambda i: i.iid), seed, total_tokens)
+            if act is None or not act.donor_iids:
+                return None  # sim instances cannot grow in place
+            chosen = {act.iid, *act.donor_iids}
+            members = [i for i in host if i.iid in chosen]
+            return self._merge_members(host, members, now,
+                                       target_iid=act.iid)
         best = None
         for h in self.hosts:
-            act = self.scheduler.decide_merge(h, total_tokens,
-                                              min_width=self.target_tp)
+            act = self.scheduler.decide_merge(
+                sorted(h, key=lambda i: i.iid), total_tokens,
+                min_width=self.target_tp)
             if act is None:
                 continue
             chosen = {act.iid, *act.donor_iids}
             members = [i for i in h if i.iid in chosen]
             score = sum(i.kv_used_fraction() for i in members)
             if best is None or score < best[0]:
-                best = (score, h, members)
+                best = (score, h, members, act.iid)
         if best is None:
             return None
-        _, host, members = best
-        return self._merge_members(host, members, now)
+        _, host, members, target_iid = best
+        return self._merge_members(host, members, now,
+                                   target_iid=target_iid)
 
     def execute_scale_down(self, inst: SimInstance, now: float) -> None:
         host = self._host_of(inst)
-        tp1_cap = self.cm.max_seq(1)
+        tp1_cap = inst.max_seq_at(1)
         if any(r.in_len + r.out_len > tp1_cap
                for r in inst.active + inst.prefill_q):
             return
         host.remove(inst)
-        parts = [SimInstance(1, self.cm, self.method)
-                 for _ in range(inst.tp)]
+        # split restores the merge members' identities (live parity:
+        # the target shrinks in place, the parked donors revive)
+        iids = (list(inst.member_iids) if len(inst.member_iids) == inst.tp
+                else [None] * inst.tp)
+        parts = [self._new_instance(1, iid=i) for i in iids]
         for j, r in enumerate(inst.active):
             parts[j % len(parts)].active.append(r)
         for j, r in enumerate(inst.prefill_q):
@@ -278,6 +386,8 @@ class Cluster:
         for p in parts:
             p.transform_until = t
         self.n_transforms += 1
+        self.actions.append(ScaleDown(iid=inst.iid, tp_to=1,
+                                      reason="low load"))
         host.extend(parts)
         self._update_reserve()
 
@@ -318,6 +428,7 @@ class Cluster:
                 inst = None
         if inst is None:
             return False
+        self.placements[req.rid] = inst.iid
         inst.prefill_q.append(req)
         inst.dirty()
         return True
@@ -349,9 +460,9 @@ class Cluster:
             self.timeline.append((now, out / dt))
             # Alg 2: periodic scale-down scan — the scheduler returns
             # declarative actions; the sim control plane executes them
+            cap1 = max(i.max_seq_at(1) for i in self.instances)
             any_long_wait = any(
-                r.in_len + r.out_len > self.cm.max_seq(1)
-                for r in self.waiting)
+                r.in_len + r.out_len > cap1 for r in self.waiting)
             if not self.static:
                 eligible = [
                     i for i in self.instances if i.tp > 1
@@ -389,6 +500,34 @@ def hybrid_trace(duration: float = 300.0, short_qpm: float = 60.0,
             reqs.append(Request(rid, t, ilen, out_len))
             rid += 1
             t += rnd.expovariate(qpm / 60.0)
+    return reqs
+
+
+def burst_trace(duration: float = 240.0, bg_qps: float = 3.0,
+                bg_len: int = 800, bg_out: int = 250,
+                burst_at: float = 60.0, burst_n: int = 8,
+                burst_len: int = 100_000, burst_out: int = 200,
+                seed: int = 0) -> List[Request]:
+    """Long-prompt burst over a decoding background (bench_e2e --burst):
+    a steady stream of short requests (the background — each prefills
+    briefly then decodes for a while) plus ``burst_n`` long prompts
+    arriving together at ``burst_at``.  Under whole-prompt
+    prefill-priority scheduling the burst's prompts monopolize the
+    engines and the background's TTFT p99 explodes (head-of-line
+    blocking, paper Fig. 2 context-length variance); a token-budgeted
+    decode-priority policy bounds it."""
+    import random
+    rnd = random.Random(seed)
+    reqs: List[Request] = []
+    rid = 0
+    t = rnd.expovariate(bg_qps)
+    while t < duration:
+        reqs.append(Request(rid, t, bg_len, bg_out))
+        rid += 1
+        t += rnd.expovariate(bg_qps)
+    for _ in range(burst_n):
+        reqs.append(Request(rid, burst_at, burst_len, burst_out))
+        rid += 1
     return reqs
 
 

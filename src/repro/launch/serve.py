@@ -29,7 +29,7 @@ import jax
 import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, get_config
-from repro.core.scheduler import SCHEDULERS, ScaleUp
+from repro.core.scheduler import SCHEDULERS, PrefillPolicy, ScaleUp
 from repro.serving.cluster import ClusterEngine
 from repro.serving.request import ServeRequest
 
@@ -67,6 +67,12 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=0,
                     help="slots per instance (0 = one per device)")
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="chunked-prefill token budget per engine step "
+                         "(0 = whole-prompt prefill)")
+    ap.add_argument("--prefill-mode", default="mixed",
+                    choices=("prefill", "decode", "mixed"),
+                    help="prefill/decode priority when budgeted")
     ap.add_argument("--smoke", action="store_true", default=True,
                     help="reduced model config (default)")
     args = ap.parse_args()
@@ -76,11 +82,17 @@ def main() -> None:
     cfg = dataclasses.replace(cfg, dtype="float32")
     devs = jax.devices()
     w = len(devs) // args.instances
+    policy = (PrefillPolicy(token_budget=args.prefill_budget,
+                            mode=args.prefill_mode,
+                            long_threshold=args.max_seq // w or 1,
+                            order="sjf")
+              if args.prefill_budget else None)
     cluster = ClusterEngine(
         cfg, devs, n_instances=args.instances,
         max_batch=args.max_batch or w, max_seq=args.max_seq,
         scheduler=None if args.scheduler == "gyges"
-        else SCHEDULERS[args.scheduler]())
+        else SCHEDULERS[args.scheduler](),
+        prefill_policy=policy)
     print(f"[serve] {cfg.name}: {args.instances} instances x {w} devices, "
           f"scheduler={cluster.scheduler.name}, "
           f"TP1 ceiling {cluster.engines[0].max_seq_at(1)} tok, "

@@ -102,6 +102,40 @@ def attention_seq(p: Params, x: jax.Array, cfg: ModelConfig,
     return out, (k, v)
 
 
+def attention_chunk(p: Params, x: jax.Array, cfg: ModelConfig,
+                    plan: PaddingPlan, positions: jax.Array,
+                    cache: pp.PagedState, window: int = 0,
+                    layout: str = "header_centric"
+                    ) -> Tuple[jax.Array, pp.PagedState]:
+    """Chunk-continuation prefill: queries are the chunk's tokens
+    (x: (B,S,d), positions: (B,S) global), keys are the CACHED prefix
+    plus the chunk itself.
+
+    The cached K/V are gathered BEFORE the chunk is written, then the
+    chunk's freshly-projected K/V are appended to the key sequence —
+    so ring (sliding-window) caches still see the keys the oldest chunk
+    rows need even when writing the chunk would evict them.  For
+    full-attention caches (slot == position, no wrap) the valid keys
+    appear in ascending position order with only exactly-zero masked
+    terms between them, which keeps the online-softmax accumulation
+    identical to whole-prompt ``attention_seq`` — chunked prefill is
+    bit-exact there (asserted by tests/test_chunked_prefill.py)."""
+    B, S, d = x.shape
+    q, k, v = _project_qkv(p, x, cfg, plan, positions)
+    kk, vv, kv_pos, valid = pp.gather_kv(cache, layout)
+    kk = jnp.concatenate([kk, k], axis=1)
+    vv = jnp.concatenate([vv, v], axis=1)
+    kv_pos = jnp.concatenate([kv_pos, positions], axis=1)
+    valid = jnp.concatenate(
+        [valid, jnp.ones((B, S), dtype=bool)], axis=1)
+    attn = Lyr.chunked_attention(q, kk, vv, positions, kv_pos,
+                                 kv_valid=valid, causal=True,
+                                 window=window)
+    cache = pp.write_chunk(cache, k, v, positions, layout)
+    out = attn.reshape(B, S, -1) @ p["wo"]
+    return out, cache
+
+
 def attention_decode(p: Params, x: jax.Array, cfg: ModelConfig,
                      plan: PaddingPlan, positions: jax.Array,
                      cache: pp.PagedState, window: int = 0,
@@ -401,6 +435,37 @@ def apply_block_seq(kind: str, p: Params, cfg: ModelConfig,
         return x + hh @ p["w_out"], extras
 
     raise ValueError(kind)
+
+
+def apply_block_chunk(kind: str, p: Params, cfg: ModelConfig,
+                      plan: PaddingPlan, x: jax.Array,
+                      positions: jax.Array, cache,
+                      layout: str = "header_centric"):
+    """Prefill-chunk forward for one block: like ``apply_block_seq``
+    but continuing from per-slot cache state.  x: (B,S,d), positions:
+    (B,S) global.  Attention kinds attend over cached prefix + chunk
+    and write the chunk's K/V into the paged cache; recurrent kinds
+    carry their state (the decode-cache tree IS the sequence carry —
+    the zero/identity init of ``init_block_cache`` equals the
+    ``state=None`` init of the sequence kernels, so the first chunk
+    matches ``apply_block_seq`` exactly).  Returns (y, new_cache)."""
+    if kind in (ATTN, SLIDING, MOE):
+        h = Lyr.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        attn_out, cache = attention_chunk(
+            p["attn"], h, cfg, plan, positions, cache,
+            window=_window_of(kind, cfg), layout=layout)
+        x = x + attn_out
+        h = Lyr.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind == MOE:
+            mlp_out, _ = apply_moe_mlp(p["mlp"], h, cfg, plan)
+        else:
+            mlp_out = apply_mlp(p["mlp"], h, cfg)
+        return x + mlp_out, cache
+    # recurrent kinds: delegate to the sequence form with the cache as
+    # the inbound carry; the returned final state is the new cache
+    x, ex = apply_block_seq(kind, p, cfg, plan, x, positions,
+                            state_in=cache)
+    return x, ex["state"]
 
 
 def apply_block_decode(kind: str, p: Params, cfg: ModelConfig,

@@ -373,6 +373,66 @@ def prefill(params, cfg: ModelConfig, plan: PaddingPlan,
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill: one page-aligned chunk of the prompt per call
+# ---------------------------------------------------------------------------
+
+def prefill_chunk(params, cfg: ModelConfig, plan: PaddingPlan,
+                  tokens: jax.Array, start_pos: jax.Array,
+                  caches: Dict[str, Any],
+                  layout: str = "header_centric"
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run ONE prefill chunk and fold it into the caches.
+
+    tokens: (B, S) the chunk's token ids; start_pos: (B,) global
+    position of the chunk's first token (traced — one compile per chunk
+    SHAPE, not per offset).  Attention layers attend over the cached
+    prefix plus the chunk and write the chunk's K/V through the paged
+    pool (``pool.write_chunk``); recurrent layers carry their
+    decode-cache state across chunks.  With ``start_pos == 0`` on fresh
+    caches the result is equivalent to ``prefill`` (bit-exact for
+    full-attention models; see ``blocks.attention_chunk``), so the
+    serving engine's token-budgeted chunked prefill emits the same
+    streams as the whole-prompt path it replaces.
+
+    MoE capacity routing is evaluated per chunk — with capacity-based
+    token dropping the dropped set can differ from whole-prompt
+    evaluation, exactly as it differs across batch shapes.  Encoder /
+    vision frontends are not chunkable (their memory is not causal);
+    the engine keeps those prompts whole."""
+    if cfg.encoder is not None or cfg.vision is not None:
+        raise NotImplementedError(
+            "chunked prefill covers causal decoder-only models")
+    unit = pattern_unit(cfg)
+    G, R = group_counts(cfg)
+    S = tokens.shape[1]
+    x = params["embed"][tokens]
+    positions = start_pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    B_chunk = B.apply_block_chunk
+
+    def group_body(x_carry, xs):
+        xc = x_carry
+        gparams = xs[:len(unit)]
+        gcaches = list(xs[len(unit):len(unit) * 2])
+        for i, kind in enumerate(unit):
+            xc, gcaches[i] = B_chunk(kind, gparams[i], cfg, plan, xc,
+                                     positions, gcaches[i], layout)
+        return xc, tuple(gcaches)
+
+    xs: Tuple = tuple(params["blocks"]) + tuple(caches["groups"])
+    x, new_group_caches = _run_groups(group_body, x, xs, False)
+
+    new_rem = []
+    for i in range(R):
+        x, c = B_chunk(unit[i], params["rem"][i], cfg, plan, x,
+                       positions, caches["rem"][i], layout)
+        new_rem.append(c)
+
+    out = {"groups": list(new_group_caches), "rem": new_rem}
+    logits = lm_logits(params, cfg, plan, x[:, -1:, :])
+    return logits, out
+
+
+# ---------------------------------------------------------------------------
 # Decode step: one token for every sequence in the batch
 # ---------------------------------------------------------------------------
 

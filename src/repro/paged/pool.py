@@ -116,6 +116,40 @@ def write_prefill(state: PagedState, k: jax.Array, v: jax.Array,
                       jnp.full_like(state.seq_lens, S), positions)
 
 
+def write_chunk(state: PagedState, k: jax.Array, v: jax.Array,
+                positions: jax.Array,
+                storage_layout: str = L.CANONICAL) -> PagedState:
+    """Write one prefill CHUNK — a contiguous run of prompt tokens
+    starting mid-sequence.  k, v: (B, S, kv_slots, head_dim);
+    ``positions``: (B, S) the tokens' global positions (traced, so one
+    compiled chunk writer serves every chunk offset).
+
+    The generalization of ``append_token`` to S tokens: token with
+    global position p lands in ring slot ``p % capacity``, which for
+    full-attention caches (capacity >= max seq) is exactly slot p.
+    Chunked prefill keeps chunk boundaries on PAGE boundaries (all but
+    the final chunk), so a partially-prefilled slot is whole pages plus
+    at most one trailing partial page — the invariant that keeps
+    ``copy_page_slices`` migration valid mid-prefill."""
+    pool_c = canonical(state.pool, storage_layout)
+    NP, kvs, _, P, dh = pool_c.shape
+    B, S = positions.shape
+    cap = state.capacity
+    slot = positions % cap                                # (B, S)
+    kv = jnp.stack([k, v], axis=3)                        # (B,S,kvs,2,dh)
+    page_idx = state.page_table[
+        jnp.arange(B)[:, None], slot // P]                # (B, S)
+    pool_c = pool_c.at[page_idx, :, :, slot % P, :].set(
+        kv.astype(pool_c.dtype))
+    new_pos = state.positions.at[jnp.arange(B)[:, None], slot].set(
+        positions)
+    # chunks are contiguous and in order: the last written position + 1
+    # is the new sequence length
+    seq_lens = (positions[:, -1] + 1).astype(state.seq_lens.dtype)
+    return PagedState(from_canonical(pool_c, storage_layout),
+                      state.page_table, seq_lens, new_pos)
+
+
 def append_token(state: PagedState, k: jax.Array, v: jax.Array,
                  storage_layout: str = L.CANONICAL,
                  identity_pages: bool = False) -> PagedState:

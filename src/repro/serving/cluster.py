@@ -45,8 +45,8 @@ import jax
 
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import (Action, BaseScheduler, GygesScheduler,
-                                  ScaleDown, ScaleUp, SchedulerConfig,
-                                  min_tp_for)
+                                  PrefillPolicy, ScaleDown, ScaleUp,
+                                  SchedulerConfig)
 from repro.serving.engine import Engine
 from repro.serving.metrics import summarize
 from repro.serving.request import ServeRequest
@@ -76,7 +76,8 @@ class ClusterEngine:
                  scheduler: Optional[BaseScheduler] = None,
                  rng: Optional[jax.Array] = None, params=None,
                  dwell_steps: int = 8, layout: str = "header_centric",
-                 transform_attn: bool = True):
+                 transform_attn: bool = True,
+                 prefill_policy: Optional[PrefillPolicy] = None):
         if n_instances < 1 or len(devices) < n_instances:
             raise ValueError(f"{n_instances} instances need at least "
                              f"{n_instances} of {len(devices)} devices")
@@ -94,11 +95,13 @@ class ClusterEngine:
             params = M.init_params(jax.random.fold_in(rng, 1), cfg,
                                    self.plan)
         self._params_src = params               # revive() re-shards these
+        self.prefill_policy = prefill_policy or PrefillPolicy()
         self.engines: List[Engine] = [
             Engine(cfg, params=params, max_batch=max_batch,
                    max_seq=max_seq, page_tokens=page_tokens, rng=rng,
                    layout=layout, devices=list(devices[k * W:(k + 1) * W]),
-                   transform_attn=transform_attn, iid=k, plan=self.plan)
+                   transform_attn=transform_attn, iid=k, plan=self.plan,
+                   prefill_policy=self.prefill_policy)
             for k in range(n_instances)]
         if scheduler is None:
             base = self.engines[0].max_seq_at(1)
@@ -109,6 +112,10 @@ class ClusterEngine:
         self.waiting: List[ServeRequest] = []   # router-level queue
         self.requests: List[ServeRequest] = []  # everything submitted
         self.actions: List[Action] = []         # executed, in order
+        self.placements: Dict[int, int] = {}    # rid -> engine iid (the
+                                                # routing decision record
+                                                # the parity harness
+                                                # diffs against the sim)
         self.steps = 0
         self.n_transforms = 0
         self.total_tokens = 0
@@ -177,19 +184,23 @@ class ClusterEngine:
                                    len(req.prompt), req.max_new_tokens)
         if inst is not None and total > inst.max_seq():
             # transformation-unaware pick (RR/LLF skip the valid() check):
-            # the chosen instance must scale up around itself — the
-            # paper's Fig. 13 pathology, reproduced live
+            # capacity must grow AROUND the chosen instance — the paper's
+            # Fig. 13 pathology, reproduced live through the SAME
+            # decide_seed_scale_up policy the simulator executes
             if inst.transforming:
                 return False
-            if inst.max_seq_at(inst.max_tp) < total:
-                # not even this engine's own devices can ever fit it:
-                # fall through to the decide path, which can merge
-                inst = None
-            else:
-                self._execute(ScaleUp(iid=inst.iid,
-                                      tp_to=min_tp_for(inst, total),
-                                      reason="unaware routing"))
+            act = self.scheduler.decide_seed_scale_up(
+                self._transformable(), inst, total)
+            if act is not None and self._execute(act):
+                self.placements[req.rid] = act.iid
+                self._engine(act.iid).submit(req)
+                return True
+            # no growth is possible around the seed (e.g. it is already
+            # scaled up): fall through to the unrestricted decide path,
+            # exactly as the simulator's _place does
+            inst = None
         if inst is not None:
+            self.placements[req.rid] = inst.iid
             inst.submit(req)
             return True
         act = self.scheduler.decide_scale_up(self._transformable(),
@@ -199,6 +210,7 @@ class ClusterEngine:
             return False
         # the request rides the transforming engine's queue; Engine.step
         # admits it once the new TP degree is resident
+        self.placements[req.rid] = act.iid
         self._engine(act.iid).submit(req)
         return True
 
@@ -255,8 +267,8 @@ class ClusterEngine:
             loans.append((d.iid, devs))
             adopted += devs
         eng.adopt_devices(adopted)
-        for req, sub in exported:
-            eng.import_request(req, sub, repin=False)
+        for req, sub, progress in exported:
+            eng.import_request(req, sub, repin=False, progress=progress)
         if exported:
             eng.repin_cache_shardings()
         n_steps = eng.transform(act.tp_to)

@@ -3,8 +3,20 @@
 Slot-based continuous batching (Orca-style iteration-level scheduling):
 the decode batch has ``max_batch`` fixed slots; a request occupies one
 slot from prefill until EOS/limit, then the slot is immediately reusable.
-Prefills are executed one request per step between decode iterations
-(vLLM default).  The KV pool is slot-partitioned (identity page tables).
+The KV pool is slot-partitioned (identity page tables).
+
+Prefill is CHUNKED and policy-driven (``core.scheduler.PrefillPolicy``
+— the same object the simulator models): each engine step spends up to
+the policy's token budget advancing partially-prefilled slots by
+page-aligned chunks (``models.model.prefill_chunk``), in the policy's
+priority mode (prefill-first, decode-first with bounded deferral, or
+mixed) and service order (FCFS / shortest-remaining-first).  A
+partially-prefilled slot's KV lives in the engine's paged pool like any
+other slot's — whole pages plus at most one trailing partial page — so
+page migration (``copy_page_slices``) and transform/merge sessions
+remain valid mid-prefill; chunking pauses while a session is open and
+resumes on the new degree.  The default policy (no budget) degenerates
+to the classic one-whole-prompt-per-step prefill.
 
 Two placements:
 
@@ -41,6 +53,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.padding import PaddingPlan, make_plan
+from repro.core.scheduler import PrefillPolicy
 from repro.models import model as M
 from repro.serving.request import ServeRequest, State
 
@@ -62,7 +75,8 @@ class Engine:
                  devices: Optional[List[jax.Device]] = None,
                  transform_attn: bool = True,
                  iid: Optional[int] = None,
-                 plan: Optional[PaddingPlan] = None):
+                 plan: Optional[PaddingPlan] = None,
+                 prefill_policy: Optional[PrefillPolicy] = None):
         """``plan`` overrides the padding plan; a cluster whose engines
         may MERGE must pass one built for the full device-pool width so
         weight shard boundaries stay page-aligned at every reachable TP
@@ -111,6 +125,25 @@ class Engine:
                                            layout)
         self.slots: List[Optional[ServeRequest]] = [None] * max_batch
         self.waiting: List[ServeRequest] = []
+        # -- chunked prefill (core.scheduler.PrefillPolicy) -------------
+        self.prefill_policy = prefill_policy or PrefillPolicy()
+        # slot -> {"req", "chunks", "ci", "done", "rec"}: page-aligned
+        # chunk plan, progress, and the recurrent-state carry between
+        # chunks (attention KV lives in the slot's pool pages)
+        self._prefilling: Dict[int, Dict] = {}
+        self._prefill_deferred = 0      # consecutive decode-priority defers
+        # chunk continuation needs causal, non-ring caches: between
+        # chunks, decode iterations for OTHER slots write (masked-out)
+        # filler into the prefilling slot, which a full-attention pool
+        # absorbs (the next chunk re-invalidates it) but a sliding-
+        # window ring cannot — the filler lands on live window keys;
+        # encoder/vision memory is not causal at all.  Such models keep
+        # whole-prompt prefill.
+        self._can_chunk = (
+            cfg.encoder is None and cfg.vision is None
+            and not any(
+                0 < self._block_window(k) < self.max_seq_alloc
+                for k in set(cfg.pattern)))
         self.steps = 0
         self.tp = 1
         self.tp_pending: Optional[int] = None
@@ -141,6 +174,10 @@ class Engine:
                                  positions, layoutc)
 
         self._decode = _decode
+
+    def _block_window(self, kind: str) -> int:
+        from repro.models.blocks import _window_of
+        return _window_of(kind, self.cfg)
 
     # -- mesh helpers (mesh placement only) ------------------------------
     def _make_mesh(self, tp: int, devices=None):
@@ -185,6 +222,12 @@ class Engine:
         target_devs = list(devices) if devices is not None else self.devices
         if tp_to == self.tp and target_devs == self.devices:
             return 0
+        # memory follows the TP degree (§3.4): grow the physical pool to
+        # back the TARGET policy ceiling before migration needs the room
+        # (the shrink half runs in _finish_transform, once live KV has
+        # landed on the narrower degree)
+        if self.max_seq_alloc < self.seq_quantum * tp_to:
+            self._resize_pool(self.seq_quantum * tp_to)
         session = TE.open_owner_session(
             self, tp_to, self._make_mesh(tp_to, target_devs),
             param_spec_fn=lambda t: I.param_pspecs(t, self.transform_attn),
@@ -253,11 +296,21 @@ class Engine:
     def check_capacity_invariant(self) -> None:
         """Assert the ``max_seq_alloc``/``max_seq()`` contract from
         ``max_seq_at``: physical backs policy at every lifecycle point
-        (construction, adopt, transform, release, revive)."""
+        (construction, adopt, transform, release, revive).
+
+        Since memory follows the TP degree on EVERY transform (not just
+        merges), the allocation sits between the active policy ceiling
+        (``seq_quantum * (tp_pending or tp)`` — always physically
+        backed) and the engine's full device budget (``seq_quantum *
+        W`` — construction / adopt allocate it; ``_finish_transform``
+        trims to ``seq_quantum * tp`` when a transform lands)."""
         if self.devices is None or self.parked:
             return
-        assert self.max_seq_alloc == self.seq_quantum * self.W, (
-            self.max_seq_alloc, self.seq_quantum, self.W)
+        assert (self.seq_quantum * (self.tp_pending or self.tp)
+                <= self.max_seq_alloc
+                <= self.seq_quantum * self.W), (
+            self.max_seq_alloc, self.seq_quantum, self.tp,
+            self.tp_pending, self.W)
         assert (self.tp_pending or self.tp) <= self.W, (
             self.tp, self.tp_pending, self.W)
         assert self.max_seq() <= self.max_seq_alloc
@@ -296,13 +349,24 @@ class Engine:
         self._session_cross = False
         if self._pending_devices is not None:
             # split after a merge: the drained session landed every array
-            # on the retained subset — shed the adopted devices and shrink
-            # the pool back to this width's allocation
+            # on the retained subset — shed the adopted devices
             self.devices = list(self._pending_devices)
             self.W = len(self.devices)
             self.adopted_devices = []
             self._pending_devices = None
-            self._resize_pool(self.seq_quantum * self.W)
+        # memory follows the TP degree on EVERY transform (the former
+        # merge-only resize, ROADMAP item): trim the pool to the landed
+        # degree's allocation.  Alg 2 only shrinks instances whose every
+        # live context fits the target ceiling (and the grow half ran
+        # before the session opened), but the raw transform API carries
+        # no such guarantee — never trim below a live context's final
+        # footprint (page-rounded), only down, never up.
+        live = [s for s in self.slots if s is not None] + self.waiting
+        need = max((r.total_tokens for r in live), default=0)
+        need = -(-need // self.page_tokens) * self.page_tokens
+        target = max(self.seq_quantum * self.tp, need)
+        if target < self.max_seq_alloc:
+            self._resize_pool(target)
         self.check_capacity_invariant()
 
     # -- cross-instance merge lifecycle (paper Fig. 3, §3.4) -------------
@@ -334,7 +398,8 @@ class Engine:
         ``export_active``).  Returns the released devices; the engine
         stays constructed and is brought back by ``revive``."""
         assert not self.transforming and not self.parked
-        assert all(s is None for s in self.slots) and not self.waiting, (
+        assert all(s is None for s in self.slots) and not self.waiting \
+            and not self._prefilling, (
             "park requires a drained engine (export_active first)")
         devs = list(self.devices)
         self.parked = True
@@ -364,6 +429,8 @@ class Engine:
         self.caches = jax.device_put(
             caches, self._shardings(self._cspecs, self.mesh))
         self.slots = [None] * self.max_batch
+        self._prefilling = {}
+        self._prefill_deferred = 0
         self.check_capacity_invariant()
 
     def _resize_pool(self, new_max_seq: int) -> None:
@@ -398,21 +465,29 @@ class Engine:
         self.caches = {k: visit(v) for k, v in self.caches.items()}
         self.max_seq_alloc = new_max_seq
 
-    def export_active(self) -> List[Tuple[ServeRequest, Dict]]:
+    def export_active(self) -> List[Tuple[ServeRequest, Dict,
+                                          Optional[Dict]]]:
         """Donor-side KV export: pull every in-flight request out of its
-        slot as ``(request, batch-1 cache tree)`` pairs for
-        ``import_request`` on the merge target.  Slots are freed; the
-        byte-exact KV travels with the request."""
+        slot as ``(request, batch-1 cache tree, prefill-progress)``
+        triples for ``import_request`` on the merge target.  Slots are
+        freed; the byte-exact KV travels with the request.  A slot mid-
+        chunked-prefill exports its chunk plan + progress + recurrent
+        carry so the target resumes the prefill where the donor stopped
+        — mid-prefill engines are valid merge donors."""
         out = []
         for slot, r in enumerate(self.slots):
             if r is None:
                 continue
-            out.append((r, self._extract_slot_cache(slot)))
+            prog = self._prefilling.pop(slot, None)
+            extra = None if prog is None else {
+                k: prog[k] for k in ("chunks", "ci", "done", "rec")}
+            out.append((r, self._extract_slot_cache(slot), extra))
             self.slots[slot] = None
         return out
 
     def import_request(self, req: ServeRequest, sub: Dict,
-                       repin: bool = True) -> None:
+                       repin: bool = True,
+                       progress: Optional[Dict] = None) -> None:
         """Target-side KV import (cross-engine ``device_put`` + §4.1
         kernel scatter): land a donor request's slot cache in a free
         local slot and resume decoding it here, bit-exactly.
@@ -421,7 +496,11 @@ class Engine:
         cache shardings must be re-pinned afterwards; pass
         ``repin=False`` when importing a batch and call
         ``repin_cache_shardings`` once at the end (one whole-pool move
-        instead of one per request)."""
+        instead of one per request).
+
+        ``progress`` is the donor's exported chunked-prefill state (see
+        ``export_active``): the request resumes prefilling here, its
+        already-written prefix pages having travelled with ``sub``."""
         from jax.sharding import NamedSharding
         from jax.sharding import PartitionSpec as P
 
@@ -434,6 +513,12 @@ class Engine:
         self._import_slot_cache(sub, slot)
         req.slot = slot
         self.slots[slot] = req
+        if progress is not None:
+            rec = progress["rec"]
+            if self.mesh is not None:
+                rec = jax.device_put(rec, jax.tree.map(
+                    lambda _: NamedSharding(self.mesh, P()), rec))
+            self._prefilling[slot] = {"req": req, **progress, "rec": rec}
         if repin and self.mesh is not None:
             self.repin_cache_shardings()
 
@@ -453,21 +538,199 @@ class Engine:
                 return i
         return None
 
-    # -- prefill one request into its slot ------------------------------
-    def _prefill_one(self, req: ServeRequest, slot: int) -> None:
-        """Single-slot prefill via a masked batch: runs the prompt through
-        the model writing KV only for this slot's pages."""
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        # per-slot prefill uses a batch-1 cache view, then scatters the
-        # filled pages back into the engine cache (slot-partitioned pools
-        # make this a pure page-range copy — the page-friendly layout at
-        # work: no shifting, paper Table 2 row 2)
-        sub = M.init_decode_caches(self.cfg, self.plan, 1,
-                                   self.max_seq_alloc, self.page_tokens,
-                                   self.layout)
-        logits, sub = M.prefill(self.params, self.cfg, self.plan,
-                                {"tokens": prompt}, sub, self.layout)
-        self._adopt_slot_cache(sub, slot, len(req.prompt))
+    # -- chunked prefill (PrefillPolicy-driven) --------------------------
+    #
+    # A request is admitted into a slot (``_begin_prefill``) and then
+    # advanced by page-aligned chunks (``_run_chunk``): each chunk is
+    # extracted as a batch-1 slot view, run through
+    # ``models.model.prefill_chunk`` (attention over cached prefix +
+    # chunk, chunk K/V written through the paged pool), and scattered
+    # back — so a partially-prefilled slot's KV always lives in the
+    # engine pool, where transform sessions and ``copy_page_slices``
+    # migration find it.  Decode iterations between chunks write
+    # masked-out filler into the slot at positions >= the prefilled
+    # prefix; ``_sanitize_sub`` re-invalidates those before each chunk
+    # (the prefix itself is never touched).
+
+    def _n_decoding(self) -> int:
+        return sum(1 for r in self.slots
+                   if r is not None and r.state == State.DECODE)
+
+    @staticmethod
+    def _strip_pools(tree):
+        """Drop PagedState leaves from a prefill carry tree: only the
+        recurrent-state leaves are ever read back (the slot's pool pages
+        are authoritative for attention KV), and keeping the pools would
+        pin a full per-slot cache of dead device memory — and ship it
+        cross-engine on merge exports."""
+        from repro.paged.pool import PagedState
+
+        def visit(c):
+            if isinstance(c, PagedState):
+                return None
+            if isinstance(c, dict):
+                return {k: visit(v) for k, v in c.items()}
+            if isinstance(c, (list, tuple)):
+                out = [visit(v) for v in c]
+                return tuple(out) if isinstance(c, tuple) else out
+            return c
+
+        return {k: visit(v) for k, v in tree.items()}
+
+    def _begin_prefill(self, req: ServeRequest, slot: int) -> None:
+        req.state = State.PREFILL
+        req.slot = slot
+        self.slots[slot] = req
+        chunks = (self.prefill_policy.chunk_sizes(len(req.prompt),
+                                                  self.page_tokens)
+                  if self._can_chunk else [len(req.prompt)])
+        # the recurrent-state carry between chunks starts from the
+        # freshly-initialized cache (== the sequence kernels' state=None
+        # init); single-chunk prefills never read it
+        rec = None
+        if len(chunks) > 1:
+            rec = self._strip_pools(M.init_decode_caches(
+                self.cfg, self.plan, 1, self.max_seq_alloc,
+                self.page_tokens, self.layout))
+        self._prefilling[slot] = {"req": req, "chunks": chunks, "ci": 0,
+                                  "done": 0, "rec": rec}
+
+    def _prefill_step(self) -> int:
+        """One step of policy-driven prefill work: admit at most one
+        waiting request (the classic one-admission-per-step cadence),
+        then spend the policy's token quota advancing partially-
+        prefilled slots in its service order.  Returns tokens emitted
+        (prefill completions emit the first token)."""
+        if self.waiting:
+            slot = self._free_slot()
+            if slot is not None:
+                self._begin_prefill(self.waiting.pop(0), slot)
+        if not self._prefilling:
+            self._prefill_deferred = 0
+            return 0
+        quota = self.prefill_policy.step_quota(self._n_decoding(),
+                                               self._prefill_deferred)
+        if quota <= 0:
+            self._prefill_deferred += 1
+            return 0
+        self._prefill_deferred = 0
+        emitted = 0
+        spent = 0.0
+
+        def remaining(slot: int) -> int:
+            p = self._prefilling[slot]
+            return len(p["req"].prompt) - p["done"]
+
+        for slot in self.prefill_policy.service_order(
+                list(self._prefilling), remaining):
+            while slot in self._prefilling:
+                size = self._prefilling[slot]["chunks"][
+                    self._prefilling[slot]["ci"]]
+                if spent > 0 and spent + size > quota:
+                    return emitted      # budget exhausted this step
+                emitted += self._run_chunk(slot)
+                spent += size
+        return emitted
+
+    def _run_chunk(self, slot: int) -> int:
+        """Advance the slot's prefill by one chunk; returns 1 when the
+        prefill completed (first token emitted), else 0."""
+        prog = self._prefilling[slot]
+        req = prog["req"]
+        if req.t_prefill_start is None:
+            req.t_prefill_start = time.monotonic()
+        if len(prog["chunks"]) == 1:
+            # whole-prompt fast path: one prefill call on a fresh
+            # batch-1 cache (byte-identical to the pre-chunking engine)
+            self._prefill_whole(req, slot)
+            del self._prefilling[slot]
+            return 1
+        start = prog["done"]
+        size = prog["chunks"][prog["ci"]]
+        sub = self._sanitize_sub(self._extract_slot_cache(slot),
+                                 prog["rec"], start)
+        tokens = jnp.asarray(req.prompt[start:start + size],
+                             jnp.int32)[None, :]
+        logits, sub = M.prefill_chunk(
+            self.params, self.cfg, self.plan, tokens,
+            jnp.full((1,), start, jnp.int32), sub, self.layout)
+        self._adopt_slot_cache(sub, slot, start + size)
+        prog["rec"] = self._strip_pools(sub)
+        prog["done"] += size
+        prog["ci"] += 1
+        if prog["done"] >= len(req.prompt):
+            del self._prefilling[slot]
+            self._finish_prefill(req, slot, logits)
+            return 1
+        return 0
+
+    def _pin_prefill_cursors(self) -> None:
+        """Decode iterations append masked filler for EVERY slot at its
+        ``seq_lens`` cursor, mid-prefill slots included.  Left alone the
+        cursor advances one filler token per step, and a slot starved of
+        chunk budget for more than ``capacity - done`` steps would ring-
+        wrap the filler INTO its prefilled prefix — unrecoverable
+        corruption (``_sanitize_sub`` only re-invalidates past the
+        prefix).  Re-pinning the cursor to ``done`` after each decode
+        confines all filler to the one position the next chunk
+        overwrites anyway."""
+        if not self._prefilling:
+            return
+        from repro.paged.pool import PagedState
+
+        idx = jnp.asarray(sorted(self._prefilling), jnp.int32)
+        val = jnp.asarray([self._prefilling[s]["done"]
+                           for s in sorted(self._prefilling)], jnp.int32)
+
+        def visit(c):
+            if isinstance(c, PagedState):
+                seq = c.seq_lens.at[..., idx].set(val)
+                return PagedState(c.pool, c.page_table, seq, c.positions)
+            if isinstance(c, dict):
+                return {k: visit(v) for k, v in c.items()}
+            if isinstance(c, (list, tuple)):
+                out = [visit(v) for v in c]
+                return tuple(out) if isinstance(c, tuple) else out
+            return c
+
+        if self._session is not None:
+            for layer in self._session.layers:
+                layer["cache"] = visit(layer["cache"])
+        else:
+            self.caches = {k: visit(v) for k, v in self.caches.items()}
+
+    def _sanitize_sub(self, sub, rec, done: int):
+        """Prepare an extracted slot view for the next chunk: re-
+        invalidate everything past the ``done``-token prefix (decode
+        iterations for other slots wrote masked filler there) and
+        restore the recurrent carry from the last chunk (decode filler
+        overwrote those leaves in the engine cache too)."""
+        from repro.paged.pool import PagedState
+
+        def visit(dst, carry):
+            if isinstance(dst, PagedState):
+                # NOT .capacity: stacked group caches carry a leading
+                # layer axis, so the token axis is positions.shape[-1]
+                cap = dst.positions.shape[-1]
+                keep = jnp.arange(cap, dtype=jnp.int32) < done
+                pos = jnp.where(keep, dst.positions, -1)
+                seq = jnp.full_like(dst.seq_lens, done)
+                return PagedState(dst.pool, dst.page_table, seq, pos)
+            if isinstance(dst, dict):
+                return {k: visit(dst[k], carry[k]) for k in dst}
+            if isinstance(dst, (list, tuple)):
+                out = [visit(a, b) for a, b in zip(dst, carry)]
+                return tuple(out) if isinstance(dst, tuple) else out
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+                carry = jax.device_put(carry, NamedSharding(self.mesh, P()))
+            return carry
+
+        return {k: visit(sub[k], rec[k]) for k in sub}
+
+    def _finish_prefill(self, req: ServeRequest, slot: int,
+                        logits: jax.Array) -> None:
         tok = int(_sample(logits[:, -1], req.temperature,
                           jax.random.fold_in(self.rng, req.rid))[0])
         req.generated.append(tok)
@@ -483,6 +746,20 @@ class Engine:
             req.state = State.DONE
             req.t_done = time.monotonic()
             self.slots[slot] = None
+
+    def _prefill_whole(self, req: ServeRequest, slot: int) -> None:
+        """Single-call prefill via a fresh batch-1 cache: runs the whole
+        prompt through the model, then scatters the filled pages into
+        the slot (slot-partitioned pools make this a pure page-range
+        copy — the page-friendly layout at work, paper Table 2 row 2)."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        sub = M.init_decode_caches(self.cfg, self.plan, 1,
+                                   self.max_seq_alloc, self.page_tokens,
+                                   self.layout)
+        logits, sub = M.prefill(self.params, self.cfg, self.plan,
+                                {"tokens": prompt}, sub, self.layout)
+        self._adopt_slot_cache(sub, slot, len(req.prompt))
+        self._finish_prefill(req, slot, logits)
 
     def _adopt_slot_cache(self, sub, slot: int, seq_len: int) -> None:
         """Copy the batch-1 cache into `slot` of the engine cache."""
@@ -617,16 +894,14 @@ class Engine:
                 self.steps += 1
                 return {"active": sum(s is not None for s in self.slots),
                         "waiting": len(self.waiting), "emitted": 0}
-        # admit waiting requests into free slots (one prefill per step)
-        elif self.waiting:
-            slot = self._free_slot()
-            if slot is not None:
-                req = self.waiting.pop(0)
-                req.state = State.PREFILL
-                self._prefill_one(req, slot)
-                emitted += 1        # the prefill emits the first token
+        # policy-driven prefill work (admissions + chunk advancement);
+        # paused while a transform session is open — partially-prefilled
+        # slots ride the migration and resume on the new degree
+        if self._session is None:
+            emitted += self._prefill_step()
 
-        active = [r for r in self.slots if r is not None]
+        active = [r for r in self.slots
+                  if r is not None and r.state == State.DECODE]
         if active:
             tokens = np.zeros((self.max_batch,), np.int32)
             positions = np.zeros((self.max_batch,), np.int32)
@@ -652,6 +927,7 @@ class Engine:
                     r.state = State.DONE
                     r.t_done = time.monotonic()
                     self.slots[r.slot] = None
+            self._pin_prefill_cursors()
         self.steps += 1
         return {"active": len(active), "waiting": len(self.waiting),
                 "emitted": emitted}

@@ -14,9 +14,13 @@ from __future__ import annotations
 
 from typing import Dict, List, Sequence
 
-#: the schema every cluster (simulated or live) reports, in order
+#: the schema every cluster (simulated or live) reports, in order.
+#: queue_delay (submit -> first prefill work) is the head-of-line wait
+#: the chunked-prefill policy bounds; TTFT = queue_delay + prefill time.
 METRIC_KEYS = ("throughput_tps", "finished", "total",
-               "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99",
+               "ttft_p50", "ttft_p99",
+               "queue_delay_p50", "queue_delay_p99",
+               "tpot_p50", "tpot_p99",
                "n_transforms")
 
 
@@ -35,10 +39,12 @@ def summarize(requests: Sequence, duration_s: float, total_tokens: float,
 
     ``requests`` may be trace records (``Request``) or live requests
     (``ServeRequest``) — anything exposing ``finished`` / ``ttft`` /
-    ``tpot``.
+    ``queue_delay`` / ``tpot``.
     """
     fin = [r for r in requests if r.finished]
     ttfts = [r.ttft for r in requests if r.ttft is not None]
+    qdels = [r.queue_delay for r in requests
+             if getattr(r, "queue_delay", None) is not None]
     tpots = [r.tpot for r in fin if r.tpot is not None]
     return {
         "throughput_tps": total_tokens / max(duration_s, 1e-9),
@@ -46,6 +52,8 @@ def summarize(requests: Sequence, duration_s: float, total_tokens: float,
         "total": len(requests),
         "ttft_p50": percentile(ttfts, 50),
         "ttft_p99": percentile(ttfts, 99),
+        "queue_delay_p50": percentile(qdels, 50),
+        "queue_delay_p99": percentile(qdels, 99),
         "tpot_p50": percentile(tpots, 50),
         "tpot_p99": percentile(tpots, 99),
         "n_transforms": float(n_transforms),

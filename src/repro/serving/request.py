@@ -42,6 +42,7 @@ class ServeRequest:
     slot: int = -1
     generated: List[int] = field(default_factory=list)
     t_submit: float = field(default_factory=time.monotonic)
+    t_prefill_start: Optional[float] = None   # first prefill chunk ran
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
 
@@ -69,6 +70,13 @@ class ServeRequest:
             self.t_first_token - self.t_submit)
 
     @property
+    def queue_delay(self) -> Optional[float]:
+        """Submit -> first prefill work (the head-of-line wait chunked
+        prefill exists to bound); TTFT = queue_delay + prefill time."""
+        return None if self.t_prefill_start is None else (
+            self.t_prefill_start - self.t_submit)
+
+    @property
     def tpot(self) -> Optional[float]:
         if self.t_done is None or self.t_first_token is None \
                 or len(self.generated) <= 1:
@@ -88,6 +96,7 @@ class Request:
     t_finish: Optional[float] = None
     tokens_done: float = 0.0
     prefilled: float = 0.0
+    t_prefill_start: Optional[float] = None
 
     @property
     def finished(self) -> bool:
@@ -97,6 +106,13 @@ class Request:
     def ttft(self) -> Optional[float]:
         return None if self.t_first_token is None else (
             self.t_first_token - self.arrive)
+
+    @property
+    def queue_delay(self) -> Optional[float]:
+        """Arrival -> first prefill work (same contract as
+        ``ServeRequest.queue_delay``, so both planes report it)."""
+        return None if self.t_prefill_start is None else (
+            self.t_prefill_start - self.arrive)
 
     @property
     def tpot(self) -> Optional[float]:

@@ -104,10 +104,16 @@ def test_live_merge_bit_exact_and_split_revives_donor():
         downs = [a for a in cluster.actions if isinstance(a, ScaleDown)]
         assert downs, "merged engine never scaled back down"
         # split returned the loan: donor revived on its devices, pool
-        # shrunk back, every engine at TP1 and home width
+        # shrunk back, every engine at TP1 and home width.  Memory now
+        # follows the TP degree on EVERY transform: the split target's
+        # pool trimmed to the TP1 allocation (seq_quantum * tp = 16);
+        # the revived donor re-allocates its construction-time budget
         assert all(not e.parked for e in cluster.engines)
-        assert all(e.tp == 1 and e.W == 4 and e.max_seq_alloc == 64
-                   for e in cluster.engines)
+        assert all(e.tp == 1 and e.W == 4 for e in cluster.engines)
+        for e in cluster.engines:
+            assert (e.seq_quantum * e.tp <= e.max_seq_alloc
+                    <= e.seq_quantum * e.W), (e.iid, e.max_seq_alloc)
+        assert cluster._engine(act.iid).max_seq_alloc == 16
         assert not cluster._loans and not cluster._releasing
         assert all(r.finished for r in live)
         # the §4.3 schedule really executed, with the §4.1 kernel plane

@@ -5,8 +5,9 @@ from repro.configs import get_config
 from repro.core.cluster_sim import Cluster, Request, hybrid_trace
 from repro.core.costmodel import CostModel
 from repro.core.scheduler import (GygesScheduler, LeastLoadScheduler,
-                                  RoundRobinScheduler, SCHEDULERS,
-                                  ScaleDown, ScaleUp, SchedulerConfig)
+                                  PrefillPolicy, RoundRobinScheduler,
+                                  SCHEDULERS, ScaleDown, ScaleUp,
+                                  SchedulerConfig)
 
 CFG = get_config("qwen2.5-32b")
 
@@ -214,6 +215,116 @@ def test_e2e_method_ordering():
 
 
 from _hypothesis_compat import given, settings, strategies as st
+
+
+# ---------------------------------------------------------------------------
+# PrefillPolicy chunk accounting (hypothesis properties)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 200_000),                    # prompt_len
+       st.integers(1, 9_000),                      # token_budget
+       st.sampled_from([8, 16, 64, 128]),          # page_tokens
+       st.integers(100, 8_192))                    # long_threshold
+def test_chunk_sizes_partition_budget_and_alignment(prompt_len, budget,
+                                                    page_tokens,
+                                                    long_threshold):
+    """For ANY prompt length and budget: the chunks partition the prompt
+    exactly; no chunk exceeds the page-aligned effective budget (nor the
+    mandatory long-chunking cap); every chunk boundary except the final
+    one lands on a page boundary, so a partially-prefilled slot is
+    always whole pages + at most one trailing partial page."""
+    pol = PrefillPolicy(token_budget=budget, long_threshold=long_threshold)
+    chunks = pol.chunk_sizes(prompt_len, page_tokens)
+    assert sum(chunks) == prompt_len
+    assert all(c > 0 for c in chunks)
+    limit = pol.effective_chunk(page_tokens)
+    if prompt_len > long_threshold:
+        limit = min(limit, max(page_tokens,
+                               long_threshold
+                               - long_threshold % page_tokens))
+    assert all(c <= limit for c in chunks)
+    done = 0
+    for c in chunks[:-1]:
+        done += c
+        assert done % page_tokens == 0, (chunks, page_tokens)
+    # unbudgeted + short prompt -> single whole-prompt chunk
+    whole = PrefillPolicy(token_budget=None, long_threshold=long_threshold)
+    if prompt_len <= long_threshold:
+        assert whole.chunk_sizes(prompt_len, page_tokens) == [prompt_len]
+    else:
+        # chunking is mandatory above the long threshold even unbudgeted
+        assert len(whole.chunk_sizes(prompt_len, page_tokens)) > 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 64),      # active decodes
+       st.integers(0, 8),       # max_defer_steps
+       st.integers(1, 4096),    # token_budget
+       st.integers(1, 100))     # horizon (steps)
+def test_decode_priority_starvation_is_bounded(decoding, max_defer,
+                                               budget, horizon):
+    """Decode-priority may defer prefill while requests are decoding,
+    but never beyond max_defer_steps consecutive steps — and every
+    non-deferred step grants the full budget.  The sim-side aggregate
+    (tokens_over_steps) must equal the live engine's step-by-step sum
+    of step_quota, because it IS that sum."""
+    pol = PrefillPolicy(token_budget=budget, mode="decode",
+                        max_defer_steps=max_defer)
+    deferred = 0
+    total = 0.0
+    worst = 0
+    run = 0
+    for _ in range(horizon):
+        q = pol.step_quota(decoding, deferred)
+        if q <= 0:
+            deferred += 1
+            run += 1
+            worst = max(worst, run)
+        else:
+            assert q == budget
+            total += q
+            deferred = 0
+            run = 0
+    assert worst <= max_defer
+    got, end_deferred = pol.tokens_over_steps(decoding, horizon)
+    assert total == got and end_deferred == deferred
+    # the deferral carry makes the guarantee span tick boundaries: the
+    # same horizon split into 1-step ticks admits the same tokens
+    split_total, d = 0.0, 0
+    for _ in range(horizon):
+        t, d = pol.tokens_over_steps(decoding, 1, d)
+        split_total += t
+    assert split_total == total
+    # with nothing decoding, prefill is never deferred
+    assert pol.step_quota(0, 0) == budget
+    # prefill-priority and mixed never defer at all
+    for mode in ("prefill", "mixed"):
+        p2 = PrefillPolicy(token_budget=budget, mode=mode)
+        assert p2.step_quota(decoding, 0) > 0
+
+
+def test_decide_seed_scale_up_grows_around_the_pick():
+    """The shared Fig.-13 policy: in place when the seed's own devices
+    reach the ceiling, a merge FORCED to include the seed otherwise,
+    None when the seed cannot anchor growth (callers fall through to
+    the unrestricted decide path — both planes)."""
+    sched = GygesScheduler(SchedulerConfig(long_threshold=16, target_tp=4))
+    seed = StubView(0, tp=1, max_tp=4, base_seq=16)
+    other = StubView(1, tp=1, max_tp=4, base_seq=16)
+    # in place: 48 fits the seed's own 4 devices (64)
+    act = sched.decide_seed_scale_up([seed, other], seed, 48)
+    assert act.iid == 0 and act.donor_iids == () and act.tp_to == 4
+    # beyond the seed's devices: merge that must include the seed
+    w1 = StubView(0, tp=1, max_tp=1, base_seq=16)
+    w2 = StubView(1, tp=1, max_tp=1, base_seq=16)
+    w1.width = w2.width = 4
+    act = sched.decide_seed_scale_up([w1, w2], w1, 96)
+    assert act is not None and 0 in {act.iid, *act.donor_iids}
+    # an already-scaled seed cannot anchor growth -> None
+    up = StubView(2, tp=4, max_tp=4, base_seq=16)
+    assert sched.decide_seed_scale_up([up, other], up, 1000) is None
 
 
 @settings(max_examples=10, deadline=None)

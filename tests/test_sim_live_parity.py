@@ -1,0 +1,180 @@
+"""Sim/live differential parity harness (the ISSUE-4 satellite).
+
+The architectural claim docs/architecture.md makes — ONE policy object
+drives both planes — is tested DIFFERENTIALLY here: the same trace is
+replayed through the simulator (``core.cluster_sim.Cluster``) and the
+live plane (``serving.cluster.ClusterEngine`` on fake devices) under an
+identical ``PrefillPolicy`` + ``SchedulerConfig``, and the DECISIONS
+must match plane-for-plane:
+
+* routing picks — ``placements`` (rid -> instance iid) identical;
+* parallelism actions — the executed ScaleUp/ScaleDown sequence
+  identical (same targets, same TP degrees, same merge donors);
+* metrics — the exact METRIC_KEYS schema from both.
+
+The replay protocol drains the cluster between submissions so every
+decision happens against equivalent instance views (live engines report
+byte-level KV occupancy, the sim reports modeled occupancy — equal only
+at idle), which is exactly what makes this a decision-level harness:
+any drift in the shared policy surface (capacity contract, long
+classifier, donor selection, seed scale-up, tie-breaks, instance
+identity across merge/split) shows up as a plane diff.
+
+The live half needs >= 8 devices.  In CI the PR lane exports
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the fast
+cases run in-process; elsewhere (e.g. a bare ``pytest``) the harness
+transparently re-executes itself in a subprocess with the flag set.
+
+Geometry: 8 single-device engines (so every scale-up is a MERGE in both
+planes — sim instances can never grow in place), per-device quantum 16
+tokens, matched via ``Cluster(seq_quantum=..., max_batch=...)``.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: trace replayed under every scheduler: (rid, prompt_len, out_len).
+#: shorts fit TP1 (total <= 16); the long (total 48) needs a width-4
+#: merge; the final shorts run after the split restored 8x TP1
+TRACE = [(0, 10, 4), (1, 12, 4), (2, 8, 4),
+         (3, 40, 8),                       # the merge trigger
+         (4, 10, 4), (5, 6, 4)]
+
+DRIVER = """
+    import itertools, json
+    import jax, numpy as np
+
+    import dataclasses
+    from repro.configs import get_config
+    from repro.core.cluster_sim import Cluster, SimInstance
+    from repro.core.scheduler import (PrefillPolicy, SCHEDULERS,
+                                      ScaleUp, SchedulerConfig)
+    from repro.serving.cluster import ClusterEngine
+    from repro.serving.metrics import METRIC_KEYS
+    from repro.serving.request import Request, ServeRequest
+
+    TRACE = {trace}
+    SCHED = {sched!r}
+
+    Q = 16                      # per-device admission quantum (tokens)
+    POLICY = PrefillPolicy(token_budget=16, mode="mixed",
+                           long_threshold=Q, order="sjf")
+    mk_sched = lambda: SCHEDULERS[SCHED](SchedulerConfig(
+        long_threshold=Q, target_tp=4))
+
+    def act_key(a):
+        return (type(a).__name__, a.iid, a.tp_to,
+                tuple(sorted(getattr(a, "donor_iids", ()) or ())))
+
+    # ---- live plane: 8 single-device engines ----------------------
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    devs = jax.devices()
+    assert len(devs) >= 8, len(devs)
+    rng = np.random.default_rng(0)
+    prompts = {{rid: rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for rid, n, _ in TRACE}}
+    live = ClusterEngine(cfg, devs[:8], n_instances=8, max_batch=2,
+                         max_seq=Q, page_tokens=Q, dwell_steps=4,
+                         scheduler=mk_sched(), prefill_policy=POLICY)
+    for rid, n, out in TRACE:
+        live.submit(ServeRequest(rid=rid, prompt=list(prompts[rid]),
+                                 max_new_tokens=out))
+        live.run(max_steps=8000)    # drain + Alg-2 quiet window
+        assert all(e.tp == 1 and not e.parked for e in live.engines)
+    live_metrics = live.run(max_steps=8000)
+
+    # ---- simulated plane: matched geometry ------------------------
+    sim = Cluster(cfg, n_hosts=1, gpus_per_host=8,
+                  scheduler=mk_sched(), target_tp=4,
+                  prefill_policy=POLICY, seq_quantum=Q, max_batch=2)
+    sim.scale_down_dwell = 5.0
+    now = 0.0
+    dt = 0.25
+    for rid, n, out in TRACE:
+        sim.submit(Request(rid, now, n, out), now)
+        for _ in range(20000):
+            sum(i.tick(now, dt) for i in sim.instances)
+            eligible = [i for i in sim.instances if i.tp > 1 and
+                        now > i.transform_until + sim.scale_down_dwell]
+            by_iid = {{i.iid: i for i in eligible}}
+            for act in sim.scheduler.schedule_parallelism(
+                    eligible, False):
+                sim.execute_scale_down(by_iid[act.iid], now)
+            now += dt
+            done = all(r.finished for r in sim.all_requests
+                       if r.rid == rid) if sim.all_requests else True
+            if done and all(i.tp == 1 for i in sim.instances) \
+                    and not sim.waiting:
+                break
+        else:
+            raise RuntimeError(f"sim did not drain request {{rid}}")
+    sim_metrics = sim.metrics(now)
+
+    print("RESULT " + json.dumps({{
+        "scheduler": SCHED,
+        "live_placements": {{str(k): v
+                            for k, v in live.placements.items()}},
+        "sim_placements": {{str(k): v
+                           for k, v in sim.placements.items()}},
+        "live_actions": [act_key(a) for a in live.actions],
+        "sim_actions": [act_key(a) for a in sim.actions],
+        "live_keys": list(live_metrics), "sim_keys": list(sim_metrics),
+        "metric_keys": list(METRIC_KEYS),
+        "live_merges": sum(1 for a in live.actions
+                           if isinstance(a, ScaleUp) and a.donor_iids),
+    }}))
+"""
+
+
+def _drive(sched: str) -> dict:
+    """Run the dual-plane driver for one scheduler, in-process when the
+    session already has >= 8 devices (the CI configuration), else in a
+    subprocess that forces 8 fake host devices."""
+    body = textwrap.dedent(DRIVER).format(trace=TRACE, sched=sched)
+    use_subprocess = True
+    if "xla_force_host_platform_device_count=8" in os.environ.get(
+            "XLA_FLAGS", ""):
+        use_subprocess = False
+    if use_subprocess:
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8",
+                   PYTHONPATH=os.path.join(REPO, "src"))
+        out = subprocess.run([sys.executable, "-c", body],
+                             capture_output=True, text=True, env=env,
+                             timeout=900)
+        assert out.returncode == 0, (
+            f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}")
+        stdout = out.stdout
+    else:
+        import contextlib
+        import io
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            exec(compile(body, f"<parity:{sched}>", "exec"), {})
+        stdout = buf.getvalue()
+    line = next(ln for ln in stdout.splitlines()
+                if ln.startswith("RESULT "))
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.parametrize("sched", ["gyges", "llf", "rr"])
+def test_decision_parity_sim_vs_live(sched):
+    """Same trace, same PrefillPolicy, same SchedulerConfig -> the two
+    planes route every request to the same instance, execute the same
+    ScaleUp/ScaleDown sequence (same merge targets and donors), and
+    report the same metrics schema."""
+    r = _drive(sched)
+    assert r["live_placements"] == r["sim_placements"], (
+        sched, r["live_placements"], r["sim_placements"])
+    assert r["live_actions"] == r["sim_actions"], (
+        sched, r["live_actions"], r["sim_actions"])
+    # the trace's long request really forced a cross-instance merge
+    assert r["live_merges"] >= 1, r["live_actions"]
+    assert r["live_keys"] == r["sim_keys"] == r["metric_keys"]
