@@ -92,6 +92,12 @@ def act_two_merge(cluster, req):
           f"pool grew to {cluster._engine(act.iid).max_seq_alloc} "
           f"tok/slot")
     cluster.run()
+    # the zero-stall contract: decode kept emitting THROUGH the
+    # merge/split sessions (see docs/transformation-lifecycle.md §3)
+    assert cluster.stall_steps == 0, cluster.stall_steps
+    print(f"    overlap: {cluster.tokens_during_session} tokens emitted "
+          f"during {cluster.session_steps} cross-device session steps, "
+          f"{cluster.stall_steps} decode stalls")
     downs = [a for a in cluster.actions[n_before:]
              if isinstance(a, ScaleDown)]
     for a in downs:

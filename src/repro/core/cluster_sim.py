@@ -40,6 +40,14 @@ ENGINE_EFFICIENCY = {"gyges": 1.0, "gyges-": 1.0, "basic": 1.0,
 # no KV head shards; seesaw bounces via host memory: §6.2.3 "41x")
 TRANSFORM_TIME_FACTOR = {"gyges": 1.0, "gyges-": 1.0, "basic": 1.0,
                          "seesaw": 1.0, "kunserve": 0.3, "loongserve": 0.3}
+# Decode/prefill rate fraction that survives INSIDE a transformation
+# window (paper Fig. 11).  Gyges overlaps the session with serving —
+# the live plane's staged per-layer assemblies + double-buffered
+# transfers keep decode running through merges and splits with zero
+# full-stall steps (bench_e2e --merge-smoke asserts it), so the model
+# charges <1%; every non-overlapping method stalls to a trickle.
+TRANSFORM_OVERLAP = {"gyges": 0.99}
+TRANSFORM_STALL = 0.05
 
 
 class SimInstance:
@@ -138,7 +146,8 @@ class SimInstance:
         base = self.cm.instance_tps(self.tp) * ENGINE_EFFICIENCY[self.method]
         if now < self.transform_until:
             # Gyges overlaps; others stall (paper Fig. 11: <1% vs stalls)
-            return base * (0.99 if self.method == "gyges" else 0.05)
+            return base * TRANSFORM_OVERLAP.get(self.method,
+                                                TRANSFORM_STALL)
         return base
 
     def tick(self, now: float, dt: float) -> float:
@@ -158,9 +167,10 @@ class SimInstance:
         prefill_fraction = 0.0
         if self.prefill_q:
             eff = ENGINE_EFFICIENCY[self.method]
-            stall = now < self.transform_until and self.method != "gyges"
+            stall = (now < self.transform_until
+                     and self.method not in TRANSFORM_OVERLAP)
             rate = self.cm.hw.prefill_tps * self.tp * eff * (
-                0.05 if stall else 1.0)
+                TRANSFORM_STALL if stall else 1.0)
             capacity = rate * dt
             budget = capacity
             if pol is not None:
@@ -263,6 +273,11 @@ class Cluster:
         self.total_tokens = 0.0
         self.actions: List[Action] = []         # executed, in order
         self.placements: Dict[int, int] = {}    # rid -> instance iid
+        # per-action transform records, schema-shared with the live
+        # plane's Engine.transform_log (wall_s / measured_s / modeled_s
+        # / cross); in the sim measured IS the model, so drift == 0 —
+        # the live column measures how honest the Table-1 model is
+        self.transform_log: List[Dict[str, float]] = []
         self.scale_down_dwell = 20.0   # s at high TP before decomposing
         self.timeline: List[Tuple[float, float]] = []  # (t, cluster tps)
 
@@ -312,10 +327,15 @@ class Cluster:
             merged.prefill_q += m.prefill_q
             host.remove(m)
         merged.dirty()
-        merged.transform_until = now + self.cm.transform_time(
-            self.method) * TRANSFORM_TIME_FACTOR[self.method]
+        dur = self.cm.transform_time(self.method) \
+            * TRANSFORM_TIME_FACTOR[self.method]
+        merged.transform_until = now + dur
         merged.n_transforms = 1
         self.n_transforms += 1
+        # sim instances always merge across device assemblies: every
+        # transform record is cross, with wall == measured == modeled
+        self.transform_log.append({"wall_s": dur, "measured_s": dur,
+                                   "modeled_s": dur, "cross": True})
         self.actions.append(ScaleUp(
             iid=merged.iid, tp_to=merged.tp,
             donor_iids=tuple(merged.member_iids[1:]),
@@ -381,11 +401,13 @@ class Cluster:
             parts[j % len(parts)].active.append(r)
         for j, r in enumerate(inst.prefill_q):
             parts[j % len(parts)].prefill_q.append(r)
-        t = now + self.cm.transform_time(self.method) \
+        dur = self.cm.transform_time(self.method) \
             * TRANSFORM_TIME_FACTOR[self.method]
         for p in parts:
-            p.transform_until = t
+            p.transform_until = now + dur
         self.n_transforms += 1
+        self.transform_log.append({"wall_s": dur, "measured_s": dur,
+                                   "modeled_s": dur, "cross": True})
         self.actions.append(ScaleDown(iid=inst.iid, tp_to=1,
                                       reason="low load"))
         host.extend(parts)
@@ -478,7 +500,7 @@ class Cluster:
         """Shared schema (serving.metrics): key-identical with the live
         ``ClusterEngine.metrics()``."""
         return summarize(self.all_requests, t_end, self.total_tokens,
-                         self.n_transforms)
+                         self.n_transforms, transforms=self.transform_log)
 
 
 # ---------------------------------------------------------------------------

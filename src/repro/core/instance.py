@@ -255,7 +255,8 @@ class InstanceGroup:
             # factorizations, so decode runs the per-layer path
             s = self._session
             logits, s.layers = M.decode_step_layers(
-                s.layers, s.static, self.cfg, self.plan, tokens, positions)
+                s.layers, s.static, self.cfg, self.plan, tokens,
+                positions, static_mesh=s.static_mesh)
             return logits
         with mesh_context(self.mesh):
             logits, self.caches = self._decode_fn()(

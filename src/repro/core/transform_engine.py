@@ -54,16 +54,47 @@ class Schedule:
 
 
 def scale_up_schedule(n_layers: int, layers_per_step: int = 0,
-                      tp_from: int = 1, tp_to: int = 4) -> Schedule:
-    """MLP-first, reversed order, then KV migration per layer."""
+                      tp_from: int = 1, tp_to: int = 4,
+                      coherent: bool = False) -> Schedule:
+    """MLP-first, reversed order, then KV migration per layer.
+
+    ``coherent=True`` builds the layer-coherent variant used by
+    CROSS-DEVICE sessions (merge/split): each step moves a layer's MLP
+    *and* KV together, so after every step each layer lives on exactly
+    one device assembly and the per-layer decode path can keep serving
+    through the session (one ``device_put`` of the activations at the
+    migrated/unmigrated boundary).  MLP-first survives at layer
+    granularity — within a step the MLP ops release their pages before
+    the layer's KV migration runs."""
     lps = layers_per_step or n_layers
     order = list(range(n_layers - 1, -1, -1))      # reversed traversal
     steps: List[List[TransformOp]] = []
+    if coherent:
+        for i in range(0, n_layers, lps):
+            chunk = order[i:i + lps]
+            steps.append([TransformOp(l, "mlp") for l in chunk]
+                         + [TransformOp(l, "kv") for l in chunk])
+        return Schedule("up", tp_from, tp_to, steps)
     for i in range(0, n_layers, lps):              # 1) MLP releases first
         steps.append([TransformOp(l, "mlp") for l in order[i:i + lps]])
     for i in range(0, n_layers, lps):              # 2) then KV migration
         steps.append([TransformOp(l, "kv") for l in order[i:i + lps]])
     return Schedule("up", tp_from, tp_to, steps)
+
+
+def schedule_is_layer_coherent(sched: Schedule) -> bool:
+    """True iff every step moves complete layers: each layer named in a
+    step has BOTH its components ("mlp" and "kv") in that same step.
+    Cross-device sessions require this — a layer whose weights and KV
+    sit on different device assemblies cannot decode at all, so the
+    session executor refuses incoherent schedules there."""
+    for step in sched.steps:
+        by_layer: Dict[int, set] = {}
+        for op in step:
+            by_layer.setdefault(op.layer, set()).add(op.component)
+        if any(comps != {"mlp", "kv"} for comps in by_layer.values()):
+            return False
+    return True
 
 
 def scale_down_schedule(n_layers: int, layers_per_step: int = 1,
@@ -140,8 +171,15 @@ def begin_session(params, caches, cfg: ModelConfig, plan: PaddingPlan,
                          "transformation needs a different target degree")
     layers, static = M.unstack_decode_state(params, cfg, caches)
     n = len(layers)
+    cross = (frozenset(mesh_from.devices.flat)
+             != frozenset(mesh_to.devices.flat))
     if tp_to > tp_from:
-        sched = scale_up_schedule(n, layers_per_step, tp_from, tp_to)
+        # cross-device sessions (merge) stage the widened mesh PER LAYER
+        # so decode keeps running through the session; in-place sessions
+        # keep the paper's MLP-first ordering (freed MLP pages absorb
+        # the incoming KV on the same devices)
+        sched = scale_up_schedule(n, layers_per_step, tp_from, tp_to,
+                                  coherent=cross)
     else:
         sched = scale_down_schedule(n, layers_per_step, tp_from, tp_to)
     return TransformSession(
@@ -199,11 +237,23 @@ def close_owner_session(owner) -> "TransformSession":
 
 @dataclass
 class StepReport:
-    """What one executed schedule step did, measured vs. modeled."""
+    """What one executed schedule step did, measured vs. modeled.
+
+    ``seconds`` spans dispatch start to residency (block_until_ready);
+    when the step was double-buffered against decode compute
+    (``overlapped=True``) that span includes the hidden-under-compute
+    window.  ``blocked_s`` is the EXPOSED cost — host time issuing the
+    transfers plus time actually spent waiting on them — i.e. the
+    transform work the serving timeline paid (the Fig. 11 overhead
+    quantity; what ``measured_s`` in the per-action transform log
+    aggregates).  For a synchronous ``step()`` the two coincide."""
     ops: List[TransformOp]
     seconds: float                 # wall time, arrays block_until_ready
     modeled_s: float               # accounting-plane prediction
     kernel_plane: bool = False     # pallas gather/scatter + all_to_all?
+    dispatch_s: float = 0.0        # host time issuing the async transfers
+    blocked_s: float = 0.0         # dispatch_s + wait: the exposed cost
+    overlapped: bool = False       # completed under a decode iteration?
 
 
 class TransformSession:
@@ -230,6 +280,23 @@ class TransformSession:
     Between ``step()`` calls the owner keeps serving through the
     per-layer decode path; ``done`` flips once every step has executed
     and the owner restacks.
+
+    CROSS-DEVICE sessions (``mesh_from`` and ``mesh_to`` span different
+    device sets — a merge or a split) additionally require a
+    layer-coherent schedule (``schedule_is_layer_coherent``): every
+    step moves complete layers, so mid-session each layer lives on
+    exactly ONE device assembly.  The session tags every layer dict
+    with its current ``"mesh"`` (and tracks ``static_mesh`` for the
+    embed/head params), which is what the per-layer decode and
+    prefill-chunk paths use to ``device_put`` activations at the
+    boundary between migrated and not-yet-migrated layers — decode
+    never stalls.
+
+    Steps can also be split into ``dispatch_step()`` (issue the async
+    transfers) and ``complete_step()`` (block + report): the serving
+    engine dispatches the next layer's transfer BEFORE running the
+    decode iteration, so the weight/KV movement hides under decode
+    compute instead of serializing with it (double buffering).
     """
 
     def __init__(self, layers: List[Dict[str, Any]],
@@ -253,13 +320,31 @@ class TransformSession:
         self.storage_layout = storage_layout
         self.interpret = interpret
         self.reports: List[StepReport] = []
-        self._next = 0
+        self._next = 0               # completed steps
+        self._dispatched = 0         # issued steps (>= completed)
+        self._pending: Optional[Dict[str, Any]] = None
         self._tp_axis = "tp"
+        # -- per-layer device-assembly tracking (cross-device overlap) --
+        self.cross = (frozenset(mesh_from.devices.flat)
+                      != frozenset(mesh_to.devices.flat))
+        if self.cross:
+            assert schedule_is_layer_coherent(schedule), (
+                "cross-device sessions require layer-coherent schedule "
+                "steps: a layer split across two device assemblies "
+                "cannot decode")
+        for layer in self.layers:
+            layer["mesh"] = mesh_from
+        self.static_mesh = mesh_from
 
     # -- progress -------------------------------------------------------
     @property
     def done(self) -> bool:
+        """Every schedule step dispatched AND completed."""
         return self._next >= self.schedule.n_steps
+
+    @property
+    def all_dispatched(self) -> bool:
+        return self._dispatched >= self.schedule.n_steps
 
     @property
     def steps_remaining(self) -> int:
@@ -340,11 +425,21 @@ class TransformSession:
         return stats.time_s(self.link, overlap=op.overlap)
 
     # -- execution ------------------------------------------------------
-    def step(self) -> StepReport:
-        """Execute the next schedule step; blocks until the moved arrays
-        are resident so the measured time is the real migration cost."""
-        assert not self.done, "schedule exhausted"
-        ops = self.schedule.steps[self._next]
+    def dispatch_step(self) -> None:
+        """Issue the next schedule step's transfers WITHOUT blocking.
+
+        Every ``device_put``/kernel migration is dispatched
+        asynchronously; the layer dicts immediately point at the
+        in-flight result arrays (and their ``"mesh"`` tag flips to the
+        target), so a decode iteration run right after this call simply
+        queues behind the transfers of the layers it touches while the
+        rest of its compute proceeds — the double-buffering that hides
+        transfer under decode.  ``complete_step()`` blocks and reports.
+        """
+        assert self._pending is None, "previous step not completed"
+        assert self._dispatched < self.schedule.n_steps, (
+            "schedule exhausted")
+        ops = self.schedule.steps[self._dispatched]
         used_kernel = False
         modeled = 0.0
         t0 = time.perf_counter()
@@ -361,21 +456,50 @@ class TransformSession:
                 layer["cache"], used = self._migrate_cache(layer["cache"])
                 used_kernel |= used
                 moved.extend(jax.tree.leaves(layer["cache"]))
-        if self._next + 1 >= self.schedule.n_steps:
+            layer["mesh"] = self.mesh_to
+        if self._dispatched + 1 >= self.schedule.n_steps:
             # non-layer params (embed/head: replicated) ride the last
             # step onto the target mesh — inside the timed region so the
             # step's measured cost covers everything it moves
             self.static = jax.device_put(
                 self.static, self._shardings(self._pspec(self.static),
                                              self.mesh_to))
+            self.static_mesh = self.mesh_to
             moved.extend(jax.tree.leaves(self.static))
-        for a in moved:
+        self._pending = {"ops": ops, "t0": t0, "modeled": modeled,
+                         "kernel": used_kernel, "moved": moved,
+                         "dispatch_s": time.perf_counter() - t0}
+        self._dispatched += 1
+
+    def complete_step(self, overlapped: bool = True
+                      ) -> Optional[StepReport]:
+        """Block until the last dispatched step's arrays are resident
+        and record its ``StepReport``.  No-op (returns None) when
+        nothing is pending."""
+        if self._pending is None:
+            return None
+        p, self._pending = self._pending, None
+        t_wait = time.perf_counter()
+        for a in p["moved"]:
             a.block_until_ready()
-        rep = StepReport(ops=ops, seconds=time.perf_counter() - t0,
-                         modeled_s=modeled, kernel_plane=used_kernel)
+        wait_s = time.perf_counter() - t_wait
+        rep = StepReport(ops=p["ops"],
+                         seconds=time.perf_counter() - p["t0"],
+                         modeled_s=p["modeled"], kernel_plane=p["kernel"],
+                         dispatch_s=p["dispatch_s"],
+                         blocked_s=p["dispatch_s"] + wait_s,
+                         overlapped=overlapped)
         self.reports.append(rep)
         self._next += 1
         return rep
+
+    def step(self) -> StepReport:
+        """Execute the next schedule step synchronously; blocks until
+        the moved arrays are resident so the measured time is the real
+        migration cost."""
+        assert not self.done, "schedule exhausted"
+        self.dispatch_step()
+        return self.complete_step(overlapped=False)
 
     def _migrate_cache(self, cache) -> Tuple[Any, bool]:
         """Returns (migrated cache, whether the kernel plane ran)."""

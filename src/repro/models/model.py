@@ -491,6 +491,43 @@ def decode_step(params, cfg: ModelConfig, plan: PaddingPlan,
 # executes, and restacks when the transformation completes.  Values are
 # bit-identical to the stacked path — only the iteration strategy
 # changes.
+#
+# CROSS-DEVICE sessions (merge/split) add one more ingredient: layer
+# dicts carry a ``"mesh"`` tag and each layer lives on exactly one
+# coherent device assembly (the session enforces a layer-coherent
+# schedule), so the per-layer paths below ``device_put`` the activations
+# once at the boundary between migrated and not-yet-migrated layers —
+# decode and chunked prefill keep running through the session.
+
+def unstack_cache_tree(caches: Dict[str, Any], cfg: ModelConfig
+                       ) -> List[Any]:
+    """Split a stacked cache-shaped tree (``{"groups": [...], "rem":
+    [...]}`` — decode caches or a prefill recurrent carry, which may
+    hold ``None`` where pools were stripped) into execution-ordered
+    per-layer trees."""
+    unit = pattern_unit(cfg)
+    G, R = group_counts(cfg)
+    out: List[Any] = []
+    for g in range(G):
+        for i in range(len(unit)):
+            out.append(_tree_index(caches["groups"][i], g))
+    out.extend(caches["rem"][i] for i in range(R))
+    return out
+
+
+def restack_cache_tree(layer_caches: List[Any], cfg: ModelConfig
+                       ) -> Dict[str, Any]:
+    """Inverse of ``unstack_cache_tree``."""
+    unit = pattern_unit(cfg)
+    G, R = group_counts(cfg)
+    return {
+        "groups": [
+            _tree_stack([layer_caches[g * len(unit) + i]
+                         for g in range(G)])
+            for i in range(len(unit))],
+        "rem": list(layer_caches[G * len(unit):]),
+    }
+
 
 def unstack_decode_state(params, cfg: ModelConfig, caches: Dict[str, Any]
                          ) -> Tuple[List[Dict[str, Any]], Dict[str, Any]]:
@@ -502,17 +539,18 @@ def unstack_decode_state(params, cfg: ModelConfig, caches: Dict[str, Any]
             "per-layer transformation does not cover encoder/vision yet")
     unit = pattern_unit(cfg)
     G, R = group_counts(cfg)
+    layer_caches = unstack_cache_tree(caches, cfg)
     layers: List[Dict[str, Any]] = []
     for g in range(G):
         for i, kind in enumerate(unit):
             layers.append({
                 "kind": kind,
                 "params": _tree_index(params["blocks"][i], g),
-                "cache": _tree_index(caches["groups"][i], g),
+                "cache": layer_caches[g * len(unit) + i],
             })
     for i in range(R):
         layers.append({"kind": unit[i], "params": params["rem"][i],
-                       "cache": caches["rem"][i]})
+                       "cache": layer_caches[G * len(unit) + i]})
     static = {k: v for k, v in params.items() if k not in ("blocks", "rem")}
     return layers, static
 
@@ -529,14 +567,31 @@ def restack_decode_state(layers: List[Dict[str, Any]],
                      for g in range(G)])
         for i in range(len(unit))]
     params["rem"] = [l["params"] for l in layers[G * len(unit):]]
-    caches = {
-        "groups": [
-            _tree_stack([layers[g * len(unit) + i]["cache"]
-                         for g in range(G)])
-            for i in range(len(unit))],
-        "rem": [l["cache"] for l in layers[G * len(unit):]],
-    }
+    caches = restack_cache_tree([l["cache"] for l in layers], cfg)
     return params, caches
+
+
+def _assembly(mesh) -> Optional[frozenset]:
+    """The device set a mesh spans (None when untracked)."""
+    return None if mesh is None else frozenset(mesh.devices.flat)
+
+
+def _boundary_put(x: jax.Array, mesh, cur: Optional[frozenset]
+                  ) -> Tuple[jax.Array, Optional[frozenset]]:
+    """Move the activation onto ``mesh``'s device assembly (replicated)
+    iff it currently lives on a DIFFERENT assembly — the one explicit
+    transfer at the boundary between already-migrated and
+    not-yet-migrated layers of a cross-device transform session.
+    Same-assembly transitions (in-place re-factorizations) are free:
+    mixed shardings on one device set compose without a copy."""
+    if mesh is None:
+        return x, cur
+    devs = _assembly(mesh)
+    if cur is not None and devs != cur:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        x = jax.device_put(x, NamedSharding(mesh, P()))
+    return x, devs
 
 
 def decode_step_layers(layers: List[Dict[str, Any]],
@@ -544,17 +599,62 @@ def decode_step_layers(layers: List[Dict[str, Any]],
                        plan: PaddingPlan, tokens: jax.Array,
                        positions: jax.Array,
                        layout: str = "header_centric",
-                       identity_pages: bool = False
+                       identity_pages: bool = False,
+                       static_mesh=None
                        ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
     """One decode step over per-layer state; numerically identical to
-    ``decode_step`` on the restacked equivalents."""
+    ``decode_step`` on the restacked equivalents.
+
+    Mid-cross-device-session the layers span TWO device assemblies (each
+    layer coherently on one); layer dicts then carry a ``"mesh"`` tag
+    and ``static_mesh`` locates the embed/head params — activations are
+    ``device_put`` once per assembly boundary, so a single decode step
+    runs across the mixed state without stalling."""
     x = static["embed"][tokens][:, None, :]
     pos2 = positions[:, None]
+    cur = _assembly(static_mesh)
     new_layers = []
     for layer in layers:
+        x, cur = _boundary_put(x, layer.get("mesh"), cur)
         x, c = B.apply_block_decode(layer["kind"], layer["params"], cfg,
                                     plan, x, pos2, layer["cache"], layout,
                                     identity_pages=identity_pages)
         new_layers.append({**layer, "cache": c})
+    x, cur = _boundary_put(x, static_mesh, cur)
     logits = lm_logits(static, cfg, plan, x)[:, 0, :]
     return logits, new_layers
+
+
+def prefill_chunk_layers(layers: List[Dict[str, Any]],
+                         static: Dict[str, Any], cfg: ModelConfig,
+                         plan: PaddingPlan, tokens: jax.Array,
+                         start_pos: jax.Array, slot_caches: List[Any],
+                         layout: str = "header_centric",
+                         static_mesh=None
+                         ) -> Tuple[jax.Array, List[Any]]:
+    """One prefill chunk through per-layer (unstacked) state — the
+    mid-transform twin of ``prefill_chunk``, so chunked prefill keeps
+    advancing while a session migrates layers.
+
+    ``slot_caches`` are the caller's per-layer batch-1 slot cache views
+    (each already resident on its layer's assembly); the chunk attends
+    over cached prefix + chunk and the updated views are returned for
+    the caller to scatter back into the per-layer engine caches.
+    Activations cross assembly boundaries exactly like
+    ``decode_step_layers``."""
+    if cfg.encoder is not None or cfg.vision is not None:
+        raise NotImplementedError(
+            "chunked prefill covers causal decoder-only models")
+    S = tokens.shape[1]
+    x = static["embed"][tokens]
+    positions = start_pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    cur = _assembly(static_mesh)
+    new_caches = []
+    for layer, c in zip(layers, slot_caches):
+        x, cur = _boundary_put(x, layer.get("mesh"), cur)
+        x, c = B.apply_block_chunk(layer["kind"], layer["params"], cfg,
+                                   plan, x, positions, c, layout)
+        new_caches.append(c)
+    x, cur = _boundary_put(x, static_mesh, cur)
+    logits = lm_logits(static, cfg, plan, x[:, -1:, :])
+    return logits, new_caches

@@ -14,9 +14,10 @@ mixed) and service order (FCFS / shortest-remaining-first).  A
 partially-prefilled slot's KV lives in the engine's paged pool like any
 other slot's — whole pages plus at most one trailing partial page — so
 page migration (``copy_page_slices``) and transform/merge sessions
-remain valid mid-prefill; chunking pauses while a session is open and
-resumes on the new degree.  The default policy (no budget) degenerates
-to the classic one-whole-prompt-per-step prefill.
+remain valid mid-prefill; chunking keeps ADVANCING while a session is
+open (per-layer chunk path), with only whole-prompt prefills waiting
+for the drain.  The default policy (no budget) degenerates to the
+classic one-whole-prompt-per-step prefill.
 
 Two placements:
 
@@ -149,7 +150,11 @@ class Engine:
         self.tp_pending: Optional[int] = None
         self.mesh = None
         self._session = None
+        self._session_t0 = 0.0
         self.transform_reports = []
+        # per-action transform records (wall/measured/modeled seconds,
+        # cross-device flag) surfaced by ClusterEngine.metrics
+        self.transform_log: List[Dict] = []
         if devices:
             from repro.core import instance as I
             assert layout == "header_centric", (
@@ -175,6 +180,22 @@ class Engine:
 
         self._decode = _decode
 
+        # chunked-prefill hot path: ONE jit whose trace cache is keyed
+        # by (batch, chunk_len) shape — start_pos is traced, so every
+        # chunk of the same shape reuses the compile.  The key set
+        # mirrors jit's cache for observability (hits asserted in
+        # tests/test_chunked_prefill.py).
+        @jax.jit
+        def _chunk(params, tokens, start_pos, sub):
+            return M.prefill_chunk(params, cfgc, planc, tokens,
+                                   start_pos, sub, layoutc)
+
+        self._prefill_chunk_jit = _chunk
+        self._chunk_keys: set = set()
+        self.chunk_cache_hits = 0
+        self.chunk_cache_misses = 0
+        self._b1_tmpls: Dict = {}     # (kind, alloc) -> batch-1 template
+
     def _block_window(self, kind: str) -> int:
         from repro.models.blocks import _window_of
         return _window_of(kind, self.cfg)
@@ -197,7 +218,7 @@ class Engine:
         executes one of them before its decode iteration, and the engine
         returns to the stacked fast path once the schedule drains.
 
-        Two regimes:
+        Two regimes — BOTH keep serving through the session:
 
         * SAME device set (the default): in-flight requests keep
           decoding throughout via the per-layer path; their KV crosses
@@ -205,10 +226,13 @@ class Engine:
         * CROSS device set — the target mesh spans adopted devices
           (merge, after ``adopt_devices``) or a ``devices=`` subset
           (split: the engine sheds its adopted devices when the session
-          drains).  Mid-session layers then live on two different device
-          assemblies, which one XLA computation cannot mix, so decode
-          PAUSES until the schedule drains; token streams stay exact,
-          only their timing shifts.
+          drains).  The session stages the widened/shrunk mesh PER
+          LAYER (layer-coherent schedule steps), so mid-session every
+          layer sits on exactly one device assembly; the per-layer
+          decode/chunk paths ``device_put`` activations once at the
+          migrated/unmigrated boundary and decoding (and chunked
+          prefill) continue with zero stalled steps — streams stay
+          bit-exact, and now their timing does too.
 
         Invariants: no session may already be open; ``tp_to`` divides
         the target device count; a merge transform requires
@@ -239,6 +263,7 @@ class Engine:
                                  if target_devs != self.devices else None)
         self._session_cross = (set(self.mesh.devices.flat)
                                != set(target_devs))
+        self._session_t0 = time.monotonic()
         return session.schedule.n_steps
 
     @property
@@ -346,6 +371,28 @@ class Engine:
         session = TE.close_owner_session(self)
         self.tp_pending = None
         self.transform_reports.extend(session.reports)
+        self.transform_log.append({
+            "tp_from": session.schedule.tp_from,
+            "tp_to": session.schedule.tp_to,
+            "cross": self._session_cross,
+            "steps": session.schedule.n_steps,
+            "wall_s": time.monotonic() - self._session_t0,
+            # measured_s: the StepReport step times (dispatch ->
+            # resident).  For overlapped steps the span includes
+            # whatever serving work the transfer hid under, so the
+            # derived drift is an UPPER BOUND on model error;
+            # exposed_s (dispatch + blocking wait — the cost serving
+            # actually paid, the Fig. 11 overhead) rides alongside
+            "measured_s": sum(r.seconds for r in session.reports),
+            "exposed_s": sum(r.blocked_s for r in session.reports),
+            "modeled_s": sum(r.modeled_s for r in session.reports),
+            # PER-STEP relative errors: action-level sums let signed
+            # step errors cancel, which would show 0 drift on a badly
+            # miscalibrated model
+            "step_drifts": [abs(r.seconds - r.modeled_s) / r.modeled_s
+                            for r in session.reports
+                            if r.modeled_s > 0.0],
+        })
         self._session_cross = False
         if self._pending_devices is not None:
             # split after a merge: the drained session landed every array
@@ -464,6 +511,12 @@ class Engine:
 
         self.caches = {k: visit(v) for k, v in self.caches.items()}
         self.max_seq_alloc = new_max_seq
+        if self.mesh is not None:
+            # resize builds fresh metadata arrays (identity page
+            # tables) that would otherwise sit uncommitted on the
+            # default device; re-pin so every cache leaf is committed
+            # to the canonical shardings before a session unstacks it
+            self.repin_cache_shardings()
 
     def export_active(self) -> List[Tuple[ServeRequest, Dict,
                                           Optional[Dict]]]:
@@ -557,25 +610,28 @@ class Engine:
                    if r is not None and r.state == State.DECODE)
 
     @staticmethod
+    def _strip_tree(c):
+        """Drop PagedState nodes from one cache tree (see
+        ``_strip_pools``)."""
+        from repro.paged.pool import PagedState
+
+        if isinstance(c, PagedState):
+            return None
+        if isinstance(c, dict):
+            return {k: Engine._strip_tree(v) for k, v in c.items()}
+        if isinstance(c, (list, tuple)):
+            out = [Engine._strip_tree(v) for v in c]
+            return tuple(out) if isinstance(c, tuple) else out
+        return c
+
+    @staticmethod
     def _strip_pools(tree):
         """Drop PagedState leaves from a prefill carry tree: only the
         recurrent-state leaves are ever read back (the slot's pool pages
         are authoritative for attention KV), and keeping the pools would
         pin a full per-slot cache of dead device memory — and ship it
         cross-engine on merge exports."""
-        from repro.paged.pool import PagedState
-
-        def visit(c):
-            if isinstance(c, PagedState):
-                return None
-            if isinstance(c, dict):
-                return {k: visit(v) for k, v in c.items()}
-            if isinstance(c, (list, tuple)):
-                out = [visit(v) for v in c]
-                return tuple(out) if isinstance(c, tuple) else out
-            return c
-
-        return {k: visit(v) for k, v in tree.items()}
+        return {k: Engine._strip_tree(v) for k, v in tree.items()}
 
     def _begin_prefill(self, req: ServeRequest, slot: int) -> None:
         req.state = State.PREFILL
@@ -595,16 +651,46 @@ class Engine:
         self._prefilling[slot] = {"req": req, "chunks": chunks, "ci": 0,
                                   "done": 0, "rec": rec}
 
+    def _admittable_now(self, req: ServeRequest) -> bool:
+        """Whether a waiting request may begin prefilling THIS step.
+        Outside a session: always.  Mid-session: only if its chunk plan
+        is multi-chunk — chunks run through the per-layer path, while
+        whole-prompt prefills need the stacked params the session
+        unstacked and wait for it to drain."""
+        if self._session is None:
+            return True
+        return self._can_chunk and len(self.prefill_policy.chunk_sizes(
+            len(req.prompt), self.page_tokens)) > 1
+
+    def _advanceable_now(self, slot: int) -> bool:
+        """Mid-session, single-chunk (whole-prompt) prefills pause; the
+        chunked ones keep advancing through the per-layer path."""
+        if self._session is None:
+            return True
+        return len(self._prefilling[slot]["chunks"]) > 1
+
     def _prefill_step(self) -> int:
         """One step of policy-driven prefill work: admit at most one
         waiting request (the classic one-admission-per-step cadence),
         then spend the policy's token quota advancing partially-
         prefilled slots in its service order.  Returns tokens emitted
-        (prefill completions emit the first token)."""
+        (prefill completions emit the first token).  Chunked prefills
+        keep running DURING transform sessions (per-layer path, see
+        ``_run_chunk_layers``); only whole-prompt prefills wait.
+
+        Admission is FCFS over the ADMITTABLE queue: mid-session a
+        whole-prompt request at the head must not block a chunkable
+        request behind it (the router deliberately sends follow-up
+        longs to a transforming engine promising immediate chunking);
+        the skipped request keeps its queue position and admits when
+        the session drains."""
         if self.waiting:
             slot = self._free_slot()
             if slot is not None:
-                self._begin_prefill(self.waiting.pop(0), slot)
+                for i, req in enumerate(self.waiting):
+                    if self._admittable_now(req):
+                        self._begin_prefill(self.waiting.pop(i), slot)
+                        break
         if not self._prefilling:
             self._prefill_deferred = 0
             return 0
@@ -624,6 +710,8 @@ class Engine:
         for slot in self.prefill_policy.service_order(
                 list(self._prefilling), remaining):
             while slot in self._prefilling:
+                if not self._advanceable_now(slot):
+                    break
                 size = self._prefilling[slot]["chunks"][
                     self._prefilling[slot]["ci"]]
                 if spent > 0 and spent + size > quota:
@@ -642,20 +730,36 @@ class Engine:
         if len(prog["chunks"]) == 1:
             # whole-prompt fast path: one prefill call on a fresh
             # batch-1 cache (byte-identical to the pre-chunking engine)
+            assert self._session is None, "whole prompts wait out sessions"
             self._prefill_whole(req, slot)
             del self._prefilling[slot]
             return 1
         start = prog["done"]
         size = prog["chunks"][prog["ci"]]
-        sub = self._sanitize_sub(self._extract_slot_cache(slot),
-                                 prog["rec"], start)
         tokens = jnp.asarray(req.prompt[start:start + size],
                              jnp.int32)[None, :]
-        logits, sub = M.prefill_chunk(
-            self.params, self.cfg, self.plan, tokens,
-            jnp.full((1,), start, jnp.int32), sub, self.layout)
-        self._adopt_slot_cache(sub, slot, start + size)
-        prog["rec"] = self._strip_pools(sub)
+        start_a = jnp.full((1,), start, jnp.int32)
+        if self._session is not None:
+            # mid-session: the chunk runs the per-layer path across the
+            # session's mixed-but-coherent device assemblies
+            logits = self._run_chunk_layers(slot, prog, tokens, start_a)
+        else:
+            sub = self._sanitize_sub(self._extract_slot_cache(slot),
+                                     prog["rec"], start)
+            # mirror of jit's trace-cache key: chunk shape, pool
+            # allocation, AND the mesh factorization — a transform
+            # re-commits params/caches to new shardings, which retraces
+            key = (tokens.shape[0], tokens.shape[1], self.max_seq_alloc,
+                   self.tp, self.W)
+            if key in self._chunk_keys:
+                self.chunk_cache_hits += 1
+            else:
+                self._chunk_keys.add(key)
+                self.chunk_cache_misses += 1
+            logits, sub = self._prefill_chunk_jit(self.params, tokens,
+                                                  start_a, sub)
+            self._adopt_slot_cache(sub, slot, start + size)
+            prog["rec"] = self._strip_pools(sub)
         prog["done"] += size
         prog["ci"] += 1
         if prog["done"] >= len(req.prompt):
@@ -663,6 +767,61 @@ class Engine:
             self._finish_prefill(req, slot, logits)
             return 1
         return 0
+
+    def _run_chunk_layers(self, slot: int, prog: Dict, tokens: jax.Array,
+                          start_a: jax.Array) -> jax.Array:
+        """One prefill chunk while a transform session is open: extract
+        the slot's batch-1 view from EACH session layer's cache,
+        sanitize it (decode filler past the prefix, recurrent carry),
+        run ``models.model.prefill_chunk_layers`` across the session's
+        per-layer assemblies, and scatter the updated views back."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        s = self._session
+        start = prog["done"]
+        rec_layers = M.unstack_cache_tree(prog["rec"], self.cfg)
+        subs = []
+        for layer, rec in zip(s.layers, rec_layers):
+            tmpl = self._batch1_layer_tmpl(layer["kind"])
+            sub = self._extract_slot_tree(layer["cache"], tmpl, slot)
+            subs.append(self._sanitize_tree(sub, rec, start,
+                                            layer.get("mesh")))
+        logits, new_subs = M.prefill_chunk_layers(
+            s.layers, s.static, self.cfg, self.plan, tokens, start_a,
+            subs, self.layout, static_mesh=s.static_mesh)
+        for layer, sub in zip(s.layers, new_subs):
+            layer["cache"] = self._adopt_slot_tree(layer["cache"], sub,
+                                                   slot)
+        # the carry stays in the stacked format between chunks (one
+        # format everywhere, and sessions may drain mid-prefill) — but
+        # mid-cross-session its recurrent leaves come back committed to
+        # whichever assembly their layer was on, and jnp.stack cannot
+        # stack across disjoint device sets: land every leaf on the
+        # TARGET assembly first (the next chunk's sanitize re-pins each
+        # leaf to its layer's then-current mesh anyway)
+        rec_new = []
+        for sub in new_subs:
+            t = self._strip_tree(sub)
+            rec_new.append(jax.device_put(t, jax.tree.map(
+                lambda _: NamedSharding(s.mesh_to, P()), t)))
+        prog["rec"] = M.restack_cache_tree(rec_new, self.cfg)
+        return logits
+
+    def _batch1_layer_tmpl(self, kind: str):
+        """Memoized batch-1 shape template for one layer kind at the
+        CURRENT pool allocation (rebuilt when a resize changes it)."""
+        from repro.models import blocks as B
+
+        key = (kind, self.max_seq_alloc)
+        tmpl = self._b1_tmpls.get(key)
+        if tmpl is None:
+            tmpl = B.init_block_cache(kind, self.cfg, self.plan, 1,
+                                      self.max_seq_alloc,
+                                      self.page_tokens, self.layout,
+                                      specs_only=True)
+            self._b1_tmpls[key] = tmpl
+        return tmpl
 
     def _pin_prefill_cursors(self) -> None:
         """Decode iterations append masked filler for EVERY slot at its
@@ -699,35 +858,41 @@ class Engine:
         else:
             self.caches = {k: visit(v) for k, v in self.caches.items()}
 
+    def _sanitize_tree(self, dst, carry, done: int, mesh=None):
+        """Single-tree form of ``_sanitize_sub``; ``mesh`` is where
+        recurrent-carry leaves must land (a session layer's own mesh
+        mid-transform, the engine mesh otherwise)."""
+        from repro.paged.pool import PagedState
+
+        if isinstance(dst, PagedState):
+            # NOT .capacity: stacked group caches carry a leading
+            # layer axis, so the token axis is positions.shape[-1]
+            cap = dst.positions.shape[-1]
+            keep = jnp.arange(cap, dtype=jnp.int32) < done
+            pos = jnp.where(keep, dst.positions, -1)
+            seq = jnp.full_like(dst.seq_lens, done)
+            return PagedState(dst.pool, dst.page_table, seq, pos)
+        if isinstance(dst, dict):
+            return {k: self._sanitize_tree(dst[k], carry[k], done, mesh)
+                    for k in dst}
+        if isinstance(dst, (list, tuple)):
+            out = [self._sanitize_tree(a, b, done, mesh)
+                   for a, b in zip(dst, carry)]
+            return tuple(out) if isinstance(dst, tuple) else out
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            carry = jax.device_put(carry, NamedSharding(mesh, P()))
+        return carry
+
     def _sanitize_sub(self, sub, rec, done: int):
         """Prepare an extracted slot view for the next chunk: re-
         invalidate everything past the ``done``-token prefix (decode
         iterations for other slots wrote masked filler there) and
         restore the recurrent carry from the last chunk (decode filler
         overwrote those leaves in the engine cache too)."""
-        from repro.paged.pool import PagedState
-
-        def visit(dst, carry):
-            if isinstance(dst, PagedState):
-                # NOT .capacity: stacked group caches carry a leading
-                # layer axis, so the token axis is positions.shape[-1]
-                cap = dst.positions.shape[-1]
-                keep = jnp.arange(cap, dtype=jnp.int32) < done
-                pos = jnp.where(keep, dst.positions, -1)
-                seq = jnp.full_like(dst.seq_lens, done)
-                return PagedState(dst.pool, dst.page_table, seq, pos)
-            if isinstance(dst, dict):
-                return {k: visit(dst[k], carry[k]) for k in dst}
-            if isinstance(dst, (list, tuple)):
-                out = [visit(a, b) for a, b in zip(dst, carry)]
-                return tuple(out) if isinstance(dst, tuple) else out
-            if self.mesh is not None:
-                from jax.sharding import NamedSharding
-                from jax.sharding import PartitionSpec as P
-                carry = jax.device_put(carry, NamedSharding(self.mesh, P()))
-            return carry
-
-        return {k: visit(sub[k], rec[k]) for k in sub}
+        return {k: self._sanitize_tree(sub[k], rec[k], done, self.mesh)
+                for k in sub}
 
     def _finish_prefill(self, req: ServeRequest, slot: int,
                         logits: jax.Array) -> None:
@@ -761,76 +926,93 @@ class Engine:
         self._adopt_slot_cache(sub, slot, len(req.prompt))
         self._finish_prefill(req, slot, logits)
 
+    def _adopt_slot_tree(self, dst, src, slot: int):
+        """Copy one batch-1 cache tree into ``slot`` of ``dst``."""
+        from repro.paged.pool import PagedState
+        if isinstance(dst, PagedState):
+            mps = dst.page_table.shape[-1]
+            # pages for this slot occupy [slot*mps, (slot+1)*mps)
+            if dst.pool.ndim == src.pool.ndim:  # stacked group dims equal
+                pool = jax.lax.dynamic_update_slice_in_dim(
+                    dst.pool, src.pool.astype(dst.pool.dtype),
+                    slot * mps, axis=dst.pool.ndim - 5)
+                seq = jax.lax.dynamic_update_slice_in_dim(
+                    dst.seq_lens, src.seq_lens, slot,
+                    axis=dst.seq_lens.ndim - 1)
+                pos = jax.lax.dynamic_update_slice_in_dim(
+                    dst.positions, src.positions, slot,
+                    axis=dst.positions.ndim - 2)
+                return PagedState(pool, dst.page_table, seq, pos)
+            raise ValueError("cache rank mismatch")
+        if isinstance(dst, dict):
+            return {k: self._adopt_slot_tree(dst[k], src[k], slot)
+                    for k in dst}
+        if isinstance(dst, (list, tuple)):
+            out = [self._adopt_slot_tree(a, b, slot)
+                   for a, b in zip(dst, src)]
+            return tuple(out) if isinstance(dst, tuple) else out
+        # recurrent state leaf: batch axis is -2 for conv (B,K,D),
+        # else ...; states are (.., B, feature...) with B at axis
+        # (ndim of src where size==1)
+        ax = _batch_axis(dst, src)
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), slot, axis=ax)
+
     def _adopt_slot_cache(self, sub, slot: int, seq_len: int) -> None:
         """Copy the batch-1 cache into `slot` of the engine cache."""
-        def visit(dst, src):
-            from repro.paged.pool import PagedState
-            if isinstance(dst, PagedState):
-                mps = dst.page_table.shape[-1]
-                # pages for this slot occupy [slot*mps, (slot+1)*mps)
-                if dst.pool.ndim == src.pool.ndim:  # stacked group dims equal
-                    pool = jax.lax.dynamic_update_slice_in_dim(
-                        dst.pool, src.pool.astype(dst.pool.dtype),
-                        slot * mps, axis=dst.pool.ndim - 5)
-                    seq = jax.lax.dynamic_update_slice_in_dim(
-                        dst.seq_lens, src.seq_lens, slot,
-                        axis=dst.seq_lens.ndim - 1)
-                    pos = jax.lax.dynamic_update_slice_in_dim(
-                        dst.positions, src.positions, slot,
-                        axis=dst.positions.ndim - 2)
-                    return PagedState(pool, dst.page_table, seq, pos)
-                raise ValueError("cache rank mismatch")
-            if isinstance(dst, dict):
-                return {k: visit(dst[k], src[k]) for k in dst}
-            if isinstance(dst, (list, tuple)):
-                out = [visit(a, b) for a, b in zip(dst, src)]
-                return tuple(out) if isinstance(dst, tuple) else out
-            # recurrent state leaf: batch axis is -2 for conv (B,K,D),
-            # else ...; states are (.., B, feature...) with B at axis
-            # (ndim of src where size==1)
-            ax = _batch_axis(dst, src)
-            return jax.lax.dynamic_update_slice_in_dim(
-                dst, src.astype(dst.dtype), slot, axis=ax)
-
-        self.caches = {k: visit(self.caches[k], sub[k]) for k in self.caches}
+        self.caches = {k: self._adopt_slot_tree(self.caches[k], sub[k],
+                                                slot)
+                       for k in self.caches}
 
     def _batch1_specs(self):
         """Shape templates of a batch-1 cache tree (for locating batch
-        axes without allocating)."""
-        return M.init_decode_caches(self.cfg, self.plan, 1,
-                                    self.max_seq_alloc, self.page_tokens,
-                                    self.layout, specs_only=True)
+        axes without allocating); memoized per pool allocation — the
+        chunked-prefill hot path extracts a slot view every chunk."""
+        key = ("__stacked__", self.max_seq_alloc)
+        tmpl = self._b1_tmpls.get(key)
+        if tmpl is None:
+            tmpl = M.init_decode_caches(self.cfg, self.plan, 1,
+                                        self.max_seq_alloc,
+                                        self.page_tokens, self.layout,
+                                        specs_only=True)
+            self._b1_tmpls[key] = tmpl
+        return tmpl
+
+    def _extract_slot_tree(self, src, tm, slot: int):
+        """Slice ``slot`` out of one cache tree as a batch-1 tree
+        (``tm`` is the matching batch-1 shape template)."""
+        from repro.paged.pool import PagedState
+
+        if isinstance(src, PagedState):
+            mps = src.page_table.shape[-1]
+            nd = src.pool.ndim
+            pool = jax.lax.dynamic_slice_in_dim(
+                src.pool, slot * mps, mps, axis=nd - 5)
+            pt = jnp.broadcast_to(
+                jnp.arange(mps, dtype=src.page_table.dtype),
+                src.page_table.shape[:-2] + (1, mps))
+            seq = jax.lax.dynamic_slice_in_dim(
+                src.seq_lens, slot, 1, axis=src.seq_lens.ndim - 1)
+            pos = jax.lax.dynamic_slice_in_dim(
+                src.positions, slot, 1, axis=src.positions.ndim - 2)
+            return PagedState(pool, pt, seq, pos)
+        if isinstance(src, dict):
+            return {k: self._extract_slot_tree(src[k], tm[k], slot)
+                    for k in src}
+        if isinstance(src, (list, tuple)):
+            out = [self._extract_slot_tree(a, b, slot)
+                   for a, b in zip(src, tm)]
+            return tuple(out) if isinstance(src, tuple) else out
+        return jax.lax.dynamic_slice_in_dim(
+            src, slot, 1, axis=_batch_axis(src, tm))
 
     def _extract_slot_cache(self, slot: int):
         """Inverse of ``_adopt_slot_cache``: slice ``slot`` out of the
         engine cache as a self-contained batch-1 tree (fresh identity
         page table; pool pages are the slot's own range)."""
-        from repro.paged.pool import PagedState
-
-        def visit(src, tm):
-            if isinstance(src, PagedState):
-                mps = src.page_table.shape[-1]
-                nd = src.pool.ndim
-                pool = jax.lax.dynamic_slice_in_dim(
-                    src.pool, slot * mps, mps, axis=nd - 5)
-                pt = jnp.broadcast_to(
-                    jnp.arange(mps, dtype=src.page_table.dtype),
-                    src.page_table.shape[:-2] + (1, mps))
-                seq = jax.lax.dynamic_slice_in_dim(
-                    src.seq_lens, slot, 1, axis=src.seq_lens.ndim - 1)
-                pos = jax.lax.dynamic_slice_in_dim(
-                    src.positions, slot, 1, axis=src.positions.ndim - 2)
-                return PagedState(pool, pt, seq, pos)
-            if isinstance(src, dict):
-                return {k: visit(src[k], tm[k]) for k in src}
-            if isinstance(src, (list, tuple)):
-                out = [visit(a, b) for a, b in zip(src, tm)]
-                return tuple(out) if isinstance(src, tuple) else out
-            return jax.lax.dynamic_slice_in_dim(
-                src, slot, 1, axis=_batch_axis(src, tm))
-
         tmpl = self._batch1_specs()
-        return {k: visit(self.caches[k], tmpl[k]) for k in self.caches}
+        return {k: self._extract_slot_tree(self.caches[k], tmpl[k], slot)
+                for k in self.caches}
 
     def _import_slot_cache(self, sub, slot: int) -> None:
         """Cross-pool counterpart of ``_adopt_slot_cache``: the source
@@ -876,29 +1058,34 @@ class Engine:
 
     # -- one engine iteration --------------------------------------------
     def step(self) -> Dict[str, int]:
+        """One engine iteration.  A live transformation in progress
+        executes ONE §4.3 schedule step per iteration, double-buffered
+        against serving: the step's transfers are DISPATCHED before the
+        decode iteration and completed at the start of the next one (or
+        after this one's decode, for the final step), so weight/KV
+        movement hides under decode compute.  Decode and chunked prefill
+        run THROUGH the session — cross-device (merge/split) sessions
+        included, thanks to layer-coherent schedule steps and boundary
+        ``device_put`` of activations — so a transforming engine never
+        emits a zero-token step while it holds decodable work."""
         emitted = 0
-        # a live transformation in progress: execute ONE schedule step
-        # before this decode iteration (§4.3 — migration interleaves with
-        # serving); admissions pause until the new TP degree is resident
+        decode_emitted = 0
         if self._session is not None:
-            if not self._session.done:
-                self._session.step()
-            if self._session.done:
+            s = self._session
+            # complete the transfers dispatched last iteration (they
+            # overlapped that iteration's decode), then issue the next
+            # step's transfers so THIS decode hides them
+            s.complete_step()
+            if s.done:
                 self._finish_transform()
-            if self._session is not None and self._session_cross:
-                # cross-instance merge/split in flight: mid-session the
-                # layers span two device assemblies, which one XLA
-                # computation cannot mix — decode pauses until the
-                # schedule drains (token streams stay exact; only their
-                # timing shifts)
-                self.steps += 1
-                return {"active": sum(s is not None for s in self.slots),
-                        "waiting": len(self.waiting), "emitted": 0}
+            else:
+                s.dispatch_step()
+        in_session = self._session is not None
+        cross_session = in_session and self._session_cross
         # policy-driven prefill work (admissions + chunk advancement);
-        # paused while a transform session is open — partially-prefilled
-        # slots ride the migration and resume on the new degree
-        if self._session is None:
-            emitted += self._prefill_step()
+        # chunked prefills keep advancing during sessions via the
+        # per-layer path, whole-prompt prefills wait for the drain
+        emitted += self._prefill_step()
 
         active = [r for r in self.slots
                   if r is not None and r.state == State.DECODE]
@@ -921,6 +1108,7 @@ class Engine:
                                       sub_rng)[0])
                 r.generated.append(tok)
                 emitted += 1
+                decode_emitted += 1
                 if (len(r.generated) >= r.max_new_tokens
                         or (r.eos_id is not None and tok == r.eos_id)
                         or r.context_len >= self.max_seq_alloc):
@@ -928,20 +1116,30 @@ class Engine:
                     r.t_done = time.monotonic()
                     self.slots[r.slot] = None
             self._pin_prefill_cursors()
+        # the final schedule step's transfers overlapped this decode;
+        # complete them now so the session drains within this iteration
+        if self._session is not None and self._session.all_dispatched:
+            self._session.complete_step()
+            if self._session.done:
+                self._finish_transform()
         self.steps += 1
         return {"active": len(active), "waiting": len(self.waiting),
-                "emitted": emitted}
+                "emitted": emitted, "decode_emitted": decode_emitted,
+                "transforming": int(in_session),
+                "cross_session": int(cross_session)}
 
     def _decode_dispatch(self, tokens: jax.Array,
                          positions: jax.Array) -> jax.Array:
         """One decode step on whichever representation is live: the
         per-layer path mid-transformation (layers sit on mixed mesh
-        factorizations), the stacked jit otherwise."""
+        factorizations and, for cross-device sessions, on two device
+        assemblies — each layer coherently on one), the stacked jit
+        otherwise."""
         if self._session is not None:
             s = self._session
             logits, s.layers = M.decode_step_layers(
                 s.layers, s.static, self.cfg, self.plan, tokens,
-                positions, self.layout)
+                positions, self.layout, static_mesh=s.static_mesh)
             return logits
         logits, self.caches = self._decode(self.params, self.caches,
                                            tokens, positions)

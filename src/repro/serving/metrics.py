@@ -17,11 +17,24 @@ from typing import Dict, List, Sequence
 #: the schema every cluster (simulated or live) reports, in order.
 #: queue_delay (submit -> first prefill work) is the head-of-line wait
 #: the chunked-prefill policy bounds; TTFT = queue_delay + prefill time.
+#: transform_s_* are PER-ACTION transformation latencies (live: wall
+#: time from transform() to session drain; sim: the modeled duration);
+#: transform_drift_frac is the median relative |measured - modeled|
+#: drift of the executed schedule steps (StepReport.seconds, dispatch
+#: -> resident; 0 in the sim, where measured IS the model).  Live,
+#: overlapped steps' spans include the serving work the transfer hid
+#: under, so treat the column as an UPPER BOUND on model error — the
+#: per-action log also carries exposed_s (dispatch + blocking wait,
+#: the cost serving actually paid); merge_wall_s is the cumulative wall
+#: time spent inside CROSS-DEVICE (merge/split) sessions — the window
+#: that used to stall decode and now overlaps serving.
 METRIC_KEYS = ("throughput_tps", "finished", "total",
                "ttft_p50", "ttft_p99",
                "queue_delay_p50", "queue_delay_p99",
                "tpot_p50", "tpot_p99",
-               "n_transforms")
+               "n_transforms",
+               "transform_s_p50", "transform_s_p99",
+               "transform_drift_frac", "merge_wall_s")
 
 
 def percentile(xs: Sequence[float], p: float) -> float:
@@ -34,18 +47,35 @@ def percentile(xs: Sequence[float], p: float) -> float:
 
 
 def summarize(requests: Sequence, duration_s: float, total_tokens: float,
-              n_transforms: int) -> Dict[str, float]:
+              n_transforms: int,
+              transforms: Sequence[Dict] = ()) -> Dict[str, float]:
     """Aggregate per-request latency metrics into the shared schema.
 
     ``requests`` may be trace records (``Request``) or live requests
     (``ServeRequest``) — anything exposing ``finished`` / ``ttft`` /
     ``queue_delay`` / ``tpot``.
+
+    ``transforms`` is the per-action transformation record list both
+    planes keep: dicts with ``wall_s`` (action latency), ``measured_s``
+    / ``modeled_s`` (summed StepReport seconds vs the accounting-plane
+    prediction) and ``cross`` (device assembly changed — merge/split).
     """
     fin = [r for r in requests if r.finished]
     ttfts = [r.ttft for r in requests if r.ttft is not None]
     qdels = [r.queue_delay for r in requests
              if getattr(r, "queue_delay", None) is not None]
     tpots = [r.tpot for r in fin if r.tpot is not None]
+    walls = [t["wall_s"] for t in transforms]
+    drifts: List[float] = []
+    for t in transforms:
+        # per-step drift when the plane recorded it (live sessions —
+        # action-level sums would let signed step errors cancel); the
+        # sim records actions only, where measured IS the model
+        if t.get("step_drifts") is not None:
+            drifts.extend(t["step_drifts"])
+        elif t.get("modeled_s", 0.0) > 0.0:
+            drifts.append(abs(t["measured_s"] - t["modeled_s"])
+                          / t["modeled_s"])
     return {
         "throughput_tps": total_tokens / max(duration_s, 1e-9),
         "finished": len(fin),
@@ -57,4 +87,9 @@ def summarize(requests: Sequence, duration_s: float, total_tokens: float,
         "tpot_p50": percentile(tpots, 50),
         "tpot_p99": percentile(tpots, 99),
         "n_transforms": float(n_transforms),
+        "transform_s_p50": percentile(walls, 50),
+        "transform_s_p99": percentile(walls, 99),
+        "transform_drift_frac": percentile(drifts, 50),
+        "merge_wall_s": float(sum(t["wall_s"] for t in transforms
+                                  if t.get("cross"))),
     }

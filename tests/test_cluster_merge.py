@@ -101,6 +101,11 @@ def test_live_merge_bit_exact_and_split_revives_donor():
 
         cluster.run(max_steps=5000)
 
+        # zero-stall overlap (ISSUE-5): the merge/split sessions never
+        # produced a step with decode slots active but no decode tokens
+        assert cluster.stall_steps == 0, cluster.stall_steps
+        assert cluster.tokens_during_session > 0
+
         downs = [a for a in cluster.actions if isinstance(a, ScaleDown)]
         assert downs, "merged engine never scaled back down"
         # split returned the loan: donor revived on its devices, pool

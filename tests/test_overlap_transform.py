@@ -1,0 +1,416 @@
+"""Zero-stall cross-device transformations (ISSUE-5 tentpole).
+
+Cross-device merge/split sessions used to pause decode until the §4.3
+schedule drained — the exact stall the transformation-aware scheduler
+exists to avoid.  The overlap contract under test:
+
+* cross-device sessions use LAYER-COHERENT schedule steps (a layer's
+  MLP and KV move together), so mid-session every layer lives on
+  exactly one device assembly (``transform_engine.
+  schedule_is_layer_coherent``);
+* the per-layer decode path crosses the migrated/unmigrated boundary
+  with one explicit ``device_put`` of the activations, so every engine
+  step with decode-active slots emits tokens THROUGH the session and
+  streams stay bit-identical to a static merged-width reference;
+* an activation can never silently read a layer on the wrong assembly:
+  incoherent cross-device schedules are refused at session open, and a
+  layer whose bytes are moved behind the session's back fails loudly.
+
+Fast tests cover the schedule/metrics plumbing; the slow tests drive a
+live 2-engine merge on 8 fake devices (subprocess)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(body: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Fast: schedule coherence + metrics plumbing (no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_coherent_scale_up_schedule_moves_whole_layers():
+    from repro.core.transform_engine import (scale_down_schedule,
+                                             scale_up_schedule,
+                                             schedule_is_layer_coherent)
+
+    classic = scale_up_schedule(4, 1, 1, 8)
+    assert not schedule_is_layer_coherent(classic)   # MLP-first phases
+    assert classic.n_steps == 8
+
+    coh = scale_up_schedule(4, 1, 1, 8, coherent=True)
+    assert schedule_is_layer_coherent(coh)
+    assert coh.n_steps == 4                          # one layer per step
+    # reversed traversal survives; MLP still precedes KV within a layer
+    assert [op.layer for op in coh.steps[0]] == [3, 3]
+    assert [op.component for op in coh.steps[0]] == ["mlp", "kv"]
+    assert [op.layer for op in coh.steps[-1]] == [0, 0]
+
+    # chunked coherent steps stay coherent
+    coh2 = scale_up_schedule(4, 2, 1, 8, coherent=True)
+    assert schedule_is_layer_coherent(coh2) and coh2.n_steps == 2
+
+    # the staggered scale-down schedule is coherent by construction
+    assert schedule_is_layer_coherent(scale_down_schedule(4, 1, 8, 1))
+
+
+def test_summarize_transform_latency_columns():
+    """The observability satellite: per-action transform latency,
+    measured-vs-modeled drift and merge wall time are METRIC_KEYS
+    columns computed from the shared transform-record schema."""
+    from repro.serving.metrics import METRIC_KEYS, summarize
+
+    for k in ("transform_s_p50", "transform_s_p99",
+              "transform_drift_frac", "merge_wall_s"):
+        assert k in METRIC_KEYS, k
+    logs = [
+        {"wall_s": 2.0, "measured_s": 1.5, "modeled_s": 1.0,
+         "cross": True},
+        {"wall_s": 4.0, "measured_s": 1.25, "modeled_s": 1.0,
+         "cross": False},
+        {"wall_s": 6.0, "measured_s": 1.0, "modeled_s": 1.0,
+         "cross": False},
+    ]
+    m = summarize([], 1.0, 0, 3, transforms=logs)
+    assert list(m) == list(METRIC_KEYS)
+    assert m["transform_s_p50"] == 4.0 and m["transform_s_p99"] == 6.0
+    # per-action drift |measured - modeled| / modeled -> median of
+    # {0.5, 0.25, 0.0}
+    assert abs(m["transform_drift_frac"] - 0.25) < 1e-9
+    assert m["merge_wall_s"] == 2.0          # only the cross action
+    # the simulator's records have measured == modeled: drift is 0
+    sim_logs = [{"wall_s": 3.0, "measured_s": 3.0, "modeled_s": 3.0,
+                 "cross": True}]
+    assert summarize([], 1.0, 0, 1,
+                     transforms=sim_logs)["transform_drift_frac"] == 0.0
+    # live records carry PER-STEP drifts: signed step errors that
+    # cancel at the action level (measured_s == modeled_s) must still
+    # surface — a miscalibrated model cannot hide behind cancellation
+    cancel = [{"wall_s": 2.0, "measured_s": 2.0, "modeled_s": 2.0,
+               "cross": True, "step_drifts": [0.4, 0.4, 0.4]}]
+    m2 = summarize([], 1.0, 0, 1, transforms=cancel)
+    assert abs(m2["transform_drift_frac"] - 0.4) < 1e-9
+
+
+def test_sim_cluster_records_transform_log():
+    """The sim plane keeps the same per-action record schema the live
+    plane aggregates, so the parity harness diffs one shape."""
+    from repro.configs import get_config
+    from repro.core.cluster_sim import Cluster
+    from repro.core.costmodel import CostModel, H20
+    from repro.core.scheduler import GygesScheduler
+    from repro.serving.request import Request
+
+    cfg = get_config("qwen2.5-32b")
+    c = Cluster(cfg, n_hosts=1, scheduler=GygesScheduler())
+    cm = CostModel(cfg, H20)
+    need = cm.max_seq(1) + 1
+    c.submit(Request(0, 0.0, need, 50), 0.0)
+    assert c.n_transforms == 1 and len(c.transform_log) == 1
+    rec = c.transform_log[0]
+    assert rec["cross"] and rec["wall_s"] == rec["modeled_s"] > 0
+    m = c.metrics(10.0)
+    assert m["transform_drift_frac"] == 0.0
+    assert m["merge_wall_s"] == rec["wall_s"]
+
+
+# ---------------------------------------------------------------------------
+# Slow: live overlap on 8 fake devices (subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_zero_stall_merge_every_step_emits_and_streams_bit_exact():
+    """ISSUE-5 acceptance: during a live cross-instance merge on the
+    test_cluster_merge scenario, EVERY Engine.step with active decode
+    slots emits tokens (zero full-stall steps), and the finished
+    streams are bit-identical to an engine started at merged width."""
+    out = run_py("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs import get_config
+        from repro.core.padding import make_plan
+        from repro.core.scheduler import ScaleDown, ScaleUp
+        from repro.models import model as M
+        from repro.serving.cluster import ClusterEngine
+        from repro.serving.engine import Engine
+        from repro.serving.request import ServeRequest
+
+        cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                                  dtype="float32")
+        devs = jax.devices()
+        plan = make_plan(cfg, len(devs), mode="page")
+        host_params = M.init_params(jax.random.PRNGKey(11), cfg, plan)
+
+        rng = np.random.default_rng(0)
+        def spec():
+            s = [(i, list(rng.integers(0, cfg.vocab_size, size=5 + i)), 8)
+                 for i in range(3)]
+            s.append((99, list(rng.integers(0, cfg.vocab_size, size=80)),
+                      16))
+            return s
+        trace = spec()
+        mk = lambda t: [ServeRequest(rid=r, prompt=list(p),
+                                     max_new_tokens=n) for r, p, n in t]
+
+        cluster = ClusterEngine(cfg, devs, n_instances=2, max_batch=4,
+                                max_seq=64, params=host_params,
+                                dwell_steps=4)
+        live = mk(trace)
+        for r in live[:3]:
+            cluster.submit(r)
+        for _ in range(2):
+            cluster.step()
+        # both engines hold DECODING work; the merge overlaps with it
+        assert all(any(s is not None for s in e.slots)
+                   for e in cluster.engines)
+        cluster.submit(live[3])           # the merge trigger
+        merges = [a for a in cluster.actions
+                  if isinstance(a, ScaleUp) and a.donor_iids]
+        assert merges, "no live merge"
+        target = cluster._engine(merges[0].iid)
+        assert target.transforming and target._session_cross
+
+        # the regression under test: every engine step with decode-
+        # active slots emits DURING the cross-device session
+        session_steps = 0
+        while target.transforming:
+            s = target.step()
+            session_steps += 1
+            assert s["active"] > 0, "scenario lost its decodes"
+            assert s["decode_emitted"] > 0, (
+                "full decode stall during merge session", s)
+        assert session_steps > 1          # the schedule really staged
+
+        cluster.run(max_steps=5000)
+        assert cluster.stall_steps == 0, cluster.stall_steps
+        assert all(r.finished for r in live)
+        downs = [a for a in cluster.actions if isinstance(a, ScaleDown)]
+        assert downs, "merged engine never split"
+
+        # per-action observability: the merge + split are cross records
+        # with measured step times, surfaced in the metrics schema
+        logs = [t for e in cluster.engines for t in e.transform_log]
+        assert sum(t["cross"] for t in logs) >= 2
+        assert all(t["wall_s"] > 0 and t["measured_s"] > 0
+                   for t in logs)
+        m = cluster.metrics()
+        assert m["merge_wall_s"] > 0
+        assert m["transform_s_p50"] > 0
+
+        # bit-exact streams vs an engine STARTED at the merged width
+        ref = Engine(cfg, params=host_params, max_batch=8, max_seq=128,
+                     devices=devs, plan=plan)
+        for want, got in zip(mk(trace), live):
+            ref.submit(want)
+            ref.run_until_done(2000)
+            assert want.generated == got.generated, (
+                want.rid, want.generated, got.generated)
+
+        # guard sensitivity: the stall counter must catch a LEGACY
+        # early-return regression (cross session open, decodable slot,
+        # zero tokens, report keys missing) — it is computed from
+        # control-plane-visible state, not the engine's self-report
+        from repro.serving.request import State
+        e0 = cluster.engines[0]
+        class _Stub:
+            rid, state = -1, State.DECODE
+        e0.slots[0] = _Stub()
+        e0._session, e0._session_cross = object(), True
+        e0.step = lambda: {"active": 1, "waiting": 0, "emitted": 0}
+        before = cluster.stall_steps
+        cluster.step()
+        assert cluster.stall_steps == before + 1, (
+            "stall guard lost sensitivity to a legacy early-return")
+        print("ZERO_STALL_OK")
+    """)
+    assert "ZERO_STALL_OK" in out
+
+
+@pytest.mark.slow
+def test_recurrent_carry_chunks_through_cross_session():
+    """Regression (review finding): a RECURRENT model's chunked-prefill
+    carry comes back from a mid-cross-session chunk committed to each
+    layer's own assembly; restacking it must land every leaf on one
+    assembly first or jnp.stack dies across disjoint device sets.
+    xLSTM (pure recurrent, chunkable, no KV pools) with 4 layers in
+    2 pattern groups makes the stack span both assemblies mid-session."""
+    out = run_py("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs import get_config
+        from repro.core.padding import make_plan
+        from repro.core.scheduler import PrefillPolicy
+        from repro.models import model as M
+        from repro.serving.engine import Engine
+        from repro.serving.request import ServeRequest
+
+        cfg = dataclasses.replace(get_config("xlstm-1.3b").reduced(),
+                                  dtype="float32", num_layers=4)
+        devs = jax.devices()
+        plan = make_plan(cfg, len(devs), mode="page")
+        params = M.init_params(jax.random.PRNGKey(5), cfg, plan)
+        pol = PrefillPolicy(token_budget=16, mode="prefill",
+                            long_threshold=16, order="fcfs")
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, cfg.vocab_size, size=40).tolist()
+
+        def mk(devices, max_seq):
+            return Engine(cfg, params=params, max_batch=8,
+                          max_seq=max_seq, page_tokens=16,
+                          devices=devices, plan=plan,
+                          prefill_policy=pol)
+
+        eng = mk(list(devs[:4]), 32)       # alloc grows to 64 on adopt
+        r = ServeRequest(rid=1, prompt=list(prompt), max_new_tokens=6)
+        eng.submit(r)
+        eng.step()                          # chunk 1 of [16, 16, 8]
+        assert next(iter(eng._prefilling.values()))["done"] == 16
+        eng.adopt_devices(list(devs[4:]))
+        n = eng.transform(8)                # CROSS session, 4 layers
+        assert n >= 3 and eng._session_cross
+        advanced = False
+        while eng.transforming:
+            eng.step()
+            if eng.transforming:
+                dones = [p["done"] for p in eng._prefilling.values()]
+                if not dones or dones[0] > 16:
+                    advanced = True         # carry crossed assemblies
+        assert advanced, "chunks did not run mid-cross-session"
+        eng.run_until_done(500)
+
+        # stream equal to a reference engine on the full assembly
+        # running the same chunk plan (no transform)
+        ref = mk(list(devs), 64)           # same 64-token allocation
+        want = ServeRequest(rid=1, prompt=list(prompt), max_new_tokens=6)
+        ref.submit(want)
+        ref.run_until_done(500)
+        assert want.generated == r.generated, (
+            want.generated, r.generated)
+        print("RECURRENT_CARRY_OK")
+    """)
+    assert "RECURRENT_CARRY_OK" in out
+
+
+@pytest.mark.slow
+def test_mid_session_layer_assembly_coherence_and_negative():
+    """Every schedule step of a cross-device session leaves each layer
+    on exactly ONE device assembly (params and cache together), and the
+    boundary contract fails LOUDLY rather than silently reading a layer
+    on the wrong assembly: an incoherent cross-device schedule is
+    refused at session open, and a layer whose cache bytes are moved to
+    the other assembly behind the session's back raises at decode."""
+    out = run_py("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.core import transform_engine as TE
+        from repro.core.padding import make_plan
+        from repro.models import model as M
+        from repro.serving.engine import Engine
+        from repro.serving.request import ServeRequest
+
+        cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                                  dtype="float32")
+        devs = jax.devices()
+        plan = make_plan(cfg, len(devs), mode="page")
+        params = M.init_params(jax.random.PRNGKey(1), cfg, plan)
+
+        def assemblies(tree):
+            return {frozenset(l.devices())
+                    for l in jax.tree.leaves(tree)}
+
+        eng = Engine(cfg, params=params, max_batch=4, max_seq=32,
+                     page_tokens=16, devices=devs[:4], plan=plan)
+        r = ServeRequest(rid=0, prompt=list(range(5)), max_new_tokens=40)
+        eng.submit(r)
+        for _ in range(3):
+            eng.step()
+        eng.adopt_devices(list(devs[4:]))
+        n = eng.transform(8)
+        assert n > 0 and eng._session_cross
+        s = eng._session
+        old = frozenset(devs[:4]); new = frozenset(devs)
+        seen_mixed = False
+        while not s.done:
+            s.step()
+            per_layer = [assemblies({"p": l["params"], "c": l["cache"]})
+                         for l in s.layers]
+            # each layer coherently on ONE assembly...
+            for a in per_layer:
+                assert len(a) == 1 and next(iter(a)) in (old, new), a
+            # ...and mid-session the session really is mixed
+            if len({next(iter(a)) for a in per_layer}) == 2:
+                seen_mixed = True
+            if not s.done:
+                eng._decode_dispatch(jnp.zeros((4,), jnp.int32),
+                                     jnp.zeros((4,), jnp.int32))
+        assert seen_mixed, "schedule never staged across assemblies"
+        eng._finish_transform()
+        assert eng.tp == 8
+
+        # negative 1: incoherent schedules cannot open cross sessions
+        eng2 = Engine(cfg, params=params, max_batch=4, max_seq=32,
+                      page_tokens=16, devices=devs[:4], plan=plan)
+        eng2.adopt_devices(list(devs[4:]))
+        caches = eng2.caches
+        try:
+            TE.TransformSession(
+                *M.unstack_decode_state(eng2.params, cfg, caches),
+                TE.scale_up_schedule(cfg.num_layers, 1, 1, 8),  # phased
+                cfg, plan, mesh_from=eng2.mesh,
+                mesh_to=eng2._make_mesh(8, list(devs)),
+                param_spec_fn=lambda t: t, cache_spec_fn=lambda c: c,
+                page_tokens=16)
+        except AssertionError as e:
+            assert "layer-coherent" in str(e)
+        else:
+            raise SystemExit("incoherent cross session was accepted")
+
+        # negative 2: a layer moved to the wrong assembly behind the
+        # session's back fails loudly at decode (no silent wrong read)
+        eng3 = Engine(cfg, params=params, max_batch=4, max_seq=32,
+                      page_tokens=16, devices=devs[:4], plan=plan)
+        r3 = ServeRequest(rid=0, prompt=list(range(5)),
+                          max_new_tokens=40)
+        eng3.submit(r3)
+        for _ in range(3):
+            eng3.step()
+        eng3.adopt_devices(list(devs[4:]))
+        eng3.transform(8)
+        s3 = eng3._session
+        s3.step()                 # layer N-1 now on the wide assembly
+        tampered = s3.layers[-1]
+        assert frozenset(jax.tree.leaves(
+            tampered["params"])[0].devices()) == new
+        # move its cache back to the narrow assembly; the mesh tag
+        # still claims the wide one -> decode must raise, not misread
+        tampered["cache"] = jax.device_put(
+            tampered["cache"], jax.tree.map(
+                lambda _: NamedSharding(eng3._make_mesh(1, devs[:4]),
+                                        P()), tampered["cache"]))
+        try:
+            eng3._decode_dispatch(jnp.zeros((4,), jnp.int32),
+                                  jnp.zeros((4,), jnp.int32))
+        except Exception:
+            pass
+        else:
+            raise SystemExit(
+                "decode silently read a layer on the wrong assembly")
+        print("COHERENCE_OK")
+    """)
+    assert "COHERENCE_OK" in out
