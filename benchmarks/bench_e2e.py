@@ -15,15 +15,25 @@ chunked policies (``core.scheduler.PrefillPolicy`` — the same object
 the live engine executes), reporting the background requests' TTFT
 p50/p99 and queue delay.  Asserts the headline claim: chunked
 decode-priority improves background TTFT p99 over whole-prompt
-prefill on the same trace."""
+prefill on the same trace.
+
+``--replay-smoke`` is the event-driven lane: the Fig.-2-shaped
+production trace replayed through the simulator under SLOs (goodput
+for rr/llf/gyges, pressure-aware vs pressure-blind gyges), plus a
+1000+-request quantized timed trace replayed through BOTH planes on
+one virtual clock with decision parity asserted plane-for-plane."""
 from __future__ import annotations
 
 import os
-from typing import List
+from typing import Dict, List, Tuple
 
 from repro.configs import get_config
-from repro.core.cluster_sim import Cluster, burst_trace, longtail_trace
-from repro.core.scheduler import GygesScheduler, PrefillPolicy
+from repro.core.cluster_sim import (Cluster, burst_trace, longtail_trace,
+                                    production_trace)
+from repro.core.costmodel import H20
+from repro.core.events import SLO, ArrivalPressure
+from repro.core.scheduler import (SCHEDULERS, GygesScheduler,
+                                  PrefillPolicy, SchedulerConfig)
 
 
 def run(duration: float = 420.0) -> List[str]:
@@ -73,16 +83,21 @@ def run_burst(duration: float = 240.0) -> List[str]:
     bg_len = 800
     # "whole-prompt" is the explicit unbudgeted prefill-priority policy:
     # one monolithic prefill per request, FCFS, decodes stalled behind
-    # prompt processing — what the live engine did before chunking
+    # prompt processing — what the live engine did before chunking.
+    # The chunked budget sits BELOW the 800-token background so those
+    # prompts are multi-chunk: single-chunk prefills wait out transform
+    # sessions in both planes (Engine._admittable_now and the sim's
+    # tick), so chunkability is also session immunity — part of the
+    # measured win.
     policies = {
         "whole-prompt": PrefillPolicy(token_budget=None, mode="prefill",
                                       order="fcfs"),
         "chunked-prefill-prio": PrefillPolicy(
-            token_budget=2048, mode="prefill", order="sjf"),
+            token_budget=512, mode="prefill", order="sjf"),
         "chunked-mixed": PrefillPolicy(
-            token_budget=2048, mode="mixed", order="sjf"),
+            token_budget=512, mode="mixed", order="sjf"),
         "chunked-decode-prio": PrefillPolicy(
-            token_budget=2048, mode="decode", max_defer_steps=2,
+            token_budget=512, mode="decode", max_defer_steps=2,
             order="sjf"),
     }
     rows = ["burst.model,policy,bg_ttft_p50_s,bg_ttft_p99_s,"
@@ -234,6 +249,220 @@ def run_merge_smoke() -> List[str]:
             f"{m['merge_wall_s']:.2f},{wall:.1f}"]
 
 
+def replay_goodput_sim(sched: str = "gyges", pressure: bool = False,
+                       duration: float = 600.0,
+                       seed: int = 0) -> Dict[str, float]:
+    """One event-driven replay of the Fig.-2-shaped production trace
+    through the simulator under TTFT/TPOT SLOs; returns the shared
+    metrics schema (goodput_slo included).
+
+    The shipped configuration is the tuned experiment behind the
+    ``--replay-smoke`` assertion that pressure-AWARE gyges beats
+    pressure-BLIND gyges on goodput: long-context bursts recur faster
+    (45 s period) than the blind policy's split-dwell-remerge cycle,
+    so blind pays a §4.3 session window — during which single-chunk
+    prefills freeze on the transforming instance — at nearly every
+    burst front, while the EWMA arrival-pressure signal (tau 30 s)
+    holds the wide instance across the gap and releases it only when
+    the long rate actually decays."""
+    cfg = get_config("qwen2.5-32b")
+    # modeled cost of one transformation the pressure signal weighs:
+    # the §4.3 session occupies ~2*num_layers decode iterations, which
+    # dwarfs the overlapped transfer time Table 1 reports
+    session_s = (2 * cfg.num_layers + 2) / (H20.per_req_tps * 1.75)
+    s = SCHEDULERS[sched](SchedulerConfig(transform_cost_s=session_s))
+    if pressure:
+        s.attach_pressure(ArrivalPressure(tau_s=30.0))
+    c = Cluster(cfg, n_hosts=1, gpus_per_host=8, scheduler=s,
+                prefill_policy=PrefillPolicy(token_budget=2048,
+                                             mode="mixed", order="sjf"))
+    c.scale_down_dwell = 10.0
+    trace = production_trace(duration=duration, base_qps=1.0,
+                             burst_period=45.0, burst_dur=8.0,
+                             burst_qps=6.0, seed=seed)
+    m = c.run_timed(trace, dt=0.25, settle_steps=120)
+    m["n_requests"] = float(len(trace))
+    return m
+
+
+def timed_parity_trace(n_bursts: int) -> List:
+    """Quantized bursty timed trace for the dual-plane replay: every
+    20 virtual seconds a burst of 8-16 short prompts (lengths 4/8/12,
+    4 output tokens) arrives at once into a drained cluster; every 4th
+    burst is instead a lone long request (40 tokens in, 8 out) whose
+    footprint exceeds the TP1 ceiling and forces a width-4 merge.
+    Lengths are quantized to a handful of shapes so the live engines'
+    jit caches converge after the first burst of each kind."""
+    from repro.serving.request import Request
+
+    reqs, rid = [], 0
+    for k in range(n_bursts):
+        t = 20.0 * k
+        if k % 4 == 3:
+            reqs.append(Request(rid, t, 40, 8,
+                                slo=SLO(ttft_s=15.0, tpot_s=2.0)))
+            rid += 1
+        else:
+            for j in range(8 + (k % 9)):
+                reqs.append(Request(rid, t, (4, 8, 12)[j % 3], 4,
+                                    slo=SLO(ttft_s=15.0, tpot_s=2.0)))
+                rid += 1
+    return reqs
+
+
+def _act_key(a) -> Tuple:
+    return (type(a).__name__, a.iid, a.tp_to,
+            tuple(sorted(getattr(a, "donor_iids", ()) or ())))
+
+
+def timed_dual_replay(n_bursts: int) -> Dict[str, object]:
+    """Replay ``timed_parity_trace(n_bursts)`` through the live plane
+    (8 single-device engines on a shared virtual clock) and the
+    simulator under identical policy objects; returns both metric
+    dicts plus the decision-parity comparison.  Needs >= 8 devices —
+    sets the fake-device flag when run before the first jax import."""
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import dataclasses
+
+    import jax
+
+    from repro.core.events import VirtualClock, replay
+    from repro.serving.cluster import ClusterEngine, LiveReplayPlane
+
+    Q = 16
+    mk_pol = lambda: PrefillPolicy(token_budget=16, mode="mixed",
+                                   long_threshold=Q, order="sjf")
+    mk_sched = lambda: SCHEDULERS["gyges"](SchedulerConfig(
+        long_threshold=Q, target_tp=4))
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    devs = jax.devices()
+    assert len(devs) >= 8, f"timed dual replay needs 8 devices, {len(devs)}"
+
+    clock = VirtualClock()
+    live = ClusterEngine(cfg, devs[:8], n_instances=8, max_batch=2,
+                         max_seq=Q, page_tokens=Q, dwell_steps=4,
+                         scheduler=mk_sched(), prefill_policy=mk_pol(),
+                         clock=clock)
+    replay(LiveReplayPlane(live), timed_parity_trace(n_bursts), dt=0.5,
+           settle_steps=60, clock=clock)
+    live_m = live.metrics()
+
+    sim = Cluster(cfg, n_hosts=1, gpus_per_host=8, scheduler=mk_sched(),
+                  target_tp=4, prefill_policy=mk_pol(), seq_quantum=Q,
+                  max_batch=2)
+    sim.scale_down_dwell = 2.0
+    sim_m = sim.run_timed(timed_parity_trace(n_bursts), dt=0.5,
+                          settle_steps=60)
+    return {
+        "n_requests": len(timed_parity_trace(n_bursts)),
+        "live": live_m, "sim": sim_m,
+        "placements_equal": live.placements == sim.placements,
+        "actions_equal": ([_act_key(a) for a in live.actions]
+                          == [_act_key(a) for a in sim.actions]),
+        "live_merges": sum(1 for a in live.actions
+                           if getattr(a, "donor_iids", None)),
+    }
+
+
+def run_replay_smoke() -> List[str]:
+    """The ``--replay-smoke`` CI lane (event-driven tentpole proof):
+
+    1. goodput-under-SLO for rr/llf/gyges on the production trace, plus
+       pressure-aware gyges — asserts every goodput > 0 and that the
+       arrival-pressure signal BEATS pressure-blind gyges;
+    2. >= 1000 timed requests replayed through sim AND live on one
+       virtual clock — asserts routing + parallelism-action parity and
+       goodput > 0 in both planes."""
+    rows = ["replay.plane,scenario,n_requests,goodput_slo,ttft_p99_s,"
+            "tpot_p99_ms,throughput_tps,n_transforms"]
+    good: Dict[str, float] = {}
+    for name, sched, pressure in (("rr", "rr", False),
+                                  ("llf", "llf", False),
+                                  ("gyges-blind", "gyges", False),
+                                  ("gyges", "gyges", True)):
+        m = replay_goodput_sim(sched, pressure=pressure)
+        good[name] = m["goodput_slo"]
+        assert m["goodput_slo"] > 0.0, (name, m["goodput_slo"])
+        rows.append(f"replay.sim,{name},{m['n_requests']:.0f},"
+                    f"{m['goodput_slo']:.4f},{m['ttft_p99']:.2f},"
+                    f"{m['tpot_p99'] * 1e3:.1f},"
+                    f"{m['throughput_tps']:.1f},"
+                    f"{m['n_transforms']:.0f}")
+    assert good["gyges"] > good["gyges-blind"], (
+        "arrival-pressure-aware gyges must beat pressure-blind gyges "
+        "on goodput in the shipped config", good)
+
+    r = timed_dual_replay(n_bursts=109)
+    assert r["n_requests"] >= 1000, r["n_requests"]
+    assert r["placements_equal"], "sim/live routing diverged"
+    assert r["actions_equal"], "sim/live parallelism actions diverged"
+    assert r["live_merges"] >= 1, "timed trace forced no live merge"
+    for plane in ("live", "sim"):
+        m = r[plane]
+        assert m["goodput_slo"] > 0.0, (plane, m["goodput_slo"])
+        rows.append(f"replay.{plane},gyges-timed,{r['n_requests']},"
+                    f"{m['goodput_slo']:.4f},{m['ttft_p99']:.2f},"
+                    f"{m['tpot_p99'] * 1e3:.1f},"
+                    f"{m['throughput_tps']:.1f},"
+                    f"{m['n_transforms']:.0f}")
+    rows.append(f"replay.parity,derived,decision parity over "
+                f"{r['n_requests']} timed requests "
+                f"({r['live_merges']} live merges) — placements and "
+                f"action sequences identical")
+    return rows
+
+
+#: trajectory schema: bump when scenario names / column meaning change
+TRAJECTORY_SCHEMA_VERSION = 1
+
+#: gated columns and the direction that counts as BETTER; every other
+#: emitted column (transform walls, merge_wall_s, ...) is informational
+TRAJECTORY_GATES = {
+    "throughput_tps": "higher",
+    "ttft_p50": "lower", "ttft_p99": "lower",
+    "tpot_p50": "lower", "tpot_p99": "lower",
+    "goodput_slo": "higher",
+}
+
+_TRAJECTORY_COLUMNS = ("throughput_tps", "ttft_p50", "ttft_p99",
+                       "tpot_p50", "tpot_p99", "goodput_slo",
+                       "n_transforms", "transform_s_p50",
+                       "transform_s_p99", "merge_wall_s")
+
+
+def trajectory_payload() -> Dict[str, object]:
+    """The schema-versioned perf-trajectory document behind
+    ``benchmarks/run.py --trajectory``: deterministic replay scenarios
+    (fixed seeds, virtual clocks — live timings land on the virtual
+    axis, so the numbers are machine-independent) with per-column
+    regression gates consumed by ``tools/check_bench_regression.py``."""
+    scenarios: Dict[str, Dict[str, float]] = {}
+    for name, sched, pressure in (("replay.sim.rr", "rr", False),
+                                  ("replay.sim.llf", "llf", False),
+                                  ("replay.sim.gyges-blind", "gyges",
+                                   False),
+                                  ("replay.sim.gyges", "gyges", True)):
+        m = replay_goodput_sim(sched, pressure=pressure)
+        scenarios[name] = {k: m[k] for k in _TRAJECTORY_COLUMNS}
+    r = timed_dual_replay(n_bursts=24)
+    for plane in ("live", "sim"):
+        scenarios[f"replay.{plane}.gyges-timed"] = {
+            k: r[plane][k] for k in _TRAJECTORY_COLUMNS}
+    return {
+        "schema_version": TRAJECTORY_SCHEMA_VERSION,
+        "gates": dict(TRAJECTORY_GATES),
+        "config": {
+            "production_trace": dict(duration=600.0, base_qps=1.0,
+                                     burst_period=45.0, burst_dur=8.0,
+                                     burst_qps=6.0, seed=0),
+            "timed_parity_trace": dict(n_bursts=24),
+        },
+        "scenarios": scenarios,
+    }
+
+
 def main():
     import argparse
 
@@ -248,11 +477,18 @@ def main():
                     help="long-prompt burst over decoding background: "
                          "whole-prompt vs chunked prefill policies "
                          "(background TTFT p50/p99)")
+    ap.add_argument("--replay-smoke", action="store_true",
+                    help="event-driven replay: production-trace goodput "
+                         "sweep (rr/llf/gyges, pressure-aware vs blind) "
+                         "+ 1000+ timed requests through sim AND live "
+                         "with decision parity asserted")
     args = ap.parse_args()
     if args.merge_smoke:
         rows = run_merge_smoke()
     elif args.burst:
         rows = run_burst()
+    elif args.replay_smoke:
+        rows = run_replay_smoke()
     elif args.smoke:
         rows = run_smoke()
     else:

@@ -27,6 +27,22 @@ MODULES = {
 }
 
 
+def emit_trajectory(out: str | None) -> str:
+    """Write the schema-versioned perf-trajectory JSON (the CI artifact
+    ``tools/check_bench_regression.py`` gates against the committed
+    ``benchmarks/BENCH_baseline.json``).  Returns the path written."""
+    import datetime
+    import json
+
+    payload = bench_e2e.trajectory_payload()
+    payload["generated"] = datetime.date.today().isoformat()
+    path = out or f"BENCH_{payload['generated']}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -35,7 +51,17 @@ def main() -> None:
                     help="CI smoke: import every benchmark module (done "
                          "at import time above) and run the fast KV-"
                          "transform accounting + data-plane benchmark")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="emit the schema-versioned BENCH_<date>.json "
+                         "perf trajectory (deterministic replay "
+                         "scenarios with regression gates)")
+    ap.add_argument("--out", default=None,
+                    help="output path for --trajectory (default "
+                         "BENCH_<date>.json in the working directory)")
     args = ap.parse_args()
+    if args.trajectory:
+        print(f"trajectory,{emit_trajectory(args.out)}")
+        return
     if args.smoke and not args.only:
         names = ["fig9"]
     else:

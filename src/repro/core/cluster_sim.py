@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, Hardware, H20
+from repro.core.events import SLO, replay
 from repro.core.scheduler import (Action, BaseScheduler, GygesScheduler,
                                   PrefillPolicy, ScaleDown, ScaleUp,
                                   SchedulerConfig)
@@ -30,7 +31,7 @@ from repro.serving.metrics import summarize
 from repro.serving.request import Request
 
 __all__ = ["Request", "SimInstance", "Cluster", "hybrid_trace",
-           "longtail_trace", "burst_trace"]
+           "longtail_trace", "burst_trace", "production_trace"]
 
 # PP/SP keep only ~1/N workers busy; calibrated so that the e2e gap matches
 # the paper's reported 43.5% extra degradation vs TP transformation.
@@ -78,6 +79,12 @@ class SimInstance:
         self.reserved = False
         self._kv_cache = None          # memoized kv_used (dirtied per tick)
         self.transform_until = -1.0
+        # end of the transform SESSION (live parity): the §4.3 schedule
+        # runs one step per decode iteration, so the session OCCUPIES
+        # ~2*n_layers decode iterations even when the overlapped
+        # transfer cost (transform_until) is near zero.  Whole-prompt
+        # prefill admission blocks until it drains (_admittable_now).
+        self.session_until = -1.0
         self.n_transforms = 0
         self.tokens_out = 0.0
         self.member_iids: List[int] = []   # merge members (split restores)
@@ -183,10 +190,19 @@ class SimInstance:
             queue = (pol.service_order(self.prefill_q,
                                        lambda r: r.in_len - r.prefilled)
                      if pol is not None else list(self.prefill_q))
+            in_session = now < max(self.transform_until,
+                                   self.session_until)
             consumed = 0.0
             for r in queue:
                 if budget <= 0:
                     break
+                if pol is not None and in_session \
+                        and not pol.chunkable(r.in_len):
+                    # live-engine parity (Engine._admittable_now /
+                    # _advanceable_now): a whole-prompt prefill cannot
+                    # interleave with transform-session schedule steps,
+                    # so single-chunk prompts wait for the drain
+                    continue
                 adv = min(r.in_len - r.prefilled, budget)
                 if adv > 0 and r.t_prefill_start is None:
                     r.t_prefill_start = now
@@ -280,6 +296,7 @@ class Cluster:
         self.transform_log: List[Dict[str, float]] = []
         self.scale_down_dwell = 20.0   # s at high TP before decomposing
         self.timeline: List[Tuple[float, float]] = []  # (t, cluster tps)
+        self._now = 0.0                # virtual clock of the last advance
 
     def _new_instance(self, tp: int, iid: Optional[int] = None
                       ) -> SimInstance:
@@ -287,6 +304,17 @@ class Cluster:
                            prefill_policy=self.prefill_policy,
                            seq_quantum=self.seq_quantum,
                            slots=self.max_batch)
+
+    def _session_window(self, tp: int) -> float:
+        """Wall time a §4.3 transform SESSION occupies: ~2 schedule
+        steps per layer (weights + KV assemblies), one step per decode
+        iteration, at the tp-dependent per-request decode cadence.  For
+        overlapped methods this far exceeds ``transform_time`` (the
+        transfers hide under serving) and is the window during which
+        whole-prompt prefills wait (Engine._admittable_now parity)."""
+        steps = 2 * self.cfg.num_layers + 2
+        rate = self.cm.hw.per_req_tps * (1.0 + 0.25 * (tp - 1))
+        return steps / rate
 
     # ------------------------------------------------------------------
     @property
@@ -330,6 +358,8 @@ class Cluster:
         dur = self.cm.transform_time(self.method) \
             * TRANSFORM_TIME_FACTOR[self.method]
         merged.transform_until = now + dur
+        merged.session_until = now + max(dur,
+                                         self._session_window(merged.tp))
         merged.n_transforms = 1
         self.n_transforms += 1
         # sim instances always merge across device assemblies: every
@@ -405,6 +435,7 @@ class Cluster:
             * TRANSFORM_TIME_FACTOR[self.method]
         for p in parts:
             p.transform_until = now + dur
+            p.session_until = now + max(dur, self._session_window(1))
         self.n_transforms += 1
         self.transform_log.append({"wall_s": dur, "measured_s": dur,
                                    "modeled_s": dur, "cross": True})
@@ -456,45 +487,86 @@ class Cluster:
         return True
 
     def submit(self, req: Request, now: float) -> None:
+        self.scheduler.observe_arrival(now, req.in_len + req.out_len)
         if not self._place(req, now):
             self.waiting.append(req)
 
+    # ---- replay-plane protocol (core.events.replay) -------------------
+    def advance(self, now: float, dt: float) -> None:
+        """One serving step covering ``dt`` virtual seconds: retry the
+        waiting queue (throttled), tick every instance, then run the
+        Alg 2 scale-down scan over the dwell-gated candidates.  This is
+        the exact body of the legacy ``run`` loop — ``run`` now drives
+        it through ``core.events.replay`` in fixed-horizon mode."""
+        self.scheduler.observe_time(now)
+        # retry waiting requests (throttled; FCFS: stop at first
+        # request that still cannot be placed)
+        if self.waiting and int(now / dt) % max(1, int(0.5 / dt)) == 0:
+            while self.waiting:
+                if not self._place(self.waiting[0], now):
+                    break
+                self.waiting.pop(0)
+        out = sum(i.tick(now, dt) for i in self.instances)
+        self.total_tokens += out
+        self.timeline.append((now, out / dt))
+        # Alg 2: periodic scale-down scan — the scheduler returns
+        # declarative actions; the sim control plane executes them
+        cap1 = max(i.max_seq_at(1) for i in self.instances)
+        any_long_wait = any(
+            r.in_len + r.out_len > cap1 for r in self.waiting)
+        if not self.static:
+            # dwell counts from SESSION end (live parity: a transforming
+            # engine is never Alg-2 eligible and dwell restamps until
+            # the schedule drains)
+            eligible = [
+                i for i in self.instances if i.tp > 1
+                and now > max(i.transform_until, i.session_until)
+                + self.scale_down_dwell]
+            by_iid = {i.iid: i for i in eligible}
+            for act in self.scheduler.schedule_parallelism(
+                    eligible, any_long_wait):
+                self.execute_scale_down(by_iid[act.iid], now)
+        self._now = now + dt
+
+    @property
+    def idle(self) -> bool:
+        """Nothing queued, in flight, or inside a transform window —
+        the replay driver's idle-jump predicate (the live plane's
+        ``ClusterEngine.idle`` contract)."""
+        if self.waiting:
+            return False
+        for i in self.instances:
+            if i.active or i.prefill_q or self._now < max(
+                    i.transform_until, i.session_until):
+                return False
+        return True
+
     def run(self, requests: Sequence[Request], dt: float = 0.05,
             drain: float = 60.0) -> Dict[str, float]:
+        """Legacy fixed-horizon entry point: replay the trace with the
+        shared event-driven loop pinned to lockstep mode (advance every
+        ``dt`` until ``max(arrive) + drain``, idle or not) — bit-equal
+        with the pre-event-queue tick loop."""
         reqs = sorted(requests, key=lambda r: r.arrive)
         self.all_requests = list(reqs)
         t_end = max(r.arrive for r in reqs) + drain
-        now, qi = 0.0, 0
         self._update_reserve()
-        while now < t_end:
-            while qi < len(reqs) and reqs[qi].arrive <= now:
-                self.submit(reqs[qi], now)
-                qi += 1
-            # retry waiting requests (throttled; FCFS: stop at first
-            # request that still cannot be placed)
-            if self.waiting and int(now / dt) % max(1, int(0.5 / dt)) == 0:
-                while self.waiting:
-                    if not self._place(self.waiting[0], now):
-                        break
-                    self.waiting.pop(0)
-            out = sum(i.tick(now, dt) for i in self.instances)
-            self.total_tokens += out
-            self.timeline.append((now, out / dt))
-            # Alg 2: periodic scale-down scan — the scheduler returns
-            # declarative actions; the sim control plane executes them
-            cap1 = max(i.max_seq_at(1) for i in self.instances)
-            any_long_wait = any(
-                r.in_len + r.out_len > cap1 for r in self.waiting)
-            if not self.static:
-                eligible = [
-                    i for i in self.instances if i.tp > 1
-                    and now > i.transform_until + self.scale_down_dwell]
-                by_iid = {i.iid: i for i in eligible}
-                for act in self.scheduler.schedule_parallelism(
-                        eligible, any_long_wait):
-                    self.execute_scale_down(by_iid[act.iid], now)
-            now += dt
+        replay(self, reqs, dt=dt, until=t_end, idle_jump=False)
         return self.metrics(t_end)
+
+    def run_timed(self, requests: Sequence[Request], dt: float = 0.25,
+                  settle_steps: int = 120, max_steps: int = 2_000_000
+                  ) -> Dict[str, float]:
+        """Event-driven entry point: serve the trace to completion under
+        the virtual clock, jumping over idle gaps (``settle_steps``
+        advances first, so dwell-gated scale-downs execute before each
+        jump).  Requests carrying an ``SLO`` feed ``goodput_slo``."""
+        reqs = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        self.all_requests = list(reqs)
+        self._update_reserve()
+        res = replay(self, reqs, dt=dt, settle_steps=settle_steps,
+                     max_steps=max_steps)
+        return self.metrics(res["t_end"])
 
     def metrics(self, t_end: float) -> Dict[str, float]:
         """Shared schema (serving.metrics): key-identical with the live
@@ -571,6 +643,47 @@ def longtail_trace(duration: float = 300.0, qps: float = 0.6,
             ilen = rnd.randint(30_000, 100_000)
         out = int(max(16, min(2000, rnd.lognormvariate(4.8, 0.9))))
         reqs.append(Request(rid, t, ilen, out))
+        rid += 1
+        t += rnd.expovariate(qps)
+    return reqs
+
+
+def production_trace(duration: float = 600.0, base_qps: float = 2.0,
+                     burst_period: float = 90.0, burst_dur: float = 12.0,
+                     burst_qps: float = 6.0, burst_long_frac: float = 0.3,
+                     long_len: Tuple[int, int] = (6_000, 40_000),
+                     ttft_scale: float = 3.0, ttft_floor: float = 4.0,
+                     tpot_slo: float = 0.12,
+                     seed: int = 0) -> List[Request]:
+    """Paper-Fig.-2-shaped synthetic production trace for the timed
+    replay: a Poisson MIXTURE of a steady short-dominated background
+    (``base_qps``, lognormal body lengths) and periodic bursts (every
+    ``burst_period`` s, for ``burst_dur`` s, at ``base_qps +
+    burst_qps``) whose requests are long with probability
+    ``burst_long_frac`` — the bursty-arrival + context-length-variance
+    regime (Fig. 2a/2b) the transformation-aware scheduler must ride.
+
+    Every request carries an ``SLO``: TTFT within ``ttft_floor`` plus
+    ``ttft_scale``x the ideal TP1 prefill time of its prompt (longer
+    prompts legitimately wait longer), TPOT within ``tpot_slo``.
+    Durations are virtual seconds; at the defaults a 600 s trace is
+    ~1.4k requests."""
+    import random
+    rnd = random.Random(seed)
+    reqs: List[Request] = []
+    t, rid = 0.0, 0
+    prefill_tps = float(H20.prefill_tps)
+    while t < duration:
+        in_burst = (t % burst_period) < burst_dur
+        qps = base_qps + (burst_qps if in_burst else 0.0)
+        if in_burst and rnd.random() < burst_long_frac:
+            ilen = rnd.randint(*long_len)
+        else:
+            ilen = int(min(3500, max(64, rnd.lognormvariate(6.2, 0.8))))
+        out = int(max(16, min(600, rnd.lognormvariate(4.2, 0.8))))
+        slo = SLO(ttft_s=ttft_floor + ttft_scale * ilen / prefill_tps,
+                  tpot_s=tpot_slo)
+        reqs.append(Request(rid, t, ilen, out, slo=slo))
         rid += 1
         t += rnd.expovariate(qps)
     return reqs

@@ -161,6 +161,14 @@ class PrefillPolicy:
             return sorted(items, key=remaining_of)
         return list(items)
 
+    def chunkable(self, prompt_len: int, page_tokens: int = 1) -> bool:
+        """True iff this policy splits ``prompt_len`` into more than one
+        chunk — the mid-transform-session admission predicate BOTH
+        planes apply (``Engine._admittable_now`` and the simulator's
+        tick): a whole-prompt prefill cannot interleave with schedule
+        steps, so single-chunk prompts wait for the session to drain."""
+        return len(self.chunk_sizes(prompt_len, page_tokens)) > 1
+
 
 class InstanceView(Protocol):
     """The narrow protocol the scheduler sees (units in comments).
@@ -248,6 +256,15 @@ class SchedulerConfig:
     reserve_fraction: float = 0.10   # capacity reserved on candidate
                                      # scale-up groups (check_reserve)
     target_tp: int = 4
+    # -- arrival-pressure weighting (only active when an estimator is
+    #    attached via BaseScheduler.attach_pressure) ------------------
+    transform_cost_s: float = 0.0    # modeled wall time of one merge /
+                                     # split (CostModel.transform_time);
+                                     # sets the prediction horizon
+    pressure_hold: float = 0.5       # hold a scale-down (and widen
+                                     # merges) when the expected LONG
+                                     # arrivals within 2x the transform
+                                     # cost reach this many requests
 
 
 class BaseScheduler:
@@ -266,6 +283,45 @@ class BaseScheduler:
 
     def __init__(self, cfg: Optional[SchedulerConfig] = None):
         self.cfg = cfg or SchedulerConfig()
+        #: optional core.events.ArrivalPressure; when attached, the
+        #: scheduler becomes transformation-aware IN TIME: a modeled
+        #: transform cost (cfg.transform_cost_s) is weighed against the
+        #: predicted long-request pressure, not just the current queue
+        self.pressure = None
+
+    # --- arrival-pressure plumbing (no-ops without an estimator) ---------
+    def attach_pressure(self, estimator) -> None:
+        """Attach a ``core.events.ArrivalPressure`` estimator; both
+        control planes then feed it via ``observe_arrival`` (submit
+        path) and ``observe_time`` (serving loop)."""
+        self.pressure = estimator
+
+    def observe_arrival(self, now: float, total_tokens: int) -> None:
+        """Serving-clock arrival hook, called by BOTH control planes on
+        every submit (sim ``Cluster.submit``, live
+        ``ClusterEngine.submit``) with the same classification the
+        router uses."""
+        if self.pressure is not None:
+            self.pressure.observe(now, self.is_long(total_tokens))
+
+    def observe_time(self, now: float) -> None:
+        """Serving-clock tick hook: decays the pressure estimate during
+        quiet periods so holds release when a burst passes."""
+        if self.pressure is not None:
+            self.pressure.advance_to(now)
+
+    def pressure_high(self) -> bool:
+        """Predicted long-arrival pressure over the transformation
+        horizon.  The horizon is 2x the modeled transform wall time —
+        a scale-down now that must be undone costs one split PLUS one
+        merge before the predicted long can be served — and the
+        threshold is ``cfg.pressure_hold`` expected long arrivals.
+        Always False without an estimator (every pre-existing caller)."""
+        if self.pressure is None:
+            return False
+        horizon = 2.0 * self.cfg.transform_cost_s
+        return self.pressure.expected_longs(horizon) \
+            >= self.cfg.pressure_hold
 
     def is_long(self, total_len: int,
                 inst: Optional[InstanceView] = None) -> bool:
@@ -291,7 +347,11 @@ class BaseScheduler:
         if inst.tp > 1 and not inst.has_long_request() \
                 and not any_long_waiting:
             if inst.kv_used_fraction() < self.cfg.scale_down_load:
-                return True
+                # transformation-aware in time: keep the wide instance
+                # when the arrival estimate predicts longs within the
+                # split+re-merge horizon (paying the transform twice
+                # costs more than briefly idling the extra devices)
+                return not self.pressure_high()
         return False
 
     # declarative decisions ------------------------------------------------
@@ -383,6 +443,12 @@ class BaseScheduler:
         ``require`` forces one TP1 instance into the member set (the
         seed of an unaware routing pick — ``decide_seed_scale_up``)."""
         min_w = self.cfg.target_tp if min_width is None else min_width
+        if self.pressure is not None and not self.pressure_high():
+            # low predicted pressure: build the NARROWEST adequate
+            # merge (cheapest transformation, fewest parked donors);
+            # the accumulation loop still widens until the ceiling
+            # fits, so capacity is never compromised
+            min_w = 2
         pool = sum(getattr(i, "width", i.tp) for i in instances)
         members: List[InstanceView] = []
         width = 0
@@ -510,7 +576,9 @@ class GygesScheduler(BaseScheduler):
                 and not any_long_waiting:                  # line 3
             cur_load = inst.kv_used_fraction()             # line 4
             if cur_load < self.cfg.scale_down_load:        # line 6 safe
-                return True                                # line 7-9
+                # weigh the modeled transform cost against predicted
+                # arrival pressure (no-op without an estimator)
+                return not self.pressure_high()            # line 7-9
         return False
 
 

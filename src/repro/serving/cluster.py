@@ -81,12 +81,17 @@ class ClusterEngine:
                  rng: Optional[jax.Array] = None, params=None,
                  dwell_steps: int = 8, layout: str = "header_centric",
                  transform_attn: bool = True,
-                 prefill_policy: Optional[PrefillPolicy] = None):
+                 prefill_policy: Optional[PrefillPolicy] = None,
+                 clock=None):
         if n_instances < 1 or len(devices) < n_instances:
             raise ValueError(f"{n_instances} instances need at least "
                              f"{n_instances} of {len(devices)} devices")
         W = len(devices) // n_instances
         self.cfg = cfg
+        # request-timestamp source shared with every engine: the wall
+        # clock in normal serving, a core.events.VirtualClock under an
+        # event-driven replay (TTFT/TPOT/goodput in virtual trace time)
+        self._clock = clock if clock is not None else time.monotonic
         self.dwell_steps = dwell_steps
         self.total_width = n_instances * W      # the shared device pool
         rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -105,7 +110,7 @@ class ClusterEngine:
                    max_seq=max_seq, page_tokens=page_tokens, rng=rng,
                    layout=layout, devices=list(devices[k * W:(k + 1) * W]),
                    transform_attn=transform_attn, iid=k, plan=self.plan,
-                   prefill_policy=self.prefill_policy)
+                   prefill_policy=self.prefill_policy, clock=self._clock)
             for k in range(n_instances)]
         if scheduler is None:
             base = self.engines[0].max_seq_at(1)
@@ -187,7 +192,11 @@ class ClusterEngine:
                 f"request {req.rid}: {total} tokens exceeds the device "
                 f"pool's merged capacity")
         if self.t_start is None:
-            self.t_start = time.monotonic()
+            self.t_start = self._clock()
+        # restamp on the serving clock: under a virtual-clock replay the
+        # constructor default (wall monotonic) is on the wrong axis
+        req.t_submit = self._clock()
+        self.scheduler.observe_arrival(req.t_submit, total)
         self.requests.append(req)
         if not self._place(req):
             self.waiting.append(req)
@@ -324,6 +333,7 @@ class ClusterEngine:
         engine iteration each (a transforming engine executes one §4.3
         schedule step before its decode), then finalize any completed
         splits (return device loans, revive parked donors)."""
+        self.scheduler.observe_time(self._clock())
         # FCFS retry of the router queue (stop at the first unplaceable).
         # Pop BEFORE placing: a merge inside _place prepends the donor's
         # queue to self.waiting, so popping afterwards would drop one of
@@ -412,7 +422,43 @@ class ClusterEngine:
         every engine keeps (``Engine.transform_log``, built from the
         session ``StepReport``s); parked donors' records included."""
         elapsed = 0.0 if self.t_start is None else (
-            time.monotonic() - self.t_start)
+            self._clock() - self.t_start)
         logs = [t for e in self.engines for t in e.transform_log]
         return summarize(self.requests, elapsed, self.total_tokens,
                          self.n_transforms, transforms=logs)
+
+
+class LiveReplayPlane:
+    """Adapts a live ``ClusterEngine`` to the ``core.events.replay``
+    plane protocol, so the SAME event-driven loop that drives the
+    simulator drives real engines: each trace ``Request`` is
+    materialized into a token-level ``ServeRequest`` (deterministic
+    random prompt ids of its ``in_len``) at its arrival event, and one
+    ``ClusterEngine.step`` serves each ``advance``.
+
+    The cluster must have been built with the replay's
+    ``core.events.VirtualClock`` as its ``clock`` so request timestamps
+    (and therefore TTFT/TPOT/goodput) land on the virtual axis the
+    arrival events use."""
+
+    def __init__(self, cluster: ClusterEngine, seed: int = 0):
+        import numpy as np
+        self.cluster = cluster
+        self._rng = np.random.default_rng(seed)
+        self.served: Dict[int, ServeRequest] = {}
+
+    def submit(self, trace_req, now: float) -> None:
+        prompt = self._rng.integers(0, self.cluster.cfg.vocab_size,
+                                    size=trace_req.in_len).tolist()
+        sr = ServeRequest(rid=trace_req.rid, prompt=prompt,
+                          max_new_tokens=trace_req.out_len,
+                          slo=getattr(trace_req, "slo", None))
+        self.served[trace_req.rid] = sr
+        self.cluster.submit(sr)
+
+    def advance(self, now: float, dt: float) -> None:
+        self.cluster.step()
+
+    @property
+    def idle(self) -> bool:
+        return self.cluster.idle

@@ -77,12 +77,21 @@ class Engine:
                  transform_attn: bool = True,
                  iid: Optional[int] = None,
                  plan: Optional[PaddingPlan] = None,
-                 prefill_policy: Optional[PrefillPolicy] = None):
+                 prefill_policy: Optional[PrefillPolicy] = None,
+                 clock=None):
         """``plan`` overrides the padding plan; a cluster whose engines
         may MERGE must pass one built for the full device-pool width so
         weight shard boundaries stay page-aligned at every reachable TP
-        degree (a wider plan is valid at any narrower degree)."""
+        degree (a wider plan is valid at any narrower degree).
+
+        ``clock`` is the REQUEST-timestamp source (default wall clock):
+        an event-driven replay injects a ``core.events.VirtualClock`` so
+        TTFT/TPOT/goodput are measured in virtual trace time.  Data-
+        plane measurements (transform ``wall_s``, ``StepReport`` spans)
+        deliberately stay on the wall clock — they time real device
+        work, not the serving schedule."""
         self.cfg = cfg
+        self._clock = clock if clock is not None else time.monotonic
         self.devices = list(devices) if devices else None
         self.W = len(devices) if devices else 1
         if plan is not None:
@@ -191,6 +200,17 @@ class Engine:
                                    start_pos, sub, layoutc)
 
         self._prefill_chunk_jit = _chunk
+
+        # whole-prompt prefill, same treatment: without the jit every
+        # single-chunk prefill re-traces M.prefill's layer scan (a full
+        # XLA compile per request); with it the trace cache is keyed by
+        # prompt length, so repeated lengths are compile-free
+        @jax.jit
+        def _whole(params, tokens, sub):
+            return M.prefill(params, cfgc, planc, {"tokens": tokens},
+                             sub, layoutc)
+
+        self._prefill_whole_jit = _whole
         self._chunk_keys: set = set()
         self.chunk_cache_hits = 0
         self.chunk_cache_misses = 0
@@ -659,8 +679,8 @@ class Engine:
         unstacked and wait for it to drain."""
         if self._session is None:
             return True
-        return self._can_chunk and len(self.prefill_policy.chunk_sizes(
-            len(req.prompt), self.page_tokens)) > 1
+        return self._can_chunk and self.prefill_policy.chunkable(
+            len(req.prompt), self.page_tokens)
 
     def _advanceable_now(self, slot: int) -> bool:
         """Mid-session, single-chunk (whole-prompt) prefills pause; the
@@ -726,7 +746,7 @@ class Engine:
         prog = self._prefilling[slot]
         req = prog["req"]
         if req.t_prefill_start is None:
-            req.t_prefill_start = time.monotonic()
+            req.t_prefill_start = self._clock()
         if len(prog["chunks"]) == 1:
             # whole-prompt fast path: one prefill call on a fresh
             # batch-1 cache (byte-identical to the pre-chunking engine)
@@ -899,7 +919,7 @@ class Engine:
         tok = int(_sample(logits[:, -1], req.temperature,
                           jax.random.fold_in(self.rng, req.rid))[0])
         req.generated.append(tok)
-        req.t_first_token = time.monotonic()
+        req.t_first_token = self._clock()
         req.state = State.DECODE
         req.slot = slot
         self.slots[slot] = req
@@ -909,7 +929,7 @@ class Engine:
                 or (req.eos_id is not None and tok == req.eos_id)
                 or req.context_len >= self.max_seq_alloc):
             req.state = State.DONE
-            req.t_done = time.monotonic()
+            req.t_done = self._clock()
             self.slots[slot] = None
 
     def _prefill_whole(self, req: ServeRequest, slot: int) -> None:
@@ -921,8 +941,7 @@ class Engine:
         sub = M.init_decode_caches(self.cfg, self.plan, 1,
                                    self.max_seq_alloc, self.page_tokens,
                                    self.layout)
-        logits, sub = M.prefill(self.params, self.cfg, self.plan,
-                                {"tokens": prompt}, sub, self.layout)
+        logits, sub = self._prefill_whole_jit(self.params, prompt, sub)
         self._adopt_slot_cache(sub, slot, len(req.prompt))
         self._finish_prefill(req, slot, logits)
 
@@ -1113,7 +1132,7 @@ class Engine:
                         or (r.eos_id is not None and tok == r.eos_id)
                         or r.context_len >= self.max_seq_alloc):
                     r.state = State.DONE
-                    r.t_done = time.monotonic()
+                    r.t_done = self._clock()
                     self.slots[r.slot] = None
             self._pin_prefill_cursors()
         # the final schedule step's transfers overlapped this decode;

@@ -28,10 +28,16 @@ from typing import Dict, List, Sequence
 #: the cost serving actually paid); merge_wall_s is the cumulative wall
 #: time spent inside CROSS-DEVICE (merge/split) sessions — the window
 #: that used to stall decode and now overlaps serving.
+#: goodput_slo is the fraction of SLO-carrying requests whose TTFT and
+#: TPOT deadlines were met (core.events.SLO.met); requests still queued
+#: or in flight at trace end are CENSORED — counted in the denominator
+#: as violating, never silently dropped.  NaN when no request carries
+#: an SLO (the untimed lockstep paths).
 METRIC_KEYS = ("throughput_tps", "finished", "total",
                "ttft_p50", "ttft_p99",
                "queue_delay_p50", "queue_delay_p99",
                "tpot_p50", "tpot_p99",
+               "goodput_slo",
                "n_transforms",
                "transform_s_p50", "transform_s_p99",
                "transform_drift_frac", "merge_wall_s")
@@ -61,6 +67,12 @@ def summarize(requests: Sequence, duration_s: float, total_tokens: float,
     prediction) and ``cross`` (device assembly changed — merge/split).
     """
     fin = [r for r in requests if r.finished]
+    # goodput under SLO: denominator is EVERY request carrying an SLO,
+    # so a request still queued at trace end counts as violating
+    # (censored) instead of being dropped with the latency percentiles
+    slod = [r for r in requests if getattr(r, "slo", None) is not None]
+    goodput = (sum(1 for r in slod if r.slo.met(r)) / len(slod)
+               if slod else float("nan"))
     ttfts = [r.ttft for r in requests if r.ttft is not None]
     qdels = [r.queue_delay for r in requests
              if getattr(r, "queue_delay", None) is not None]
@@ -86,6 +98,7 @@ def summarize(requests: Sequence, duration_s: float, total_tokens: float,
         "queue_delay_p99": percentile(qdels, 99),
         "tpot_p50": percentile(tpots, 50),
         "tpot_p99": percentile(tpots, 99),
+        "goodput_slo": goodput,
         "n_transforms": float(n_transforms),
         "transform_s_p50": percentile(walls, 50),
         "transform_s_p99": percentile(walls, 99),

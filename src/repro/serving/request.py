@@ -19,7 +19,10 @@ import itertools
 import time
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import List, Optional
+from typing import TYPE_CHECKING, List, Optional
+
+if TYPE_CHECKING:   # jax-free typing only; no runtime import cycle
+    from repro.core.events import SLO
 
 
 class State(Enum):
@@ -45,10 +48,19 @@ class ServeRequest:
     t_prefill_start: Optional[float] = None   # first prefill chunk ran
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+    #: latency deadlines (core.events.SLO) aggregated into goodput_slo;
+    #: None = no deadline, excluded from goodput accounting
+    slo: Optional["SLO"] = None
 
     @property
     def done(self) -> bool:
         return self.state == State.DONE
+
+    @property
+    def arrival_s(self) -> float:
+        """Arrival timestamp on the serving clock (the event-driven
+        replay contract; for a live request, submission time)."""
+        return self.t_submit
 
     @property
     def finished(self) -> bool:
@@ -97,10 +109,19 @@ class Request:
     tokens_done: float = 0.0
     prefilled: float = 0.0
     t_prefill_start: Optional[float] = None
+    #: latency deadlines (core.events.SLO) aggregated into goodput_slo;
+    #: None = no deadline, excluded from goodput accounting
+    slo: Optional["SLO"] = None
 
     @property
     def finished(self) -> bool:
         return self.t_finish is not None
+
+    @property
+    def arrival_s(self) -> float:
+        """Arrival timestamp on the serving clock (the event-driven
+        replay contract)."""
+        return self.arrive
 
     @property
     def ttft(self) -> Optional[float]:

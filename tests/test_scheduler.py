@@ -347,3 +347,43 @@ def test_cluster_invariants(reqspec, sched_name):
     assert finished + in_system == len(reqs)
     demand = sum(r.out_len for r in reqs)
     assert c.total_tokens <= demand + 1e-6
+
+
+def test_pressure_is_opt_in_and_narrows_merges():
+    """The arrival-pressure estimator is strictly opt-in: without
+    ``attach_pressure`` every decision is the pre-event-loop one
+    (``pressure_high`` is vacuously False, ``decide_merge`` builds to
+    ``target_tp``).  With it, LOW predicted pressure narrows the merge
+    to the cheapest adequate width (2), and HIGH pressure restores the
+    full-width build."""
+    from repro.core.events import ArrivalPressure
+
+    def views():
+        return [StubView(i, tp=1, base_seq=16, used=0.0)
+                for i in range(8)]
+
+    # total 24 tokens: fits a width-2 merge (ceiling 32), not TP1 (16)
+    total = 24
+    blind = GygesScheduler(SchedulerConfig(long_threshold=16,
+                                           target_tp=4,
+                                           transform_cost_s=5.0))
+    assert blind.pressure is None and not blind.pressure_high()
+    act = blind.decide_merge(views(), total)
+    assert isinstance(act, ScaleUp) and act.tp_to == 4
+    assert len(act.donor_iids) == 3
+
+    aware = GygesScheduler(SchedulerConfig(long_threshold=16,
+                                           target_tp=4,
+                                           transform_cost_s=5.0))
+    aware.attach_pressure(ArrivalPressure(tau_s=30.0))
+    # no arrivals observed -> low pressure -> narrowest adequate merge
+    act = aware.decide_merge(views(), total)
+    assert isinstance(act, ScaleUp) and act.tp_to == 2
+    assert len(act.donor_iids) == 1
+    # a burst of observed longs raises the expected-longs estimate over
+    # the 2x-transform-cost horizon -> full-width merge again
+    for _ in range(20):
+        aware.observe_arrival(0.0, total_tokens=50_000)
+    assert aware.pressure_high()
+    act = aware.decide_merge(views(), total)
+    assert isinstance(act, ScaleUp) and act.tp_to == 4

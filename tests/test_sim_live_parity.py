@@ -133,11 +133,10 @@ DRIVER = """
 """
 
 
-def _drive(sched: str) -> dict:
-    """Run the dual-plane driver for one scheduler, in-process when the
-    session already has >= 8 devices (the CI configuration), else in a
+def _run_driver(body: str, tag: str) -> dict:
+    """Run a dual-plane driver body, in-process when the session
+    already has >= 8 devices (the CI configuration), else in a
     subprocess that forces 8 fake host devices."""
-    body = textwrap.dedent(DRIVER).format(trace=TRACE, sched=sched)
     use_subprocess = True
     if "xla_force_host_platform_device_count=8" in os.environ.get(
             "XLA_FLAGS", ""):
@@ -145,7 +144,8 @@ def _drive(sched: str) -> dict:
     if use_subprocess:
         env = dict(os.environ,
                    XLA_FLAGS="--xla_force_host_platform_device_count=8",
-                   PYTHONPATH=os.path.join(REPO, "src"))
+                   PYTHONPATH=os.pathsep.join(
+                       [os.path.join(REPO, "src"), REPO]))
         out = subprocess.run([sys.executable, "-c", body],
                              capture_output=True, text=True, env=env,
                              timeout=900)
@@ -157,11 +157,16 @@ def _drive(sched: str) -> dict:
         import io
         buf = io.StringIO()
         with contextlib.redirect_stdout(buf):
-            exec(compile(body, f"<parity:{sched}>", "exec"), {})
+            exec(compile(body, f"<parity:{tag}>", "exec"), {})
         stdout = buf.getvalue()
     line = next(ln for ln in stdout.splitlines()
                 if ln.startswith("RESULT "))
     return json.loads(line[len("RESULT "):])
+
+
+def _drive(sched: str) -> dict:
+    body = textwrap.dedent(DRIVER).format(trace=TRACE, sched=sched)
+    return _run_driver(body, sched)
 
 
 @pytest.mark.parametrize("sched", ["gyges", "llf", "rr"])
@@ -178,3 +183,39 @@ def test_decision_parity_sim_vs_live(sched):
     # the trace's long request really forced a cross-instance merge
     assert r["live_merges"] >= 1, r["live_actions"]
     assert r["live_keys"] == r["sim_keys"] == r["metric_keys"]
+
+
+#: the timed case delegates to the SAME dual-replay driver the CI
+#: ``bench_e2e --replay-smoke`` lane runs at 1000+ requests — one code
+#: path, two scales
+TIMED_DRIVER = """
+    import json, sys
+    sys.path.insert(0, {repo!r})
+    from benchmarks.bench_e2e import timed_dual_replay
+    r = timed_dual_replay(n_bursts=8)
+    print("RESULT " + json.dumps({{
+        "n_requests": r["n_requests"],
+        "placements_equal": r["placements_equal"],
+        "actions_equal": r["actions_equal"],
+        "live_merges": r["live_merges"],
+        "live_goodput": r["live"]["goodput_slo"],
+        "sim_goodput": r["sim"]["goodput_slo"],
+        "live_finished": r["live"]["finished"],
+        "sim_finished": r["sim"]["finished"],
+    }}))
+"""
+
+
+def test_timed_trace_decision_parity():
+    """The tentpole invariant under the EVENT clock: a bursty timed
+    trace (arrival timestamps, SLOs, merge-forcing longs) replayed
+    through both planes on one virtual clock yields identical routing
+    and identical parallelism-action sequences, and both planes report
+    positive goodput on the virtual time axis."""
+    body = textwrap.dedent(TIMED_DRIVER).format(repo=REPO)
+    r = _run_driver(body, "timed")
+    assert r["placements_equal"], "sim/live routing diverged under time"
+    assert r["actions_equal"], "sim/live action sequences diverged"
+    assert r["live_merges"] >= 1, "timed trace forced no live merge"
+    assert r["live_finished"] == r["sim_finished"] == r["n_requests"]
+    assert r["live_goodput"] > 0.0 and r["sim_goodput"] > 0.0, r

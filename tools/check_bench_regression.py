@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Gate the CI perf trajectory: compare a candidate ``BENCH_*.json``
+(from ``benchmarks/run.py --trajectory``) against the committed
+baseline and exit non-zero on any gated-column regression beyond the
+threshold.
+
+Rules (direction-aware, taken from the BASELINE's ``gates`` map so a
+candidate cannot un-gate a column by dropping it):
+
+* every baseline scenario must exist in the candidate, and every gated
+  column must be present — a missing scenario/column is a FAILURE, not
+  a skip (renames go through a schema_version bump);
+* relative change is measured against the baseline value; ``higher``
+  columns fail when the candidate is > threshold BELOW baseline,
+  ``lower`` columns when > threshold ABOVE;
+* NaN on either side skips the column (the untimed paths report NaN
+  goodput by contract) and a near-zero baseline skips the ratio (noted
+  in the output, never divided by).
+
+Usage:
+    python tools/check_bench_regression.py \
+        benchmarks/BENCH_baseline.json BENCH_2026-08-08.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def compare(base: dict, cand: dict, threshold: float) -> list[str]:
+    failures: list[str] = []
+    if base.get("schema_version") != cand.get("schema_version"):
+        return [f"schema_version mismatch: baseline "
+                f"{base.get('schema_version')} vs candidate "
+                f"{cand.get('schema_version')} (regenerate the baseline)"]
+    gates = base.get("gates", {})
+    for scen, cols in sorted(base.get("scenarios", {}).items()):
+        c_cols = cand.get("scenarios", {}).get(scen)
+        if c_cols is None:
+            failures.append(f"{scen}: scenario missing from candidate")
+            continue
+        for col, bv in sorted(cols.items()):
+            direction = gates.get(col)
+            if direction is None:
+                continue                      # informational column
+            cv = c_cols.get(col)
+            if cv is None:
+                failures.append(f"{scen}.{col}: column missing "
+                                f"from candidate")
+                continue
+            bv, cv = float(bv), float(cv)
+            if math.isnan(bv) or math.isnan(cv):
+                print(f"  skip {scen}.{col}: NaN "
+                      f"(baseline={bv}, candidate={cv})")
+                continue
+            if abs(bv) < 1e-12:
+                print(f"  skip {scen}.{col}: near-zero baseline {bv}")
+                continue
+            rel = (cv - bv) / abs(bv)
+            worse = (-rel if direction == "higher" else rel)
+            mark = "REGRESSION" if worse > threshold else "ok"
+            print(f"  {mark:>10} {scen}.{col}: {bv:.4g} -> {cv:.4g} "
+                  f"({rel:+.1%}, gate: {direction} is better)")
+            if worse > threshold:
+                failures.append(
+                    f"{scen}.{col}: {bv:.4g} -> {cv:.4g} ({rel:+.1%}) "
+                    f"exceeds the {threshold:.0%} {direction}-is-better "
+                    f"gate")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("candidate", help="freshly emitted BENCH_<date>.json")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated relative regression in a gated "
+                         "column (default 0.15)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.candidate) as f:
+        cand = json.load(f)
+    print(f"baseline {args.baseline} vs candidate {args.candidate} "
+          f"(threshold {args.threshold:.0%})")
+    failures = compare(base, cand, args.threshold)
+    if failures:
+        print(f"\n{len(failures)} gated regression(s):")
+        for f_ in failures:
+            print(f"  FAIL {f_}")
+        return 1
+    print("\nall gated columns within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
