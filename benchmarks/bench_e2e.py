@@ -130,6 +130,21 @@ def run_burst(duration: float = 240.0) -> List[str]:
         f"burst.qwen2.5-32b,derived,bg_ttft_p99 improvement = "
         f"{p99['whole-prompt'] / max(p99['chunked-decode-prio'], 1e-9):.1f}x"
         f" (decode-priority vs whole-prompt)")
+
+    # the chunk DATA PATH under the burst policies: fused (what the
+    # engine ships — first-chunk skip + identity-pages / Pallas kernel
+    # on TPU) vs the pre-ISSUE-7 gather+scatter, measured on real
+    # arrays over a full chunk plan
+    from benchmarks.bench_kv_transform import chunk_prefill_metrics
+    m = chunk_prefill_metrics()
+    rows.append("burst.chunk_path,path,ms_per_plan,tok_per_s")
+    rows.append(f"burst.chunk_path,{m['fused_label']},"
+                f"{m['fused_ms']:.2f},"
+                f"{m['chunk_prefill_tok_per_s']:.0f}")
+    rows.append(f"burst.chunk_path,unfused(gather+scatter),"
+                f"{m['unfused_ms']:.2f},{m['unfused_tok_per_s']:.0f}")
+    rows.append(f"burst.chunk_path,derived,speedup="
+                f"{m['chunk_prefill_speedup_vs_unfused']:.2f}x")
     return rows
 
 
@@ -414,8 +429,54 @@ def run_replay_smoke() -> List[str]:
     return rows
 
 
+def weight_stream_micro() -> Dict[str, float]:
+    """Live micro transform (ISSUE-7 prong 2): a TP 1->2 transformation
+    mid-decode on 2 fake devices; the engine streams each schedule
+    step's weight transfers layer-by-layer under the decode walk.
+    Returns the session's overlap fraction (how much of the transform
+    wall the decode iterations covered) from the transform_log record
+    — informational in the trajectory: it is a real-time ratio, so it
+    moves with host load, but a collapse to ~0 means the interleave
+    disengaged."""
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import dataclasses
+
+    import jax
+
+    from repro.core.padding import make_plan
+    from repro.models import model as M
+    from repro.serving.engine import Engine
+    from repro.serving.request import ServeRequest
+
+    cfg = get_config("llama3-8b")
+    cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
+    devs = jax.devices()[:2]
+    params = M.init_params(jax.random.PRNGKey(11), cfg,
+                           make_plan(cfg, 2, mode="page"))
+    eng = Engine(cfg, params=params, max_batch=2, max_seq=64,
+                 page_tokens=16, devices=devs)
+    reqs = [ServeRequest(rid=i, prompt=list(range(5 + i, 21 + i)),
+                         max_new_tokens=24) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(6):
+        eng.step()
+    eng.transform(2)
+    while eng.transforming:
+        eng.step()
+    eng.run_until_done()
+    rec = eng.transform_log[-1]
+    spans = sum(len(r.layer_spans) for r in eng.transform_reports)
+    return {"weight_stream_overlap_frac": float(rec["overlap_frac"]),
+            "transform_wall_s": float(rec["wall_s"]),
+            "layer_spans": float(spans)}
+
+
 #: trajectory schema: bump when scenario names / column meaning change
-TRAJECTORY_SCHEMA_VERSION = 1
+#: (v2: + kernel.chunk_prefill scenario — gated chunk_prefill_tok_per_s,
+#: informational speedup_vs_unfused and weight_stream_overlap_frac)
+TRAJECTORY_SCHEMA_VERSION = 2
 
 #: gated columns and the direction that counts as BETTER; every other
 #: emitted column (transform walls, merge_wall_s, ...) is informational
@@ -424,6 +485,7 @@ TRAJECTORY_GATES = {
     "ttft_p50": "lower", "ttft_p99": "lower",
     "tpot_p50": "lower", "tpot_p99": "lower",
     "goodput_slo": "higher",
+    "chunk_prefill_tok_per_s": "higher",
 }
 
 _TRAJECTORY_COLUMNS = ("throughput_tps", "ttft_p50", "ttft_p99",
@@ -450,6 +512,15 @@ def trajectory_payload() -> Dict[str, object]:
     for plane in ("live", "sim"):
         scenarios[f"replay.{plane}.gyges-timed"] = {
             k: r[plane][k] for k in _TRAJECTORY_COLUMNS}
+    from benchmarks.bench_kv_transform import chunk_prefill_metrics
+    cp = chunk_prefill_metrics()
+    ws = weight_stream_micro()
+    scenarios["kernel.chunk_prefill"] = {
+        "chunk_prefill_tok_per_s": cp["chunk_prefill_tok_per_s"],
+        "chunk_prefill_speedup_vs_unfused":
+            cp["chunk_prefill_speedup_vs_unfused"],
+        "weight_stream_overlap_frac": ws["weight_stream_overlap_frac"],
+    }
     return {
         "schema_version": TRAJECTORY_SCHEMA_VERSION,
         "gates": dict(TRAJECTORY_GATES),

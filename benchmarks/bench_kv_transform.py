@@ -189,8 +189,108 @@ def measured_rows() -> List[str]:
     return rows
 
 
+def chunk_prefill_metrics() -> dict:
+    """Measured fused-vs-unfused chunk-prefill step (ISSUE-7 tentpole).
+
+    ``unfused`` is the pre-ISSUE-7 data path for a whole chunk PLAN:
+    every chunk — the first included — dense-gathers the prefix pool
+    through the page table, runs attention over the full capacity, then
+    page-table-scatters the chunk.  ``fused`` is what the engine ships:
+    the first chunk skips the all-invalid prefix entirely and later
+    chunks run the fused contraction (on TPU the single Pallas kernel
+    with the pool aliased in place; off-TPU its jnp form, where the
+    identity-pages gather is a reshape and the scatter batch-aligned).
+    Best-of-N wall time over the 4-chunk plan; the ratio is the tracked
+    speedup."""
+    import numpy as np
+
+    from repro.kernels import chunk_prefill as CP
+    from repro.models import layers as Lyr
+    from repro.paged import pool as pp
+
+    B, kvs, P, dh, mps, Hq = 2, 8, 64, 64, 16, 8
+    S = 256
+    n_chunks = mps * P // S                           # fill the pool
+    rng = np.random.default_rng(0)
+    st0 = pp.make_state(B * mps, kvs, P, dh, B, mps, dtype=jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, kvs, dh)), jnp.float32)
+
+    def first_skip(st, q, k, pos):
+        attn = Lyr.chunked_attention(q, k, k, pos, pos, causal=True)
+        return attn, pp.write_chunk(st, k, k, pos, identity_pages=True)
+
+    def cont(identity):
+        def f(st, q, k, pos):
+            kk, vv, kv_pos, valid = pp.gather_kv(
+                st, identity_pages=identity)
+            kk = jnp.concatenate([kk, k], axis=1)
+            vv = jnp.concatenate([vv, k], axis=1)
+            kv_pos = jnp.concatenate([kv_pos, pos], axis=1)
+            valid = jnp.concatenate(
+                [valid, jnp.ones((B, S), dtype=bool)], axis=1)
+            attn = Lyr.chunked_attention(q, kk, vv, pos, kv_pos,
+                                         kv_valid=valid, causal=True)
+            st = pp.write_chunk(st, k, k, pos, identity_pages=identity)
+            return attn, st
+        return f
+
+    if jax.default_backend() == "tpu":
+        def kernel_cont(st, q, k, pos):
+            attn, pool_c = CP.chunk_prefill_attention(
+                q, k, k, st.pool, st.page_table, st.positions, pos)
+            return attn, pp.adopt_chunk_pool(st, pool_c, pos)
+        fused_cont, fused_label = kernel_cont, "fused(kernel)"
+    else:
+        fused_cont, fused_label = cont(True), "fused(jnp-identity)"
+
+    pos_all = [jnp.broadcast_to(c * S + jnp.arange(S, dtype=jnp.int32),
+                                (B, S)) for c in range(n_chunks)]
+    fused_steps = [jax.jit(first_skip)] + [jax.jit(fused_cont)] * (
+        n_chunks - 1)
+    unfused_steps = [jax.jit(cont(False))] * n_chunks
+
+    def plan_ms(steps):
+        def once():
+            st = st0
+            for fn, pos in zip(steps, pos_all):
+                _, st = fn(st, q, k, pos)
+            return jax.block_until_ready(st)
+        once()                                        # compile
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            once()
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e3
+
+    f_ms, u_ms = plan_ms(fused_steps), plan_ms(unfused_steps)
+    toks = B * S * n_chunks
+    return {"fused_label": fused_label, "fused_ms": f_ms,
+            "unfused_ms": u_ms,
+            "chunk_prefill_tok_per_s": toks / (f_ms * 1e-3),
+            "unfused_tok_per_s": toks / (u_ms * 1e-3),
+            "chunk_prefill_speedup_vs_unfused": u_ms / max(f_ms, 1e-9),
+            "geometry": dict(B=B, kvs=kvs, page_tokens=P, head_dim=dh,
+                             pages_per_seq=mps, q_heads=Hq, chunk=S,
+                             n_chunks=n_chunks)}
+
+
+def chunk_prefill_rows() -> List[str]:
+    m = chunk_prefill_metrics()
+    rows = ["fig9.chunk_prefill,path,ms_per_plan,tok_per_s",
+            f"fig9.chunk_prefill,{m['fused_label']},{m['fused_ms']:.2f},"
+            f"{m['chunk_prefill_tok_per_s']:.0f}",
+            f"fig9.chunk_prefill,unfused(gather+scatter),"
+            f"{m['unfused_ms']:.2f},{m['unfused_tok_per_s']:.0f}",
+            f"fig9.chunk_prefill,derived,speedup="
+            f"{m['chunk_prefill_speedup_vs_unfused']:.2f}x"]
+    return rows
+
+
 def run() -> List[str]:
-    return accounting_rows() + dataplane_rows() + measured_rows()
+    return (accounting_rows() + dataplane_rows() + measured_rows()
+            + chunk_prefill_rows())
 
 
 def main():

@@ -120,6 +120,86 @@ def analyse(arch: str, shape_name: str, decode_mode: str = "tp",
     return rec
 
 
+def chunk_prefill_row() -> Dict:
+    """Roofline terms for ONE chunk-prefill attention step on a TP-8
+    slice of the production mesh, fused path vs the pre-ISSUE-7 unfused
+    gather+scatter (pool sharded over kv heads, the serving TP axis).
+    Both compile collective-free — paged locality holds under GSPMD —
+    so the separating term is HBM traffic: the unfused path
+    materializes the dense gathered prefix (plus its scatter round
+    trip), the fused path reads each page once.  Written to
+    ``experiments/roofline/chunk_prefill.json``."""
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.launch.hlo_analysis import collective_bytes
+    from repro.models import layers as Lyr
+    from repro.paged import pool as pp
+
+    tp = 8
+    B, kvs, Pt, dh, mps, Hq = 8, 8, 64, 128, 32, 32
+    S = 512
+    mesh = Mesh(np.asarray(jax.devices()[:tp]), ("tp",))
+    repl = NamedSharding(mesh, P())
+    st = pp.PagedState(
+        pool=jax.ShapeDtypeStruct((B * mps, kvs, 2, Pt, dh), jnp.bfloat16,
+                                  sharding=NamedSharding(mesh,
+                                                         P(None, "tp"))),
+        page_table=jax.ShapeDtypeStruct((B, mps), jnp.int32,
+                                        sharding=repl),
+        seq_lens=jax.ShapeDtypeStruct((B,), jnp.int32, sharding=repl),
+        positions=jax.ShapeDtypeStruct((B, mps * Pt), jnp.int32,
+                                       sharding=repl))
+    qs = NamedSharding(mesh, P(None, None, "tp"))
+    q = jax.ShapeDtypeStruct((B, S, Hq, dh), jnp.bfloat16, sharding=qs)
+    k = jax.ShapeDtypeStruct((B, S, kvs, dh), jnp.bfloat16, sharding=qs)
+    pos = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=repl)
+
+    def path(identity):
+        def f(st, q, k, pos):
+            kk, vv, kv_pos, valid = pp.gather_kv(
+                st, identity_pages=identity)
+            kk = jnp.concatenate([kk, k], axis=1)
+            vv = jnp.concatenate([vv, k], axis=1)
+            kv_pos = jnp.concatenate([kv_pos, pos], axis=1)
+            valid = jnp.concatenate(
+                [valid, jnp.ones((B, S), dtype=bool)], axis=1)
+            attn = Lyr.chunked_attention(q, kk, vv, pos, kv_pos,
+                                         kv_valid=valid, causal=True)
+            st = pp.write_chunk(st, k, k, pos, identity_pages=identity)
+            return attn, st
+        return f
+
+    rec = {"shape": f"B{B} S{S} cap{mps * Pt} kv{kvs} dh{dh} tp{tp}"}
+    for name, identity in (("fused", True), ("unfused", False)):
+        compiled = jax.jit(path(identity)).lower(st, q, k, pos).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # older jax: dict per device
+            cost = cost[0] if cost else {}
+        coll = collective_bytes(compiled.as_text())
+        f_ = float(cost.get("flops", 0.0))
+        b_ = float(cost.get("bytes accessed", 0.0))
+        c_ = sum(v for kk_, v in coll.items() if kk_ != "count")
+        rec[name] = {
+            "flops_per_chip": f_, "bytes_per_chip": b_,
+            "collective_bytes_per_chip": c_,
+            "t_compute_s": f_ / PEAK_FLOPS, "t_memory_s": b_ / HBM_BW,
+            "t_collective_s": c_ / ICI_BW,
+        }
+    fu, un = rec["fused"], rec["unfused"]
+    rec["bytes_saved_frac"] = 1.0 - (fu["bytes_per_chip"]
+                                     / max(un["bytes_per_chip"], 1e-9))
+    rec["mem_bound_speedup"] = (un["t_memory_s"]
+                                / max(fu["t_memory_s"], 1e-12))
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "chunk_prefill.json"), "w") as fjson:
+        json.dump(rec, fjson, indent=1)
+    return rec
+
+
 def fmt_row(r: Dict) -> str:
     return (f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:9.3f} "
             f"| {r['t_memory_s']*1e3:9.3f} | {r['t_collective_s']*1e3:9.3f} "
@@ -139,7 +219,26 @@ def main():
     ap.add_argument("--mesh-shape", default=None,
                     help="e.g. 32,8 — alternative 256-chip factorization")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--chunk-prefill", action="store_true",
+                    help="emit the fused-vs-unfused chunk-prefill "
+                         "attention roofline row instead of the arch "
+                         "sweep")
     args = ap.parse_args()
+
+    if args.chunk_prefill:
+        r = chunk_prefill_row()
+        print("| path | t_comp(ms) | t_mem(ms) | t_coll(ms) |")
+        print("|---|---|---|---|")
+        for name in ("fused", "unfused"):
+            p = r[name]
+            print(f"| chunk-prefill {name} | {p['t_compute_s']*1e3:9.3f} "
+                  f"| {p['t_memory_s']*1e3:9.3f} "
+                  f"| {p['t_collective_s']*1e3:9.3f} |")
+        print(f"bytes_saved_frac={r['bytes_saved_frac']:.3f} "
+              f"mem_bound_speedup={r['mem_bound_speedup']:.2f}x")
+        assert r["fused"]["collective_bytes_per_chip"] == 0, (
+            "fused chunk path lost GSPMD locality", r["fused"])
+        return
 
     from repro.configs import ASSIGNED_ARCHS, SHAPES
     combos = ([(args.arch, args.shape)] if args.arch

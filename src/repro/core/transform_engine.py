@@ -254,6 +254,10 @@ class StepReport:
     dispatch_s: float = 0.0        # host time issuing the async transfers
     blocked_s: float = 0.0         # dispatch_s + wait: the exposed cost
     overlapped: bool = False       # completed under a decode iteration?
+    # per-layer dispatch spans: (layer, components, start_rel_s,
+    # duration_s) for each layer group streamed inside the step (layer
+    # -1 = the static embed/head params riding the final step)
+    layer_spans: List[Tuple] = field(default_factory=list)
 
 
 class TransformSession:
@@ -425,6 +429,82 @@ class TransformSession:
         return stats.time_s(self.link, overlap=op.overlap)
 
     # -- execution ------------------------------------------------------
+    def dispatch_step_begin(self) -> None:
+        """Stage the next schedule step WITHOUT issuing any transfers:
+        its ops are grouped per layer (first-occurrence order) so
+        ``dispatch_step_advance`` can stream one layer's transfers at a
+        time, interleaved with the decode iteration's layer walk (layer
+        L's weights stream while layer L-1 computes —
+        ``on_decode_layer``)."""
+        assert self._pending is None, "previous step not completed"
+        assert self._dispatched < self.schedule.n_steps, (
+            "schedule exhausted")
+        ops = self.schedule.steps[self._dispatched]
+        groups: List[List] = []
+        by_layer: Dict[int, List[TransformOp]] = {}
+        for op in ops:
+            if op.layer not in by_layer:
+                by_layer[op.layer] = []
+                groups.append([op.layer, by_layer[op.layer]])
+            by_layer[op.layer].append(op)
+        self._pending = {
+            "ops": ops, "t0": time.perf_counter(), "modeled": 0.0,
+            "kernel": False, "moved": [], "dispatch_s": 0.0,
+            "groups": groups, "spans": [],
+            "final": self._dispatched + 1 >= self.schedule.n_steps,
+            "static_done": False}
+        self._dispatched += 1
+
+    def dispatch_step_advance(self) -> bool:
+        """Issue the async transfers for ONE staged layer group (the
+        layer dict immediately points at the in-flight arrays and its
+        ``"mesh"`` tag flips to the target).  On the final step, once
+        every layer group is out, the non-layer static params (embed/
+        head: replicated) ride along as their own span.  Returns False
+        when nothing is left to dispatch."""
+        p = self._pending
+        if p is None:
+            return False
+        if not p["groups"]:
+            if not (p["final"] and not p["static_done"]):
+                return False
+            td = time.perf_counter()
+            self.static = jax.device_put(
+                self.static, self._shardings(self._pspec(self.static),
+                                             self.mesh_to))
+            self.static_mesh = self.mesh_to
+            p["moved"].extend(jax.tree.leaves(self.static))
+            dt = time.perf_counter() - td
+            p["dispatch_s"] += dt
+            p["spans"].append((-1, ("static",), td - p["t0"], dt))
+            p["static_done"] = True
+            return True
+        td = time.perf_counter()
+        layer_idx, ops = p["groups"].pop(0)
+        layer = self.layers[layer_idx]
+        for op in ops:
+            p["modeled"] += self._modeled_op_s(op, layer["cache"])
+            if op.component == "mlp":
+                shardings = self._shardings(self._pspec(layer["params"]),
+                                            self.mesh_to)
+                layer["params"] = jax.device_put(layer["params"], shardings)
+                p["moved"].extend(jax.tree.leaves(layer["params"]))
+            else:
+                layer["cache"], used = self._migrate_cache(layer["cache"])
+                p["kernel"] |= used
+                p["moved"].extend(jax.tree.leaves(layer["cache"]))
+        layer["mesh"] = self.mesh_to
+        dt = time.perf_counter() - td
+        p["dispatch_s"] += dt
+        p["spans"].append((layer_idx, tuple(op.component for op in ops),
+                           td - p["t0"], dt))
+        return True
+
+    def dispatch_step_drain(self) -> None:
+        """Dispatch every remaining staged group of the pending step."""
+        while self.dispatch_step_advance():
+            pass
+
     def dispatch_step(self) -> None:
         """Issue the next schedule step's transfers WITHOUT blocking.
 
@@ -435,49 +515,35 @@ class TransformSession:
         queues behind the transfers of the layers it touches while the
         rest of its compute proceeds — the double-buffering that hides
         transfer under decode.  ``complete_step()`` blocks and reports.
+        (One-shot form of ``dispatch_step_begin`` + drain; the serving
+        engine instead primes one group and streams the rest per layer
+        through ``on_decode_layer``.)
         """
-        assert self._pending is None, "previous step not completed"
-        assert self._dispatched < self.schedule.n_steps, (
-            "schedule exhausted")
-        ops = self.schedule.steps[self._dispatched]
-        used_kernel = False
-        modeled = 0.0
-        t0 = time.perf_counter()
-        moved: List[jax.Array] = []
-        for op in ops:
-            layer = self.layers[op.layer]
-            modeled += self._modeled_op_s(op, layer["cache"])
-            if op.component == "mlp":
-                shardings = self._shardings(self._pspec(layer["params"]),
-                                            self.mesh_to)
-                layer["params"] = jax.device_put(layer["params"], shardings)
-                moved.extend(jax.tree.leaves(layer["params"]))
-            else:
-                layer["cache"], used = self._migrate_cache(layer["cache"])
-                used_kernel |= used
-                moved.extend(jax.tree.leaves(layer["cache"]))
-            layer["mesh"] = self.mesh_to
-        if self._dispatched + 1 >= self.schedule.n_steps:
-            # non-layer params (embed/head: replicated) ride the last
-            # step onto the target mesh — inside the timed region so the
-            # step's measured cost covers everything it moves
-            self.static = jax.device_put(
-                self.static, self._shardings(self._pspec(self.static),
-                                             self.mesh_to))
-            self.static_mesh = self.mesh_to
-            moved.extend(jax.tree.leaves(self.static))
-        self._pending = {"ops": ops, "t0": t0, "modeled": modeled,
-                         "kernel": used_kernel, "moved": moved,
-                         "dispatch_s": time.perf_counter() - t0}
-        self._dispatched += 1
+        self.dispatch_step_begin()
+        self.dispatch_step_drain()
+
+    def on_decode_layer(self, i: int) -> None:
+        """``decode_step_layers`` hook: after layer ``i``'s compute has
+        been enqueued, stream the next staged layer group — but only if
+        the walk has not reached its layer yet (dispatching a group for
+        an already-walked layer would migrate the stale pre-walk cache
+        the walk is about to replace).  Groups left over when the walk
+        finishes are drained by the engine after it adopts the walk's
+        updated layers."""
+        p = self._pending
+        if p is not None and p["groups"] and p["groups"][0][0] > i:
+            self.dispatch_step_advance()
 
     def complete_step(self, overlapped: bool = True
                       ) -> Optional[StepReport]:
         """Block until the last dispatched step's arrays are resident
-        and record its ``StepReport``.  No-op (returns None) when
-        nothing is pending."""
+        and record its ``StepReport``.  Any staged-but-undispatched
+        groups are drained first (a step with no decode iteration under
+        it gets no ``on_decode_layer`` callbacks).  No-op (returns None)
+        when nothing is pending."""
         if self._pending is None:
             return None
+        self.dispatch_step_drain()
         p, self._pending = self._pending, None
         t_wait = time.perf_counter()
         for a in p["moved"]:
@@ -488,7 +554,8 @@ class TransformSession:
                          modeled_s=p["modeled"], kernel_plane=p["kernel"],
                          dispatch_s=p["dispatch_s"],
                          blocked_s=p["dispatch_s"] + wait_s,
-                         overlapped=overlapped)
+                         overlapped=overlapped,
+                         layer_spans=p["spans"])
         self.reports.append(rep)
         self._next += 1
         return rep

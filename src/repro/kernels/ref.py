@@ -37,6 +37,55 @@ def paged_attention_ref(q: jax.Array, pool: jax.Array,
     return o.reshape(B, Hq, dh).astype(q.dtype)
 
 
+def chunk_prefill_ref(q, k_new, v_new, pool, page_table, kv_positions,
+                      q_positions, *, window: int = 0,
+                      attend_prefix: bool = True):
+    """Dense oracle for the fused chunk-prefill kernel: gather the whole
+    prefix through the page table, concat the chunk's K/V, one softmax
+    over everything, then the ``write_chunk`` scatter.
+
+    q:            (B, S, Hq, dh);  k_new/v_new: (B, S, kvs, dh)
+    pool:         (NP, kvs, 2, P, dh) canonical header-centric
+    page_table:   (B, n_pages);  kv_positions: (B, cap) (-1 = empty)
+    q_positions:  (B, S) chunk token positions (page-aligned start)
+    returns       (attn (B, S, Hq, dh), new_pool)
+    """
+    B, S, Hq, dh = q.shape
+    NP, kvs, _, P, _ = pool.shape
+    rep = Hq // kvs
+    scale = 1.0 / math.sqrt(dh)
+    if attend_prefix:
+        pages = pool[page_table]                  # (B, n, kvs, 2, P, dh)
+        kv = pages.transpose(0, 1, 4, 3, 2, 5).reshape(B, -1, 2, kvs, dh)
+        kk = jnp.concatenate([kv[:, :, 0], k_new], axis=1)
+        vv = jnp.concatenate([kv[:, :, 1], v_new], axis=1)
+        kpos = jnp.concatenate([kv_positions, q_positions], axis=1)
+        valid = jnp.concatenate(
+            [kv_positions >= 0, jnp.ones((B, S), bool)], axis=1)
+    else:
+        kk, vv, kpos = k_new, v_new, q_positions
+        valid = jnp.ones((B, S), bool)
+    qg = q.reshape(B, S, kvs, rep, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kk.astype(jnp.float32))
+    mask = (valid[:, None, None, None, :]
+            & (kpos[:, None, None, None, :]
+               <= q_positions[:, None, None, :, None]))
+    if window > 0:
+        mask = mask & (kpos[:, None, None, None, :]
+                       > q_positions[:, None, None, :, None] - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p, vv.astype(jnp.float32))
+    out = o.reshape(B, S, Hq, dh).astype(q.dtype)
+
+    cap = kv_positions.shape[1]
+    slot = q_positions % cap
+    kvn = jnp.stack([k_new, v_new], axis=3).astype(pool.dtype)
+    page_idx = jnp.take_along_axis(page_table, slot // P, axis=1)
+    new_pool = pool.at[page_idx, :, :, slot % P, :].set(kvn)
+    return out, new_pool
+
+
 def padded_ffn_ref(x: jax.Array, wi: jax.Array, wo: jax.Array,
                    activation: str = "swiglu") -> jax.Array:
     """Padded gated FFN oracle: FFN'(x) of paper Eq. 2.

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.configs.base import (ATTN, MLSTM, MOE, RGLRU, SLIDING, SLSTM,
                                 ModelConfig)
 from repro.core.padding import PaddingPlan
+from repro.kernels import chunk_prefill as CP
 from repro.models import layers as Lyr
 from repro.models import shardhints
 from repro.paged import pool as pp
@@ -105,7 +106,10 @@ def attention_seq(p: Params, x: jax.Array, cfg: ModelConfig,
 def attention_chunk(p: Params, x: jax.Array, cfg: ModelConfig,
                     plan: PaddingPlan, positions: jax.Array,
                     cache: pp.PagedState, window: int = 0,
-                    layout: str = "header_centric"
+                    layout: str = "header_centric",
+                    first_chunk: bool = False,
+                    identity_pages: bool = False,
+                    use_kernel: bool = False
                     ) -> Tuple[jax.Array, pp.PagedState]:
     """Chunk-continuation prefill: queries are the chunk's tokens
     (x: (B,S,d), positions: (B,S) global), keys are the CACHED prefix
@@ -119,19 +123,40 @@ def attention_chunk(p: Params, x: jax.Array, cfg: ModelConfig,
     appear in ascending position order with only exactly-zero masked
     terms between them, which keeps the online-softmax accumulation
     identical to whole-prompt ``attention_seq`` — chunked prefill is
-    bit-exact there (asserted by tests/test_chunked_prefill.py)."""
+    bit-exact there (asserted by tests/test_chunked_prefill.py).
+
+    first_chunk=True (static): the prefix is known-empty, so the gather
+    + concat of an all-invalid prefix is skipped in both paths.
+    use_kernel=True: the fused Pallas kernel walks the paged pool page
+    by page (no dense prefix materialization) and scatters the chunk's
+    K/V in the same pass; shapes the kernel doesn't cover fall back to
+    the jnp path automatically."""
     B, S, d = x.shape
     q, k, v = _project_qkv(p, x, cfg, plan, positions)
-    kk, vv, kv_pos, valid = pp.gather_kv(cache, layout)
-    kk = jnp.concatenate([kk, k], axis=1)
-    vv = jnp.concatenate([vv, v], axis=1)
-    kv_pos = jnp.concatenate([kv_pos, positions], axis=1)
-    valid = jnp.concatenate(
-        [valid, jnp.ones((B, S), dtype=bool)], axis=1)
-    attn = Lyr.chunked_attention(q, kk, vv, positions, kv_pos,
-                                 kv_valid=valid, causal=True,
-                                 window=window)
-    cache = pp.write_chunk(cache, k, v, positions, layout)
+    if use_kernel and CP.chunk_prefill_eligible(
+            cache.pool, S, cache.capacity):
+        pool_c = pp.canonical(cache.pool, layout)
+        attn, pool_c = CP.chunk_prefill_attention(
+            q, k, v, pool_c, cache.page_table, cache.positions, positions,
+            window=window, attend_prefix=not first_chunk)
+        cache = pp.adopt_chunk_pool(cache, pool_c, positions, layout)
+    else:
+        if first_chunk:
+            attn = Lyr.chunked_attention(q, k, v, positions, positions,
+                                         causal=True, window=window)
+        else:
+            kk, vv, kv_pos, valid = pp.gather_kv(
+                cache, layout, identity_pages=identity_pages)
+            kk = jnp.concatenate([kk, k], axis=1)
+            vv = jnp.concatenate([vv, v], axis=1)
+            kv_pos = jnp.concatenate([kv_pos, positions], axis=1)
+            valid = jnp.concatenate(
+                [valid, jnp.ones((B, S), dtype=bool)], axis=1)
+            attn = Lyr.chunked_attention(q, kk, vv, positions, kv_pos,
+                                         kv_valid=valid, causal=True,
+                                         window=window)
+        cache = pp.write_chunk(cache, k, v, positions, layout,
+                               identity_pages=identity_pages)
     out = attn.reshape(B, S, -1) @ p["wo"]
     return out, cache
 
@@ -440,7 +465,10 @@ def apply_block_seq(kind: str, p: Params, cfg: ModelConfig,
 def apply_block_chunk(kind: str, p: Params, cfg: ModelConfig,
                       plan: PaddingPlan, x: jax.Array,
                       positions: jax.Array, cache,
-                      layout: str = "header_centric"):
+                      layout: str = "header_centric",
+                      first_chunk: bool = False,
+                      identity_pages: bool = False,
+                      use_kernel: bool = False):
     """Prefill-chunk forward for one block: like ``apply_block_seq``
     but continuing from per-slot cache state.  x: (B,S,d), positions:
     (B,S) global.  Attention kinds attend over cached prefix + chunk
@@ -453,7 +481,9 @@ def apply_block_chunk(kind: str, p: Params, cfg: ModelConfig,
         h = Lyr.rmsnorm(x, p["ln1"], cfg.norm_eps)
         attn_out, cache = attention_chunk(
             p["attn"], h, cfg, plan, positions, cache,
-            window=_window_of(kind, cfg), layout=layout)
+            window=_window_of(kind, cfg), layout=layout,
+            first_chunk=first_chunk, identity_pages=identity_pages,
+            use_kernel=use_kernel)
         x = x + attn_out
         h = Lyr.rmsnorm(x, p["ln2"], cfg.norm_eps)
         if kind == MOE:

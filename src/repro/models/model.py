@@ -379,7 +379,10 @@ def prefill(params, cfg: ModelConfig, plan: PaddingPlan,
 def prefill_chunk(params, cfg: ModelConfig, plan: PaddingPlan,
                   tokens: jax.Array, start_pos: jax.Array,
                   caches: Dict[str, Any],
-                  layout: str = "header_centric"
+                  layout: str = "header_centric",
+                  first_chunk: bool = False,
+                  identity_pages: bool = False,
+                  use_kernel: bool = False
                   ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Run ONE prefill chunk and fold it into the caches.
 
@@ -415,7 +418,10 @@ def prefill_chunk(params, cfg: ModelConfig, plan: PaddingPlan,
         gcaches = list(xs[len(unit):len(unit) * 2])
         for i, kind in enumerate(unit):
             xc, gcaches[i] = B_chunk(kind, gparams[i], cfg, plan, xc,
-                                     positions, gcaches[i], layout)
+                                     positions, gcaches[i], layout,
+                                     first_chunk=first_chunk,
+                                     identity_pages=identity_pages,
+                                     use_kernel=use_kernel)
         return xc, tuple(gcaches)
 
     xs: Tuple = tuple(params["blocks"]) + tuple(caches["groups"])
@@ -424,7 +430,10 @@ def prefill_chunk(params, cfg: ModelConfig, plan: PaddingPlan,
     new_rem = []
     for i in range(R):
         x, c = B_chunk(unit[i], params["rem"][i], cfg, plan, x,
-                       positions, caches["rem"][i], layout)
+                       positions, caches["rem"][i], layout,
+                       first_chunk=first_chunk,
+                       identity_pages=identity_pages,
+                       use_kernel=use_kernel)
         new_rem.append(c)
 
     out = {"groups": list(new_group_caches), "rem": new_rem}
@@ -600,7 +609,7 @@ def decode_step_layers(layers: List[Dict[str, Any]],
                        positions: jax.Array,
                        layout: str = "header_centric",
                        identity_pages: bool = False,
-                       static_mesh=None
+                       static_mesh=None, on_layer=None
                        ) -> Tuple[jax.Array, List[Dict[str, Any]]]:
     """One decode step over per-layer state; numerically identical to
     ``decode_step`` on the restacked equivalents.
@@ -609,17 +618,23 @@ def decode_step_layers(layers: List[Dict[str, Any]],
     layer coherently on one); layer dicts then carry a ``"mesh"`` tag
     and ``static_mesh`` locates the embed/head params — activations are
     ``device_put`` once per assembly boundary, so a single decode step
-    runs across the mixed state without stalling."""
+    runs across the mixed state without stalling.
+
+    ``on_layer(i)`` (optional) is called after layer ``i``'s compute has
+    been enqueued — the hook a transform session uses to stream the next
+    layer's weights while this one computes (intra-step overlap)."""
     x = static["embed"][tokens][:, None, :]
     pos2 = positions[:, None]
     cur = _assembly(static_mesh)
     new_layers = []
-    for layer in layers:
+    for i, layer in enumerate(layers):
         x, cur = _boundary_put(x, layer.get("mesh"), cur)
         x, c = B.apply_block_decode(layer["kind"], layer["params"], cfg,
                                     plan, x, pos2, layer["cache"], layout,
                                     identity_pages=identity_pages)
         new_layers.append({**layer, "cache": c})
+        if on_layer is not None:
+            on_layer(i)
     x, cur = _boundary_put(x, static_mesh, cur)
     logits = lm_logits(static, cfg, plan, x)[:, 0, :]
     return logits, new_layers
@@ -630,7 +645,10 @@ def prefill_chunk_layers(layers: List[Dict[str, Any]],
                          plan: PaddingPlan, tokens: jax.Array,
                          start_pos: jax.Array, slot_caches: List[Any],
                          layout: str = "header_centric",
-                         static_mesh=None
+                         static_mesh=None,
+                         first_chunk: bool = False,
+                         identity_pages: bool = False,
+                         use_kernel: bool = False
                          ) -> Tuple[jax.Array, List[Any]]:
     """One prefill chunk through per-layer (unstacked) state — the
     mid-transform twin of ``prefill_chunk``, so chunked prefill keeps
@@ -653,7 +671,10 @@ def prefill_chunk_layers(layers: List[Dict[str, Any]],
     for layer, c in zip(layers, slot_caches):
         x, cur = _boundary_put(x, layer.get("mesh"), cur)
         x, c = B.apply_block_chunk(layer["kind"], layer["params"], cfg,
-                                   plan, x, positions, c, layout)
+                                   plan, x, positions, c, layout,
+                                   first_chunk=first_chunk,
+                                   identity_pages=identity_pages,
+                                   use_kernel=use_kernel)
         new_caches.append(c)
     x, cur = _boundary_put(x, static_mesh, cur)
     logits = lm_logits(static, cfg, plan, x[:, -1:, :])

@@ -118,7 +118,8 @@ def write_prefill(state: PagedState, k: jax.Array, v: jax.Array,
 
 def write_chunk(state: PagedState, k: jax.Array, v: jax.Array,
                 positions: jax.Array,
-                storage_layout: str = L.CANONICAL) -> PagedState:
+                storage_layout: str = L.CANONICAL,
+                identity_pages: bool = False) -> PagedState:
     """Write one prefill CHUNK — a contiguous run of prompt tokens
     starting mid-sequence.  k, v: (B, S, kv_slots, head_dim);
     ``positions``: (B, S) the tokens' global positions (traced, so one
@@ -137,14 +138,40 @@ def write_chunk(state: PagedState, k: jax.Array, v: jax.Array,
     cap = state.capacity
     slot = positions % cap                                # (B, S)
     kv = jnp.stack([k, v], axis=3)                        # (B,S,kvs,2,dh)
-    page_idx = state.page_table[
-        jnp.arange(B)[:, None], slot // P]                # (B, S)
-    pool_c = pool_c.at[page_idx, :, :, slot % P, :].set(
-        kv.astype(pool_c.dtype))
+    if identity_pages:
+        # slot-partitioned pools (see gather_kv): batch-aligned scatter
+        # stays local under GSPMD instead of a dynamic page-table gather
+        mps = NP // B
+        pool_b = pool_c.reshape(B, mps, kvs, 2, P, dh)
+        pool_b = pool_b.at[jnp.arange(B)[:, None], slot // P, :, :,
+                           slot % P, :].set(kv.astype(pool_c.dtype))
+        pool_c = pool_b.reshape(NP, kvs, 2, P, dh)
+    else:
+        page_idx = state.page_table[
+            jnp.arange(B)[:, None], slot // P]            # (B, S)
+        pool_c = pool_c.at[page_idx, :, :, slot % P, :].set(
+            kv.astype(pool_c.dtype))
     new_pos = state.positions.at[jnp.arange(B)[:, None], slot].set(
         positions)
     # chunks are contiguous and in order: the last written position + 1
     # is the new sequence length
+    seq_lens = (positions[:, -1] + 1).astype(state.seq_lens.dtype)
+    return PagedState(from_canonical(pool_c, storage_layout),
+                      state.page_table, seq_lens, new_pos)
+
+
+def adopt_chunk_pool(state: PagedState, pool_c: jax.Array,
+                     positions: jax.Array,
+                     storage_layout: str = L.CANONICAL) -> PagedState:
+    """Metadata companion to the fused chunk-prefill kernel: the kernel
+    already scattered the chunk's K/V bytes into ``pool_c`` (canonical
+    view); apply the same positions/seq_lens update ``write_chunk``
+    performs so the resulting state is indistinguishable."""
+    B, S = positions.shape
+    cap = state.capacity
+    slot = positions % cap
+    new_pos = state.positions.at[jnp.arange(B)[:, None], slot].set(
+        positions)
     seq_lens = (positions[:, -1] + 1).astype(state.seq_lens.dtype)
     return PagedState(from_canonical(pool_c, storage_layout),
                       state.page_table, seq_lens, new_pos)

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import itertools
 import time
+from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -78,7 +79,8 @@ class Engine:
                  iid: Optional[int] = None,
                  plan: Optional[PaddingPlan] = None,
                  prefill_policy: Optional[PrefillPolicy] = None,
-                 clock=None):
+                 clock=None,
+                 fused_chunk_kernel: Optional[bool] = None):
         """``plan`` overrides the padding plan; a cluster whose engines
         may MERGE must pass one built for the full device-pool width so
         weight shard boundaries stay page-aligned at every reachable TP
@@ -89,7 +91,14 @@ class Engine:
         TTFT/TPOT/goodput are measured in virtual trace time.  Data-
         plane measurements (transform ``wall_s``, ``StepReport`` spans)
         deliberately stay on the wall clock — they time real device
-        work, not the serving schedule."""
+        work, not the serving schedule.
+
+        ``fused_chunk_kernel`` routes chunk prefills through the fused
+        Pallas paged-attention + scatter kernel
+        (``kernels.chunk_prefill``).  Default (None) enables it on real
+        TPU backends only: off-TPU the kernel runs in interpret mode —
+        correct but slow — and the jnp path keeps CI streams
+        bit-identical to the pre-kernel engine."""
         self.cfg = cfg
         self._clock = clock if clock is not None else time.monotonic
         self.devices = list(devices) if devices else None
@@ -142,18 +151,19 @@ class Engine:
         # chunks (attention KV lives in the slot's pool pages)
         self._prefilling: Dict[int, Dict] = {}
         self._prefill_deferred = 0      # consecutive decode-priority defers
-        # chunk continuation needs causal, non-ring caches: between
-        # chunks, decode iterations for OTHER slots write (masked-out)
-        # filler into the prefilling slot, which a full-attention pool
-        # absorbs (the next chunk re-invalidates it) but a sliding-
-        # window ring cannot — the filler lands on live window keys;
-        # encoder/vision memory is not causal at all.  Such models keep
-        # whole-prompt prefill.
-        self._can_chunk = (
-            cfg.encoder is None and cfg.vision is None
-            and not any(
-                0 < self._block_window(k) < self.max_seq_alloc
-                for k in set(cfg.pattern)))
+        # chunk continuation needs causal caches (encoder/vision memory
+        # is not causal; such models keep whole-prompt prefill).
+        # Sliding-window RING caches chunk too: ``_pin_prefill_cursors``
+        # confines decode filler to the single slot the next chunk
+        # overwrites, and the one prefix key that slot evicts (position
+        # ``done - capacity``) is out-of-window for every remaining
+        # query (capacity >= window), so chunked == whole-prompt streams
+        # — provided each chunk fits the smallest ring (``_begin_prefill``
+        # splits the policy's chunks to the min attention capacity).
+        self._can_chunk = cfg.encoder is None and cfg.vision is None
+        self.fused_chunk_kernel = (
+            jax.default_backend() == "tpu" if fused_chunk_kernel is None
+            else bool(fused_chunk_kernel))
         self.steps = 0
         self.tp = 1
         self.tp_pending: Optional[int] = None
@@ -191,13 +201,21 @@ class Engine:
 
         # chunked-prefill hot path: ONE jit whose trace cache is keyed
         # by (batch, chunk_len) shape — start_pos is traced, so every
-        # chunk of the same shape reuses the compile.  The key set
-        # mirrors jit's cache for observability (hits asserted in
-        # tests/test_chunked_prefill.py).
-        @jax.jit
-        def _chunk(params, tokens, start_pos, sub):
+        # chunk of the same shape reuses the compile; ``first_chunk``
+        # is STATIC (empty-prefix chunks skip the prefix walk/gather
+        # entirely).  The key set mirrors jit's cache for observability
+        # (hits asserted in tests/test_chunked_prefill.py).  The slot
+        # views are extracted with fresh identity page tables, so the
+        # GSPMD-local identity gather/scatter path is always valid here.
+        use_kernel_c = self.fused_chunk_kernel
+
+        @partial(jax.jit, static_argnames=("first_chunk",))
+        def _chunk(params, tokens, start_pos, sub, first_chunk=False):
             return M.prefill_chunk(params, cfgc, planc, tokens,
-                                   start_pos, sub, layoutc)
+                                   start_pos, sub, layoutc,
+                                   first_chunk=first_chunk,
+                                   identity_pages=True,
+                                   use_kernel=use_kernel_c)
 
         self._prefill_chunk_jit = _chunk
 
@@ -219,6 +237,22 @@ class Engine:
     def _block_window(self, kind: str) -> int:
         from repro.models.blocks import _window_of
         return _window_of(kind, self.cfg)
+
+    def _min_chunk_cap(self) -> int:
+        """Largest chunk a single prefill call may carry: the smallest
+        attention-cache capacity across block kinds (a ring's page-
+        rounded window; ``max_seq_alloc`` for full attention).  A chunk
+        longer than a ring would scatter one slot twice in a single
+        write — and its own oldest queries would lose in-window keys."""
+        from repro.configs.base import ATTN, MOE, SLIDING
+        caps = []
+        for k in set(self.cfg.pattern):
+            if k in (ATTN, SLIDING, MOE):
+                w = self._block_window(k)
+                cap = (self.max_seq_alloc if w == 0
+                       else min(self.max_seq_alloc, w))
+                caps.append(-(-cap // self.page_tokens) * self.page_tokens)
+        return min(caps) if caps else self.max_seq_alloc
 
     # -- mesh helpers (mesh placement only) ------------------------------
     def _make_mesh(self, tp: int, devices=None):
@@ -412,6 +446,15 @@ class Engine:
             "step_drifts": [abs(r.seconds - r.modeled_s) / r.modeled_s
                             for r in session.reports
                             if r.modeled_s > 0.0],
+            # fraction of the session's transfer windows hidden under
+            # serving compute (per-layer intra-step streaming): 1 -
+            # exposed/measured, clamped — the trajectory's informational
+            # weight_stream_overlap_frac column
+            "overlap_frac": (
+                max(0.0, 1.0 - (sum(r.blocked_s for r in session.reports)
+                                / max(sum(r.seconds
+                                          for r in session.reports),
+                                      1e-12)))),
         })
         self._session_cross = False
         if self._pending_devices is not None:
@@ -660,6 +703,14 @@ class Engine:
         chunks = (self.prefill_policy.chunk_sizes(len(req.prompt),
                                                   self.page_tokens)
                   if self._can_chunk else [len(req.prompt)])
+        if len(chunks) > 1:
+            # ring-cache models: no chunk may exceed the smallest
+            # attention capacity (the cap is a page multiple, so the
+            # page-boundary chunking invariant survives the split)
+            cap = self._min_chunk_cap()
+            chunks = [s for c in chunks
+                      for s in ([cap] * (c // cap) + ([c % cap] if c % cap
+                                                      else []))]
         # the recurrent-state carry between chunks starts from the
         # freshly-initialized cache (== the sequence kernels' state=None
         # init); single-chunk prefills never read it
@@ -767,17 +818,19 @@ class Engine:
             sub = self._sanitize_sub(self._extract_slot_cache(slot),
                                      prog["rec"], start)
             # mirror of jit's trace-cache key: chunk shape, pool
-            # allocation, AND the mesh factorization — a transform
-            # re-commits params/caches to new shardings, which retraces
+            # allocation, the static first-chunk flag, AND the mesh
+            # factorization — a transform re-commits params/caches to
+            # new shardings, which retraces
             key = (tokens.shape[0], tokens.shape[1], self.max_seq_alloc,
-                   self.tp, self.W)
+                   self.tp, self.W, start == 0)
             if key in self._chunk_keys:
                 self.chunk_cache_hits += 1
             else:
                 self._chunk_keys.add(key)
                 self.chunk_cache_misses += 1
             logits, sub = self._prefill_chunk_jit(self.params, tokens,
-                                                  start_a, sub)
+                                                  start_a, sub,
+                                                  first_chunk=start == 0)
             self._adopt_slot_cache(sub, slot, start + size)
             prog["rec"] = self._strip_pools(sub)
         prog["done"] += size
@@ -809,7 +862,9 @@ class Engine:
                                             layer.get("mesh")))
         logits, new_subs = M.prefill_chunk_layers(
             s.layers, s.static, self.cfg, self.plan, tokens, start_a,
-            subs, self.layout, static_mesh=s.static_mesh)
+            subs, self.layout, static_mesh=s.static_mesh,
+            first_chunk=start == 0, identity_pages=True,
+            use_kernel=self.fused_chunk_kernel)
         for layer, sub in zip(s.layers, new_subs):
             layer["cache"] = self._adopt_slot_tree(layer["cache"], sub,
                                                    slot)
@@ -885,10 +940,11 @@ class Engine:
         from repro.paged.pool import PagedState
 
         if isinstance(dst, PagedState):
-            # NOT .capacity: stacked group caches carry a leading
-            # layer axis, so the token axis is positions.shape[-1]
-            cap = dst.positions.shape[-1]
-            keep = jnp.arange(cap, dtype=jnp.int32) < done
+            # keep exactly the slots holding real prefix tokens: stored
+            # position in [0, done).  Slot-INDEX masking (arange < done)
+            # would be wrong for ring caches, where done may exceed the
+            # capacity and prefix positions wrap around the slots.
+            keep = (dst.positions >= 0) & (dst.positions < done)
             pos = jnp.where(keep, dst.positions, -1)
             seq = jnp.full_like(dst.seq_lens, done)
             return PagedState(dst.pool, dst.page_table, seq, pos)
@@ -1098,7 +1154,13 @@ class Engine:
             if s.done:
                 self._finish_transform()
             else:
-                s.dispatch_step()
+                # stage the next step and prime ONE layer group; the
+                # decode iteration's layer walk streams the rest
+                # (``on_decode_layer``: layer L's weights move while
+                # layer L-1 computes), with a drain after the walk for
+                # whatever the walk couldn't safely overlap
+                s.dispatch_step_begin()
+                s.dispatch_step_advance()
         in_session = self._session is not None
         cross_session = in_session and self._session_cross
         # policy-driven prefill work (admissions + chunk advancement);
@@ -1156,9 +1218,14 @@ class Engine:
         otherwise."""
         if self._session is not None:
             s = self._session
-            logits, s.layers = M.decode_step_layers(
+            logits, new_layers = M.decode_step_layers(
                 s.layers, s.static, self.cfg, self.plan, tokens,
-                positions, self.layout, static_mesh=s.static_mesh)
+                positions, self.layout, static_mesh=s.static_mesh,
+                on_layer=s.on_decode_layer)
+            s.layers = new_layers
+            # groups the walk couldn't overlap (their layer was already
+            # walked) dispatch now, against the walk's updated layers
+            s.dispatch_step_drain()
             return logits
         logits, self.caches = self._decode(self.params, self.caches,
                                            tokens, positions)

@@ -200,6 +200,40 @@ def test_engine_chunked_concurrent_decodes_match_reference():
             got.rid, want.generated, got.generated)
 
 
+def test_engine_chunked_stream_matches_whole_prompt_ring_cache():
+    """ISSUE-7 satellite: sliding-window (ring-cache) models take the
+    chunked path too.  Chunks are split at the smallest ring capacity
+    (`Engine._min_chunk_cap`) so no chunk can wrap past live window
+    keys, and the decode-filler cursor only ever evicts keys already
+    out-of-window — the chunked streams equal whole-prompt prefill even
+    when the prompt is 2.5x the window."""
+    from repro.core.scheduler import PrefillPolicy
+    from repro.serving.engine import Engine
+    from repro.serving.request import ServeRequest
+
+    cfg = dataclasses.replace(_cfg(), attention="sliding", window=16)
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, size=40).tolist()
+
+    def run(policy):
+        eng = Engine(cfg, max_batch=3, max_seq=64, page_tokens=8,
+                     prefill_policy=policy)
+        assert eng._can_chunk, "ring caches must not opt out of chunking"
+        if policy is not None:
+            # the ring cap really is the binding constraint here
+            assert eng._min_chunk_cap() == 16
+        r = ServeRequest(rid=1, prompt=list(prompt), max_new_tokens=8)
+        eng.submit(r)
+        eng.run_until_done(500)
+        return r.generated
+
+    whole = run(None)
+    for budget in (16, 24):          # 24 forces the ring-cap re-split
+        pol = PrefillPolicy(token_budget=budget, mode="mixed",
+                            long_threshold=32, order="sjf")
+        assert run(pol) == whole, budget
+
+
 def test_partial_slot_is_page_aligned_during_prefill():
     """The mid-prefill invariant the data plane relies on: after every
     chunk but the last, the slot's written prefix is a whole number of
@@ -288,12 +322,14 @@ def test_chunk_path_jit_cache_hits_after_warmup():
     pol = PrefillPolicy(token_budget=16, mode="prefill", long_threshold=32)
     eng = _mk_engine(pol)
     mk = lambda rid: ServeRequest(rid=rid, prompt=rng.integers(
-        0, cfg.vocab_size, size=40).tolist(), max_new_tokens=2)
+        0, cfg.vocab_size, size=56).tolist(), max_new_tokens=2)
     eng.submit(mk(0))
     eng.run_until_done(500)
     warm_misses = eng.chunk_cache_misses
-    assert warm_misses > 0                     # the [16, 16, 8] plan
-    assert eng.chunk_cache_hits >= 1           # 2nd 16-token chunk hits
+    assert warm_misses > 0                     # the [16, 16, 16, 8] plan
+    # 3rd 16-token chunk hits (the 1st compiles the static first-chunk
+    # variant, the 2nd the continuation variant)
+    assert eng.chunk_cache_hits >= 1
     eng.submit(mk(1))
     eng.run_until_done(500)
     # the second request's chunks are all warm shapes: no new traces

@@ -275,6 +275,66 @@ def test_engine_live_transform_mid_decode():
 
 
 @pytest.mark.slow
+def test_transform_streams_weights_per_decode_layer():
+    """ISSUE-7 prong 2: a live transform streams each schedule step's
+    transfers layer by layer, interleaved with the decode iteration's
+    layer walk.  Every StepReport carries per-layer dispatch spans that
+    exactly cover the step's ops, the final step ships the static
+    params as their own span, and the session's transform_log record
+    surfaces the overlap fraction."""
+    out = run_py("""
+        import dataclasses
+        import jax
+        from repro.configs import get_config
+        from repro.core.padding import make_plan
+        from repro.models import model as M
+        from repro.serving.engine import Engine
+        from repro.serving.request import ServeRequest
+
+        cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                                  dtype="float32")
+        devs = jax.devices()[:2]
+        host_params = M.init_params(jax.random.PRNGKey(11), cfg,
+                                    make_plan(cfg, 2, mode="page"))
+        a = Engine(cfg, params=host_params, max_batch=2, max_seq=64,
+                   page_tokens=16, devices=devs)
+        reqs = [ServeRequest(rid=i, prompt=list(range(5 + i, 21 + i)),
+                             max_new_tokens=24) for i in range(2)]
+        for r in reqs: a.submit(r)
+        for _ in range(6): a.step()
+        assert all(r.slot is not None for r in reqs)
+        n = a.transform(2)
+        assert n > 1                  # the schedule really staged
+        while a.transforming:
+            a.step()                  # decode runs UNDER the transfers
+        a.run_until_done()
+
+        reps = a.transform_reports
+        assert len(reps) == n
+        for r in reps:
+            assert r.layer_spans, r
+            assert {s[0] for s in r.layer_spans if s[0] >= 0} == {
+                o.layer for o in r.ops}
+            for layer, comps, start_rel, dur in r.layer_spans:
+                assert comps and start_rel >= 0.0 and dur >= 0.0
+        # one span per layer GROUP: a layer's mlp+kv ops share a span
+        for r in reps:
+            layers = [s[0] for s in r.layer_spans]
+            assert len(layers) == len(set(layers))
+        # static params ride the FINAL step as their own span
+        assert any(s[0] == -1 and s[1] == ("static",)
+                   for s in reps[-1].layer_spans)
+        assert not any(s[0] == -1 for r in reps[:-1]
+                       for s in r.layer_spans)
+
+        rec = a.transform_log[-1]
+        assert 0.0 <= rec["overlap_frac"] <= 1.0, rec
+        print("SPANS_OK")
+    """)
+    assert "SPANS_OK" in out
+
+
+@pytest.mark.slow
 def test_transformation_faithful_mode_mlp_only():
     """paper-faithful transform_attn_weights=False: attention weights stay
     replicated, transformation still exact."""
