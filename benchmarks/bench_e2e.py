@@ -264,6 +264,121 @@ def run_merge_smoke() -> List[str]:
             f"{m['merge_wall_s']:.2f},{wall:.1f}"]
 
 
+def run_spill_smoke() -> List[str]:
+    """Live KV-spill smoke (the capacity ladder's cheapest rung): a
+    request that busts one width-2 engine's pool ceiling is served with
+    NO transformation — a neighbor engine hosts the overflow pages
+    (``Engine.host_spilled`` reservation + ``spill_slot`` page
+    migration) and the guest's decode attention gathers across both
+    pools.  The zero-drain contract is asserted per step: while the
+    spill region is open, BOTH engines emit tokens every step (the
+    guest through the distributed read path, the host around its
+    hosting reservation), nobody parks, and no merge fires."""
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.scheduler import (GygesScheduler, PrefillPolicy,
+                                      ScaleUp, SchedulerConfig, Spill)
+    from repro.serving.cluster import ClusterEngine
+    from repro.serving.request import ServeRequest
+
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    devs = jax.devices()
+    if len(devs) < 4:
+        return ["ladder.spill-smoke,SKIPPED (needs >= 4 devices)"]
+    Q = 16
+    policy = PrefillPolicy(token_budget=Q, mode="mixed",
+                           long_threshold=Q, order="sjf")
+    sched = GygesScheduler(SchedulerConfig(
+        long_threshold=Q, target_tp=2, spill=True, spill_slack=2.0))
+    cluster = ClusterEngine(cfg, devs[:4], n_instances=2, max_batch=4,
+                            max_seq=2 * Q, page_tokens=Q, dwell_steps=4,
+                            scheduler=sched, prefill_policy=policy)
+    for e in cluster.engines:
+        e.transform(1)          # serve shorts at TP1 (ceiling = Q)
+    cluster.run(max_steps=2000)
+    assert not cluster.actions
+
+    rng = np.random.default_rng(0)
+    nxt = [100]
+
+    def short():
+        nxt[0] += 1
+        return ServeRequest(rid=nxt[0], prompt=rng.integers(
+            0, cfg.vocab_size, size=4).tolist(), max_new_tokens=12)
+
+    t0 = time.perf_counter()
+    by_eng = {e.iid: [short()] for e in cluster.engines}
+    for reqs in by_eng.values():
+        cluster.submit(reqs[0])
+    cluster.step()
+    # total 33: over the TP1 ceiling (16), over the in-place width-2
+    # ceiling (32), inside the spill bound (overflow 17 <= 2.0 * 16)
+    long_r = ServeRequest(rid=99, prompt=rng.integers(
+        0, cfg.vocab_size, size=17).tolist(), max_new_tokens=16)
+    cluster.submit(long_r)
+    spills = [a for a in cluster.actions if isinstance(a, Spill)]
+    assert spills, f"long request did not spill: {cluster.actions}"
+    guest = cluster._engine(spills[0].iid)
+    host = cluster._engine(spills[0].host_iid)
+    assert cluster.partition.spills(), "no open spill region"
+
+    def emitted():
+        return {e.iid: sum(len(r.generated) for r in by_eng[e.iid])
+                + (len(long_r.generated) if e is guest else 0)
+                for e in (guest, host)}
+
+    # serve through the spill: both engines must emit EVERY step while
+    # the region is open (topped-up shorts keep both decoding)
+    stalls = {guest.iid: 0, host.iid: 0}
+    window = 0
+    before = emitted()
+    for _ in range(4000):
+        if long_r.finished:
+            break
+        for e in (guest, host):
+            if all(r.finished or len(r.generated) >= 8
+                   for r in by_eng[e.iid]):
+                r = short()
+                by_eng[e.iid].append(r)
+                e.submit(r)
+        cluster.step()
+        window += 1
+        after = emitted()
+        for iid in stalls:
+            if after[iid] <= before[iid]:
+                stalls[iid] += 1
+        before = after
+    assert long_r.finished, "spilled request did not finish"
+    assert stalls == {guest.iid: 0, host.iid: 0}, (
+        f"an engine stalled during the open spill region: {stalls} "
+        f"over {window} steps")
+    m = cluster.run(max_steps=4000)     # drain the top-up shorts
+    assert not cluster.partition.spills(), "spill region never closed"
+    assert not any(isinstance(a, ScaleUp) and a.donor_iids
+                   for a in cluster.actions), "spill smoke merged"
+    assert all(not e.parked for e in cluster.engines)
+    cluster.partition.check_invariants()
+    assert m["spill_pages"] > 0
+    wall = time.perf_counter() - t0
+    n_shorts = sum(len(v) for v in by_eng.values())
+    return ["ladder.spill-smoke,arch,devices,guest_ceiling_tok,"
+            "long_total_tok,spills,spill_pages,partial_merges,"
+            "window_steps,guest_stall_steps,host_stall_steps,shorts,"
+            "finished,total,wall_s",
+            f"ladder.spill-smoke,{cfg.name},4,{guest.max_seq()},"
+            f"{long_r.total_tokens},{len(spills)},"
+            f"{m['spill_pages']:.0f},{m['partial_merges']:.0f},"
+            f"{window},{stalls[guest.iid]},{stalls[host.iid]},"
+            f"{n_shorts},{m['finished']},{m['total']},{wall:.1f}"]
+
+
 def replay_goodput_sim(sched: str = "gyges", pressure: bool = False,
                        duration: float = 600.0,
                        seed: int = 0) -> Dict[str, float]:
@@ -548,6 +663,11 @@ def main():
                     help="long-prompt burst over decoding background: "
                          "whole-prompt vs chunked prefill policies "
                          "(background TTFT p50/p99)")
+    ap.add_argument("--spill-smoke", action="store_true",
+                    help="live KV-spill scenario (a pool-busting "
+                         "request is served across two engines' pools "
+                         "with no transformation; per-step zero-drain "
+                         "asserted on both engines)")
     ap.add_argument("--replay-smoke", action="store_true",
                     help="event-driven replay: production-trace goodput "
                          "sweep (rr/llf/gyges, pressure-aware vs blind) "
@@ -556,6 +676,8 @@ def main():
     args = ap.parse_args()
     if args.merge_smoke:
         rows = run_merge_smoke()
+    elif args.spill_smoke:
+        rows = run_spill_smoke()
     elif args.burst:
         rows = run_burst()
     elif args.replay_smoke:

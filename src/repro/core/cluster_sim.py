@@ -24,9 +24,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, Hardware, H20
 from repro.core.events import SLO, replay
+from repro.core.partition import PoolPartitionManager
 from repro.core.scheduler import (Action, BaseScheduler, GygesScheduler,
                                   PrefillPolicy, ScaleDown, ScaleUp,
-                                  SchedulerConfig)
+                                  SchedulerConfig, Spill)
 from repro.serving.metrics import summarize
 from repro.serving.request import Request
 
@@ -57,7 +58,8 @@ class SimInstance:
     def __init__(self, tp: int, cm: CostModel, method: str,
                  iid: Optional[int] = None,
                  prefill_policy: Optional[PrefillPolicy] = None,
-                 seq_quantum: Optional[int] = None, slots: int = 1):
+                 seq_quantum: Optional[int] = None, slots: int = 1,
+                 width: Optional[int] = None):
         """``prefill_policy`` is the SAME ``core.scheduler.PrefillPolicy``
         the live engine consumes — the tick model runs its decisions
         (``tokens_over_steps`` / ``service_order`` / ``decode_share``)
@@ -69,6 +71,15 @@ class SimInstance:
         ``max_batch`` for the KV-capacity denominator."""
         self.iid = next(SimInstance._ids) if iid is None else iid
         self.tp = tp
+        # devices this instance spans; legacy sims run width == tp (an
+        # instance IS its parallel degree), the live-parity geometries
+        # decouple them (a width-2 engine serving at TP1 can grow in
+        # place or loan its idle device to a partial merge)
+        self._width = width if width is not None else tp
+        # tokens of a neighbor's overflow KV hosted in this instance's
+        # pool (whole reserved slots — the sim mirror of
+        # Engine.host_spilled)
+        self.hosted_tokens = 0.0
         self.cm = cm
         self.method = method
         self.prefill_policy = prefill_policy
@@ -103,15 +114,16 @@ class SimInstance:
 
     @property
     def max_tp(self) -> int:
-        # sim instances grow by MERGING TP1 neighbours (Cluster.
-        # execute_scale_up), never in place — decide_scale_up skips them
-        return self.tp
+        # an instance can widen in place up to the devices it spans
+        # (live Engine.max_tp == W).  Legacy sims run width == tp, so
+        # they still never grow in place — decide_scale_up skips them.
+        return self._width
 
     @property
     def width(self) -> int:
-        # a TP-n sim instance spans n GPUs: what it contributes to a
-        # merge (InstanceView.width)
-        return self.tp
+        # GPUs this instance spans: what it contributes to a merge
+        # (InstanceView.width)
+        return self._width
 
     def kv_capacity(self) -> int:
         if self.seq_quantum is not None:
@@ -122,7 +134,8 @@ class SimInstance:
         if self._kv_cache is None:
             self._kv_cache = (
                 sum(r.in_len + r.tokens_done for r in self.active)
-                + sum(r.in_len for r in self.prefill_q))
+                + sum(r.in_len for r in self.prefill_q)
+                + self.hosted_tokens)
         return self._kv_cache
 
     def dirty(self) -> None:
@@ -256,7 +269,9 @@ class Cluster:
                  static_layout: Optional[List[int]] = None,
                  target_tp: int = 4,
                  prefill_policy: Optional[PrefillPolicy] = None,
-                 seq_quantum: Optional[int] = None, max_batch: int = 1):
+                 seq_quantum: Optional[int] = None, max_batch: int = 1,
+                 widths: Optional[List[int]] = None,
+                 page_tokens: int = 16):
         """``prefill_policy`` / ``seq_quantum`` / ``max_batch`` mirror
         the live ``ClusterEngine`` configuration (see ``SimInstance``):
         with them set, the sim serves the same chunked-prefill policy
@@ -276,12 +291,30 @@ class Cluster:
         self.seq_quantum = seq_quantum
         self.max_batch = max_batch
         self.static = static_layout is not None
+        self.page_tokens = page_tokens
         self.hosts: List[List[SimInstance]] = []
         iid = itertools.count()
         for _ in range(n_hosts):
-            tps = static_layout if static_layout else [1] * gpus_per_host
-            self.hosts.append([self._new_instance(tp, next(iid))
-                               for tp in tps])
+            tps = static_layout if static_layout else (
+                [1] * (len(widths) if widths else gpus_per_host))
+            ws = widths if widths else [None] * len(tps)
+            self.hosts.append([self._new_instance(tp, next(iid), width=w)
+                               for tp, w in zip(tps, ws)])
+        # the shared pool-partition ledger (core.partition): sim devices
+        # are synthetic ints.  Mutated on the identity-preserving
+        # merge/split/loan/spill paths; an identity-LOSING split (a
+        # static tp>1 instance decomposing into fresh iids) leaves the
+        # old registration holding its devices — the ledger stays
+        # single-owner, it just no longer names the fresh instances.
+        self.partition = PoolPartitionManager()
+        dev = itertools.count()
+        for h in self.hosts:
+            for i in h:
+                self.partition.register(
+                    i.iid, [next(dev) for _ in range(i.width)])
+        self.spill_pages = 0
+        self.partial_merges = 0
+        self._req_by_rid: Dict[int, Request] = {}
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
         self.all_requests: List[Request] = []
@@ -298,12 +331,12 @@ class Cluster:
         self.timeline: List[Tuple[float, float]] = []  # (t, cluster tps)
         self._now = 0.0                # virtual clock of the last advance
 
-    def _new_instance(self, tp: int, iid: Optional[int] = None
-                      ) -> SimInstance:
+    def _new_instance(self, tp: int, iid: Optional[int] = None,
+                      width: Optional[int] = None) -> SimInstance:
         return SimInstance(tp, self.cm, self.method, iid=iid,
                            prefill_policy=self.prefill_policy,
                            seq_quantum=self.seq_quantum,
-                           slots=self.max_batch)
+                           slots=self.max_batch, width=width)
 
     def _session_window(self, tp: int) -> float:
         """Wall time a §4.3 transform SESSION occupies: ~2 schedule
@@ -346,14 +379,28 @@ class Cluster:
         if target_iid is None:
             target_iid = max(members,
                              key=lambda i: i.kv_used_fraction()).iid
-        merged = self._new_instance(sum(m.tp for m in members),
+        # a merge spans the members' summed WIDTH (== summed tp for
+        # legacy width==tp sims; wider when members had idle devices)
+        merged = self._new_instance(sum(m.width for m in members),
                                     iid=target_iid)
         merged.member_iids = [target_iid] + [
             m.iid for m in members if m.iid != target_iid]
+        registered = set(self.partition.partitions())
         for m in members:
             merged.active += m.active
             merged.prefill_q += m.prefill_q
             host.remove(m)
+            # ledger: donors lend their whole width and park (the live
+            # plane's park/adopt sequence); identity-losing instances
+            # (fresh iids from a static split) are not registered
+            if m.iid != target_iid and m.iid in registered \
+                    and target_iid in registered:
+                devs = self.partition.held_devices(m.iid)
+                if devs:
+                    loan = self.partition.lend(m.iid, target_iid, devs,
+                                               whole=True)
+                    self.partition.park(m.iid)
+                    self.partition.adopt(target_iid, loan)
         merged.dirty()
         dur = self.cm.transform_time(self.method) \
             * TRANSFORM_TIME_FACTOR[self.method]
@@ -391,8 +438,12 @@ class Cluster:
             host = self._host_of(seed)
             act = self.scheduler.decide_seed_scale_up(
                 sorted(host, key=lambda i: i.iid), seed, total_tokens)
-            if act is None or not act.donor_iids:
-                return None  # sim instances cannot grow in place
+            if act is None:
+                return None
+            if not act.donor_iids:
+                # width > tp seeds grow in place (live Engine.transform);
+                # legacy width==tp sims never reach here
+                return self._execute_grow(act, now)
             chosen = {act.iid, *act.donor_iids}
             members = [i for i in host if i.iid in chosen]
             return self._merge_members(host, members, now,
@@ -415,18 +466,188 @@ class Cluster:
         return self._merge_members(host, members, now,
                                    target_iid=target_iid)
 
+    # ---- capacity ladder (spill < partial merge < full merge) ------------
+
+    def _execute_grow(self, act: ScaleUp, now: float
+                      ) -> Optional[SimInstance]:
+        """In-place growth: a width>tp instance widens onto its own
+        devices (live ``Engine.transform(tp_to)``); no ledger motion."""
+        inst = next((i for i in self.instances if i.iid == act.iid), None)
+        if inst is None or act.tp_to > inst.width:
+            return None
+        dur = self.cm.transform_time(self.method) \
+            * TRANSFORM_TIME_FACTOR[self.method]
+        inst.tp = act.tp_to
+        inst.transform_until = now + dur
+        inst.session_until = now + max(dur, self._session_window(inst.tp))
+        inst.n_transforms += 1
+        self.n_transforms += 1
+        self.transform_log.append({"wall_s": dur, "measured_s": dur,
+                                   "modeled_s": dur, "cross": False})
+        self.actions.append(act)
+        self._update_reserve()
+        return inst
+
+    def _execute_partial(self, act: ScaleUp, now: float
+                         ) -> Optional[SimInstance]:
+        """Partial merge: donors shed a fraction of their devices (they
+        keep serving at reduced width, nothing parks, no KV moves) and
+        the target widens onto the loaned devices.  The live plane runs
+        this in two phases (donor shrink sessions drain, then the
+        target adopts); the sim executes atomically at the modeled cost
+        — parity is at the decision/action level."""
+        by_iid = {i.iid: i for i in self.instances}
+        target = by_iid.get(act.iid)
+        if target is None or target.tp != 1:
+            return None
+        dur = self.cm.transform_time(self.method) \
+            * TRANSFORM_TIME_FACTOR[self.method]
+        # only the loaned fraction of the widened pool re-shards
+        dur *= sum(act.donor_devices) / max(act.tp_to, 1)
+        for iid, n in zip(act.donor_iids, act.donor_devices):
+            d = by_iid[iid]
+            held = self.partition.held_devices(iid)
+            loan = self.partition.lend(iid, target.iid, held[-n:],
+                                       whole=False)
+            self.partition.adopt(target.iid, loan)
+            d._width -= n
+            d.tp = min(d.tp, d._width)
+            d.transform_until = now + dur
+            d.session_until = now + max(dur, self._session_window(d.tp))
+            d.dirty()
+        target._width += sum(act.donor_devices)
+        target.tp = act.tp_to
+        target.transform_until = now + dur
+        target.session_until = now + max(dur,
+                                         self._session_window(act.tp_to))
+        target.n_transforms += 1
+        target.dirty()
+        self.n_transforms += 1
+        self.partial_merges += 1
+        self.transform_log.append({"wall_s": dur, "measured_s": dur,
+                                   "modeled_s": dur, "cross": True})
+        self.actions.append(act)
+        self._update_reserve()
+        return target
+
+    def _execute_spill(self, act: Spill, req: Request, now: float) -> bool:
+        """KV spill: the host reserves whole slots for the overflow and
+        the guest serves the request across the distributed pool — no
+        transformation at all.  Returns False when the host cannot
+        grant the reservation (the caller falls down the ladder)."""
+        by_iid = {i.iid: i for i in self.instances}
+        guest, host = by_iid.get(act.iid), by_iid.get(act.host_iid)
+        if guest is None or host is None or guest is host:
+            return False
+        slots = -(-act.tokens // max(host.max_seq(), 1))
+        grant = slots * host.max_seq()
+        if host.kv_free_tokens() < grant:
+            return False
+        pages = -(-act.tokens // self.page_tokens)
+        self.partition.open_spill(guest.iid, host.iid, req.rid, pages,
+                                  tuple(range(slots)), tokens=grant)
+        host.hosted_tokens += grant
+        host.dirty()
+        self.placements[req.rid] = guest.iid
+        guest.prefill_q.append(req)
+        guest.dirty()
+        self.actions.append(act)
+        self.spill_pages += pages
+        self._update_reserve()
+        return True
+
+    def _place_ladder(self, req: Request, total: int, now: float) -> bool:
+        """Mirror of the live plane's capacity ladder (the tail of
+        ``ClusterEngine._place``): ask ``decide_scale_up`` for the
+        cheapest rung and execute it — in-place growth, spill, partial
+        merge, or full merge — falling one rung down when a spill grant
+        fails.  Only reached when the ladder is opted into
+        (``cfg.spill`` / ``cfg.partial_merge``), so legacy sims never
+        enter."""
+        spill_parties = {r.guest for r in self.partition.spills().values()}
+        spill_parties |= {r.host for r in self.partition.spills().values()}
+        for h in self.hosts:
+            insts = [i for i in sorted(h, key=lambda i: i.iid)
+                     if i.iid not in spill_parties
+                     and now >= max(i.transform_until, i.session_until)]
+            act = self.scheduler.decide_scale_up(insts, req.in_len,
+                                                 req.out_len)
+            while act is not None:
+                if isinstance(act, Spill):
+                    if self._execute_spill(act, req, now):
+                        return True
+                    act = (self.scheduler.decide_partial_merge(insts,
+                                                               total)
+                           or self.scheduler.decide_merge(insts, total))
+                    continue
+                if act.donor_devices:
+                    inst = self._execute_partial(act, now)
+                elif act.donor_iids:
+                    members = [i for i in h
+                               if i.iid in {act.iid, *act.donor_iids}]
+                    inst = self._merge_members(h, members, now,
+                                               target_iid=act.iid)
+                else:
+                    inst = self._execute_grow(act, now)
+                if inst is None:
+                    return False
+                self.placements[req.rid] = inst.iid
+                inst.prefill_q.append(req)
+                inst.dirty()
+                return True
+        return False
+
     def execute_scale_down(self, inst: SimInstance, now: float) -> None:
         host = self._host_of(inst)
         tp1_cap = inst.max_seq_at(1)
         if any(r.in_len + r.out_len > tp1_cap
                for r in inst.active + inst.prefill_q):
             return
+        loans = self.partition.loans_to(inst.iid)
+        if loans and not any(ln.whole for ln in loans):
+            # partial-merge target: shed the loaned devices back to the
+            # still-serving donors (they widen in place); nobody parks
+            # or revives and the target keeps its own work
+            by_iid = {i.iid: i for i in self.instances}
+            dur = self.cm.transform_time(self.method) \
+                * TRANSFORM_TIME_FACTOR[self.method]
+            for ln in list(loans):
+                d = by_iid[ln.lender]
+                d._width += len(self.partition.return_loan(ln))
+                d.transform_until = now + dur
+                d.session_until = now + max(dur,
+                                            self._session_window(d.tp))
+                d.dirty()
+            inst._width = len(self.partition.held_devices(inst.iid))
+            inst.tp = 1
+            inst.transform_until = now + dur
+            inst.session_until = now + max(dur, self._session_window(1))
+            self.n_transforms += 1
+            self.transform_log.append({"wall_s": dur, "measured_s": dur,
+                                       "modeled_s": dur, "cross": True})
+            self.actions.append(ScaleDown(iid=inst.iid, tp_to=1,
+                                          reason="low load"))
+            self._update_reserve()
+            return
+        # whole-engine loans: return each and revive the parked lender
+        # (live _finalize_releases parity); partial loans mixed in also
+        # return (their lenders widen silently)
+        for ln in list(loans):
+            self.partition.return_loan(ln)
+            if ln.whole:
+                self.partition.revive(ln.lender)
         host.remove(inst)
         # split restores the merge members' identities (live parity:
-        # the target shrinks in place, the parked donors revive)
-        iids = (list(inst.member_iids) if len(inst.member_iids) == inst.tp
+        # the target shrinks in place, the parked donors revive), each
+        # on its registered home width
+        iids = (list(inst.member_iids) if inst.member_iids
                 else [None] * inst.tp)
-        parts = [self._new_instance(1, iid=i) for i in iids]
+        registered = set(self.partition.partitions())
+        parts = [self._new_instance(
+            1, iid=i,
+            width=(len(self.partition.home_devices(i))
+                   if i in registered else None))
+            for i in iids]
         for j, r in enumerate(inst.active):
             parts[j % len(parts)].active.append(r)
         for j, r in enumerate(inst.prefill_q):
@@ -475,6 +696,12 @@ class Cluster:
                 # scale up around itself (paper Fig. 13 pathology)
                 inst = self.execute_scale_up(now, total, seed=inst)
             if inst is None:
+                scfg = getattr(self.scheduler, "cfg", None)
+                if scfg is not None and (getattr(scfg, "spill", False)
+                                         or getattr(scfg, "partial_merge",
+                                                    False)):
+                    # opted-in capacity ladder (live ``_place`` tail)
+                    return self._place_ladder(req, total, now)
                 inst = self.execute_scale_up(now, total)  # Alg1 l.15
             if inst is not None and (total > inst.max_seq()
                                      or inst.kv_free_tokens() < req.in_len):
@@ -488,6 +715,7 @@ class Cluster:
 
     def submit(self, req: Request, now: float) -> None:
         self.scheduler.observe_arrival(now, req.in_len + req.out_len)
+        self._req_by_rid[req.rid] = req
         if not self._place(req, now):
             self.waiting.append(req)
 
@@ -526,6 +754,18 @@ class Cluster:
             for act in self.scheduler.schedule_parallelism(
                     eligible, any_long_wait):
                 self.execute_scale_down(by_iid[act.iid], now)
+        # close spill regions whose guest request finished: the host's
+        # reserved slots return to its free pool (live
+        # ``_finalize_spills`` / ``release_hosted``)
+        for region_id, region in list(self.partition.spills().items()):
+            r = self._req_by_rid.get(region.rid)
+            if r is not None and r.tokens_done >= r.out_len:
+                self.partition.close_spill(region_id)
+                host = next((i for i in self.instances
+                             if i.iid == region.host), None)
+                if host is not None:
+                    host.hosted_tokens -= region.meta.get("tokens", 0)
+                    host.dirty()
         self._now = now + dt
 
     @property
@@ -572,7 +812,9 @@ class Cluster:
         """Shared schema (serving.metrics): key-identical with the live
         ``ClusterEngine.metrics()``."""
         return summarize(self.all_requests, t_end, self.total_tokens,
-                         self.n_transforms, transforms=self.transform_log)
+                         self.n_transforms, transforms=self.transform_log,
+                         spill_pages=self.spill_pages,
+                         partial_merges=self.partial_merges)
 
 
 # ---------------------------------------------------------------------------

@@ -119,6 +119,20 @@ class CostModel:
                      + self.hw.beta * (tp - 1) ** 2)
         return input_len / (self.hw.prefill_tps * tp * eff)
 
+    # ---- spill cost (capacity-ladder rung 1) -----------------------------
+    def spill_time(self, tokens: int) -> float:
+        """Wall time to move ``tokens`` of overflow KV into a neighbor's
+        pool — a page-granular interconnect copy with no weight
+        re-sharding, which is what makes spill the cheapest rung of the
+        capacity ladder for modest overflows."""
+        from repro.core.kv_transform import LinkModel
+        link = LinkModel()
+        bytes_moved = _kv_bytes_guarded(self.cfg) * max(tokens, 0)
+        # overflow lands in whole contiguous pages: one segment per page
+        segments = max(1, -(-max(tokens, 0) // 64))
+        return (bytes_moved / link.bandwidth
+                + segments * link.segment_overhead)
+
     # ---- transformation cost (per §4 accounting, method-dependent) -------
     def transform_time(self, method: str, n_layers: int | None = None
                        ) -> float:

@@ -216,11 +216,19 @@ class ScaleUp:
       pool, and transforms the target to ``tp_to`` across the widened
       device set.  Invariant: target and donors are all at TP1 and
       ``tp_to`` equals the combined device width.
+
+    ``donor_devices`` refines a merge into a PARTIAL one (LoongServe's
+    elastic move): entry k is how many devices donor k loans.  Empty
+    means every donor loans its whole width (the classic park).  When a
+    donor loans fewer devices than it spans, the control plane shrinks
+    it in place (``Engine.transform(devices=)``) and it KEEPS SERVING on
+    its retained devices — no park, no drain.
     """
     iid: int
     tp_to: int
     reason: str = ""
     donor_iids: Tuple[int, ...] = ()
+    donor_devices: Tuple[int, ...] = ()
 
 
 @dataclass(frozen=True)
@@ -235,7 +243,21 @@ class ScaleDown:
     reason: str = ""
 
 
-Action = Union[ScaleUp, ScaleDown]
+@dataclass(frozen=True)
+class Spill:
+    """Serve a pool-ceiling-busting request on instance ``iid`` by
+    spilling its overflow KV pages (``tokens`` beyond the guest's
+    ceiling) into instance ``host_iid``'s pool — the Infinite-LLM /
+    DistAttention move: no transformation at all, decode attention
+    gathers across the distributed pool.  Rung 1 of the capacity
+    ladder (spill < partial merge < full merge)."""
+    iid: int
+    host_iid: int
+    tokens: int
+    reason: str = ""
+
+
+Action = Union[ScaleUp, ScaleDown, Spill]
 
 
 def min_tp_for(inst: InstanceView, total_tokens: int) -> int:
@@ -265,6 +287,15 @@ class SchedulerConfig:
                                      # merges) when the expected LONG
                                      # arrivals within 2x the transform
                                      # cost reach this many requests
+    # -- capacity ladder (both rungs strictly OPT-IN, like pressure:
+    #    defaults preserve every pre-existing trace byte-for-byte) ------
+    spill: bool = False              # rung 1: overflow KV pages spill to
+                                     # a neighbor's pool (no transform)
+    partial_merge: bool = False      # rung 2: donors loan a FRACTION of
+                                     # their devices and keep serving
+    spill_slack: float = 1.0         # max overflow a spill may carry, as
+                                     # a fraction of the guest's ceiling
+                                     # (beyond that a merge is cheaper)
 
 
 class BaseScheduler:
@@ -288,6 +319,16 @@ class BaseScheduler:
         #: transform cost (cfg.transform_cost_s) is weighed against the
         #: predicted long-request pressure, not just the current queue
         self.pressure = None
+        #: optional core.costmodel.CostModel; when attached, the
+        #: capacity ladder (spill < partial merge < full merge) is
+        #: ordered by the Table-1 model instead of rung index
+        self.cost_model = None
+
+    def attach_cost(self, cost_model) -> None:
+        """Attach a ``core.costmodel.CostModel`` so ``decide_capacity``
+        compares rungs by modeled wall time (spill transfer vs partial
+        vs full transform), not just by the natural rung order."""
+        self.cost_model = cost_model
 
     # --- arrival-pressure plumbing (no-ops without an estimator) ---------
     def attach_pressure(self, estimator) -> None:
@@ -396,7 +437,7 @@ class BaseScheduler:
                                      reason=f"long request ({total} tok)"))
         if best:
             return best[1]
-        return self.decide_merge(instances, total)
+        return self.decide_capacity(instances, total)
 
     def decide_seed_scale_up(self, instances: Sequence[InstanceView],
                              seed: InstanceView, total_tokens: int
@@ -471,6 +512,136 @@ class BaseScheduler:
                     iid=target.iid, tp_to=width, donor_iids=donors,
                     reason=f"merge x{len(members)} ({total_tokens} tok)")
         return None
+
+    # --- capacity ladder: spill < partial merge < full merge -------------
+
+    def donor_loanable(self, inst: InstanceView) -> int:
+        """Devices ``inst`` can loan to a partial merge while CONTINUING
+        TO SERVE on the remainder — the relaxed merge-admissibility
+        predicate (the old rule hard-required TP1 whole-engine donors).
+        An instance must retain enough width that its live KV still fits
+        the shrunken pool, and an instance holding a long request cannot
+        shrink at all (its context already needs its full ceiling)."""
+        w = getattr(inst, "width", inst.tp)
+        if w <= 1 or inst.has_long_request():
+            return 0
+        used = min(max(inst.kv_used_fraction(), 0.0), 1.0)
+        keep = max(1, -(-int(used * w * 1000) // 1000))  # ceil(used * w)
+        return max(0, w - keep)
+
+    def decide_partial_merge(self, instances: Sequence[InstanceView],
+                             total_tokens: int,
+                             min_width: Optional[int] = None
+                             ) -> Optional[ScaleUp]:
+        """Rung 2: widen one TP1 target onto devices LOANED a fraction
+        at a time by donors that keep serving (``donor_loanable``).
+        Nothing is exported and nobody parks, so the target is simply
+        the least-loaded TP1 instance (it will host the long request);
+        donors contribute device by device, idlest first, until the
+        widened degree divides the pool and its ceiling fits.  Opt-in
+        via ``cfg.partial_merge``."""
+        if not self.cfg.partial_merge or len(instances) < 2:
+            return None
+        min_w = self.cfg.target_tp if min_width is None else min_width
+        pool = sum(getattr(i, "width", i.tp) for i in instances)
+        targets = [i for i in instances if i.tp == 1]
+        if not targets:
+            return None
+        target = min(targets, key=lambda i: (i.kv_used_fraction(), i.iid))
+        width = getattr(target, "width", target.tp)
+        donors: List[Tuple[InstanceView, int]] = []
+        for inst in sorted((i for i in instances if i is not target),
+                           key=lambda i: (i.kv_used_fraction(), i.iid)):
+            avail = self.donor_loanable(inst)
+            take = 0
+            while take < avail:
+                take += 1
+                width += 1
+                if (width >= max(min_w, 2) and pool % width == 0
+                        and target.max_seq_at(width) >= total_tokens):
+                    donors.append((inst, take))
+                    return ScaleUp(
+                        iid=target.iid, tp_to=width,
+                        donor_iids=tuple(i.iid for i, _ in donors),
+                        donor_devices=tuple(n for _, n in donors),
+                        reason=f"partial merge ({total_tokens} tok)")
+            if take:
+                donors.append((inst, take))
+        return None
+
+    def decide_spill(self, instances: Sequence[InstanceView],
+                     total_tokens: int) -> Optional[Spill]:
+        """Rung 1: no transformation at all — pick a guest with a free
+        slot's worth of KV headroom and a host with whole free slots to
+        carry the overflow; the guest serves the request with decode
+        attention gathering across the distributed pool.  Opt-in via
+        ``cfg.spill``."""
+        if not self.cfg.spill or len(instances) < 2:
+            return None
+        for guest in sorted((i for i in instances if i.tp == 1),
+                            key=lambda i: (i.kv_used_fraction(), i.iid)):
+            ceiling = guest.max_seq()
+            overflow = total_tokens - ceiling
+            if overflow <= 0 or overflow > self.cfg.spill_slack * ceiling:
+                continue
+            if guest.kv_free_tokens() < ceiling:
+                continue  # the local part needs a whole free slot
+            best = None
+            for host in instances:
+                if host is guest:
+                    continue
+                # hosting reserves WHOLE slots in the host's pool
+                slots = -(-overflow // max(host.max_seq(), 1))
+                need = slots * host.max_seq()
+                if host.kv_free_tokens() < need:
+                    continue
+                key = (-host.kv_free_tokens(), host.iid)
+                if best is None or key < best[0]:
+                    best = (key, host)
+            if best is not None:
+                return Spill(iid=guest.iid, host_iid=best[1].iid,
+                             tokens=overflow,
+                             reason=f"kv spill ({total_tokens} tok)")
+        return None
+
+    def decide_capacity(self, instances: Sequence[InstanceView],
+                        total_tokens: int,
+                        min_width: Optional[int] = None
+                        ) -> Optional[Action]:
+        """The three-rung capacity ladder (spill < partial merge < full
+        merge).  Without an attached CostModel the rungs order naturally
+        — a spill moves only overflow pages, a partial merge transforms
+        without draining anyone, a full merge drains and parks donors.
+        With ``attach_cost`` the candidates are ordered by the Table-1
+        model instead (modeled transfer time vs transform wall time)."""
+        cands: List[Tuple[Tuple[float, int], Action]] = []
+        act = self.decide_spill(instances, total_tokens)
+        if act is not None:
+            cands.append((self._rung_cost(act, 0), act))
+        act = self.decide_partial_merge(instances, total_tokens, min_width)
+        if act is not None:
+            cands.append((self._rung_cost(act, 1), act))
+        act = self.decide_merge(instances, total_tokens, min_width)
+        if act is not None:
+            cands.append((self._rung_cost(act, 2), act))
+        if not cands:
+            return None
+        return min(cands, key=lambda c: c[0])[1]
+
+    def _rung_cost(self, act: Action, rung: int) -> Tuple[float, int]:
+        """(modeled seconds, rung index): the rung index breaks ties and
+        is the WHOLE ordering when no cost model is attached."""
+        cm = self.cost_model
+        if cm is None:
+            return (0.0, rung)
+        if isinstance(act, Spill):
+            return (cm.spill_time(act.tokens), rung)
+        t = cm.transform_time("gyges")
+        if act.donor_devices and sum(act.donor_devices) < act.tp_to:
+            # partial: only the loaned fraction of the target's widened
+            # pool re-shards, and no donor KV is exported
+            return (t * sum(act.donor_devices) / max(act.tp_to, 1), rung)
+        return (t, rung)
 
 
 class RoundRobinScheduler(BaseScheduler):

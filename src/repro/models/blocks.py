@@ -384,6 +384,27 @@ def _window_of(kind: str, cfg: ModelConfig) -> int:
     return 0
 
 
+def full_attention_capacity(max_seq: int, page_tokens: int) -> int:
+    """Page-rounded token capacity of a FULL-ATTENTION paged cache at
+    pool allocation ``max_seq`` (see ``init_block_cache``): the
+    discriminator the engine uses to tell full-attention PagedStates —
+    which track the pool allocation through resizes and distributed-pool
+    spill extensions — from window/ring caches, whose capacity is the
+    window and never moves."""
+    return -(-max_seq // page_tokens) * page_tokens
+
+
+def is_full_attention_state(state, max_seq: int, page_tokens: int) -> bool:
+    """True iff ``state`` is a PagedState sized like a full-attention
+    cache at allocation ``max_seq`` — the leaf-selection predicate of
+    the pool-resize and KV-spill walkers (only these leaves grow; rings
+    keep their window, recurrent leaves carry O(1) state)."""
+    from repro.paged import pool as pp
+    return (isinstance(state, pp.PagedState)
+            and state.positions.shape[-1]
+            == full_attention_capacity(max_seq, page_tokens))
+
+
 def apply_block_seq(kind: str, p: Params, cfg: ModelConfig,
                     plan: PaddingPlan, x: jax.Array, positions: jax.Array,
                     banded: bool = False, want_kv: bool = False,

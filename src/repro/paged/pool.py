@@ -13,7 +13,7 @@ O(window).  ``positions`` records each slot's global position for masking.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -201,6 +201,61 @@ def append_token(state: PagedState, k: jax.Array, v: jax.Array,
     positions = state.positions.at[jnp.arange(B), slot].set(pos)
     return PagedState(from_canonical(pool_c, storage_layout),
                       state.page_table, state.seq_lens + 1, positions)
+
+
+def concat_spilled(states: Sequence[PagedState]) -> PagedState:
+    """Distributed-pool READ view (Infinite-LLM/DistAttention): stitch a
+    batch-1 slot state together from its local pages plus overflow page
+    segments hosted in NEIGHBOR pools, as one identity-paged state whose
+    capacity is the sum of the parts.
+
+    ``states[0]`` is the local (guest) part and is authoritative for
+    ``seq_lens``; the rest are host-side segments in spill order.  All
+    parts must be batch-1 identity-paged extracts (the engine's
+    ``_extract_slot_cache`` shape), so the concatenated state is
+    indistinguishable from a single big-capacity slot: ``write_chunk`` /
+    ``append_token`` / ``gather_kv`` run on it unchanged, which is the
+    whole trick — decode attention gathers across the distributed pool
+    without a dedicated kernel."""
+    head = states[0]
+    nd = head.pool.ndim
+    pool = jnp.concatenate([s.pool for s in states], axis=nd - 5)
+    mps = sum(int(s.page_table.shape[-1]) for s in states)
+    pt = jnp.broadcast_to(
+        jnp.arange(mps, dtype=head.page_table.dtype),
+        head.page_table.shape[:-1] + (mps,))
+    pos = jnp.concatenate([s.positions for s in states], axis=-1)
+    return PagedState(pool, pt, head.seq_lens, pos)
+
+
+def split_spilled(state: PagedState, page_counts: Sequence[int]
+                  ) -> List[PagedState]:
+    """Inverse of ``concat_spilled``: cut the extended state back into
+    its local + host segments (``page_counts`` pages each, summing to
+    the state's page count).  Each part comes back as a self-contained
+    batch-1 identity-paged state; the first (local) part carries the
+    true ``seq_lens``, host parts carry zeros (their metadata is the
+    positions slice — the host never interprets a guest's cursor)."""
+    nd = state.pool.ndim
+    total = sum(page_counts)
+    assert total == int(state.page_table.shape[-1]), (
+        page_counts, state.page_table.shape)
+    P = state.positions.shape[-1] // total
+    out: List[PagedState] = []
+    page0 = 0
+    for i, n in enumerate(page_counts):
+        pool = jax.lax.slice_in_dim(state.pool, page0, page0 + n,
+                                    axis=nd - 5)
+        pt = jnp.broadcast_to(
+            jnp.arange(n, dtype=state.page_table.dtype),
+            state.page_table.shape[:-1] + (n,))
+        pos = jax.lax.slice_in_dim(state.positions, page0 * P,
+                                   (page0 + n) * P, axis=-1)
+        seq = (state.seq_lens if i == 0
+               else jnp.zeros_like(state.seq_lens))
+        out.append(PagedState(pool, pt, seq, pos))
+        page0 += n
+    return out
 
 
 def gather_kv(state: PagedState, storage_layout: str = L.CANONICAL,

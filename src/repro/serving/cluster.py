@@ -48,9 +48,10 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import jax
 
 from repro.configs.base import ModelConfig
+from repro.core.partition import Loan, PoolPartitionManager
 from repro.core.scheduler import (Action, BaseScheduler, GygesScheduler,
                                   PrefillPolicy, ScaleDown, ScaleUp,
-                                  SchedulerConfig)
+                                  SchedulerConfig, Spill)
 from repro.serving.engine import Engine
 from repro.serving.metrics import summarize
 from repro.serving.request import ServeRequest, State
@@ -137,15 +138,38 @@ class ClusterEngine:
         self.tokens_during_session = 0
         self.stall_steps = 0
         self._last_transform_step = {e.iid: -(10 ** 9) for e in self.engines}
-        # device-pool ledger: target iid -> [(donor iid, loaned devices)]
-        self._loans: Dict[int, List[Tuple[int, List[jax.Device]]]] = {}
+        # device-pool ledger: who holds which device, what is on loan,
+        # who is parked, whose overflow pages live where — one
+        # first-class object shared conceptually with the simulator
+        # (core.partition.PoolPartitionManager)
+        self.partition = PoolPartitionManager()
+        for e in self.engines:
+            self.partition.register(e.iid, list(e.devices))
         self._releasing: Set[int] = set()       # splits awaiting drain
+        # partial merges in flight: donors are shrinking; the target
+        # adopts the loaned devices once every donor's session drains
+        self._pending_partials: List[Dict] = []
+        self.spill_pages = 0
+        self.partial_merges = 0
         # stamped at the first submit so engine construction / jit
         # compile time does not dilute throughput_tps
         self.t_start: Optional[float] = None
         self._update_reserve()
 
     # ------------------------------------------------------------------
+    @property
+    def _loans(self) -> Dict[int, List[Tuple[int, List[jax.Device]]]]:
+        """Read-only view of the partition ledger in the legacy
+        ``target iid -> [(donor iid, devices)]`` shape (tests and older
+        callers peek at it); the ledger itself lives in
+        ``self.partition``."""
+        out: Dict[int, List[Tuple[int, List[jax.Device]]]] = {}
+        for e in self.engines:
+            for loan in self.partition.loans_to(e.iid):
+                out.setdefault(loan.borrower, []).append(
+                    (loan.lender, list(loan.devices)))
+        return out
+
     def _engine(self, iid: int) -> Engine:
         return next(e for e in self.engines if e.iid == iid)
 
@@ -163,9 +187,15 @@ class ClusterEngine:
         chunk-prefilling through merge/split sessions (its pool is
         already grown to the target allocation), so follow-up long
         requests ride the existing transformation instead of triggering
-        another one and start chunking immediately."""
+        another one and start chunking immediately.  Engines with open
+        spill regions (guest or host) cannot transform until they close
+        — a pool resize would move hosted/overflow pages out from under
+        the distributed page tables — and a partial-merge target
+        awaiting its loaned devices is already committed."""
         return [e for e in self.engines
-                if not e.transforming and not e.parked]
+                if not e.transforming and not e.parked
+                and not e.awaiting_devices
+                and not e._spills and not e._hosted]
 
     def _update_reserve(self) -> None:
         """update_reserve() (Alg 2 line 9), live form: earmark the
@@ -229,13 +259,27 @@ class ClusterEngine:
         act = self.scheduler.decide_scale_up(self._transformable(),
                                              len(req.prompt),
                                              req.max_new_tokens)
-        if act is None or not self._execute(act):
+        while act is not None:
+            if isinstance(act, Spill):
+                if self._execute_spill(req, act):
+                    self.placements[req.rid] = act.iid
+                    return True
+                # spill target out of free slots (stale view): fall one
+                # rung DOWN the ladder — partial merge, then full merge
+                # — instead of failing the placement
+                act = (self.scheduler.decide_partial_merge(
+                           self._transformable(), total)
+                       or self.scheduler.decide_merge(
+                           self._transformable(), total))
+                continue
+            if self._execute(act):
+                # the request rides the transforming engine's queue;
+                # Engine.step admits it once capacity is resident
+                self.placements[req.rid] = act.iid
+                self._engine(act.iid).submit(req)
+                return True
             return False
-        # the request rides the transforming engine's queue; Engine.step
-        # admits it once the new TP degree is resident
-        self.placements[req.rid] = act.iid
-        self._engine(act.iid).submit(req)
-        return True
+        return False
 
     # ---- action execution (the §5 control plane's write side) ---------
     def _execute(self, act: Action) -> bool:
@@ -244,11 +288,15 @@ class ClusterEngine:
         requests) — the caller leaves the request waiting and a later
         retry re-decides."""
         eng = self._engine(act.iid)
-        if isinstance(act, ScaleUp) and act.donor_iids:
+        if isinstance(act, ScaleUp) and act.donor_devices:
+            n_steps = self._merge_partial(act, eng)
+            if n_steps is None:
+                return False
+        elif isinstance(act, ScaleUp) and act.donor_iids:
             n_steps = self._merge(act, eng)
             if n_steps is None:
                 return False
-        elif isinstance(act, ScaleDown) and self._loans.get(act.iid):
+        elif isinstance(act, ScaleDown) and self.partition.loans_to(act.iid):
             n_steps = self._split(act, eng)
         else:
             n_steps = eng.transform(act.tp_to)
@@ -257,7 +305,8 @@ class ClusterEngine:
         self._last_transform_step[eng.iid] = self.steps
         self._update_reserve()
         kind = "up" if isinstance(act, ScaleUp) else "down"
-        assert n_steps > 0 or act.tp_to == eng.tp, (kind, act)
+        assert n_steps > 0 or act.tp_to == eng.tp \
+            or act.donor_devices, (kind, act)
         return True
 
     def _merge(self, act: ScaleUp, eng: Engine) -> Optional[int]:
@@ -277,7 +326,6 @@ class ClusterEngine:
             return None
         assert all(d.seq_quantum == eng.seq_quantum for d in donors), (
             "merging requires uniform per-device admission quanta")
-        loans: List[Tuple[int, List[jax.Device]]] = []
         exported = []
         adopted: List[jax.Device] = []
         for d in donors:
@@ -287,7 +335,9 @@ class ClusterEngine:
             d.waiting = []
             exported += d.export_active()
             devs = d.park()
-            loans.append((d.iid, devs))
+            loan = self.partition.lend(d.iid, eng.iid, devs, whole=True)
+            self.partition.park(d.iid)
+            self.partition.adopt(eng.iid, loan)
             adopted += devs
         eng.adopt_devices(adopted)
         for req, sub, progress in exported:
@@ -295,8 +345,103 @@ class ClusterEngine:
         if exported:
             eng.repin_cache_shardings()
         n_steps = eng.transform(act.tp_to)
-        self._loans.setdefault(eng.iid, []).extend(loans)
         return n_steps
+
+    def _merge_partial(self, act: ScaleUp, eng: Engine) -> Optional[int]:
+        """Partial merge (LoongServe-style fractional elasticity): each
+        donor sheds a FRACTION of its devices via an in-place shrink
+        transform — it keeps serving at reduced width, nothing parks,
+        no KV is exported — and the target widens onto the loaned
+        devices once every donor's session drains
+        (``_advance_partials``).  Returns the donors' summed session
+        steps, or None when preconditions fail (nothing mutated)."""
+        donors = [self._engine(i) for i in act.donor_iids]
+        if eng.transforming or eng.parked or eng.tp != 1 \
+                or eng.awaiting_devices:
+            return None
+        if any(d.transforming or d.parked or d is eng
+               or d.awaiting_devices for d in donors):
+            return None
+        if any(n <= 0 or n >= d.W
+               for d, n in zip(donors, act.donor_devices)):
+            return None        # a donor must retain ≥1 device to serve
+        assert all(d.seq_quantum == eng.seq_quantum for d in donors), (
+            "partial merges require uniform per-device admission quanta")
+        n_steps = 0
+        loans: List[Loan] = []
+        for d, n in zip(donors, act.donor_devices):
+            keep = list(d.devices[:d.W - n])
+            loaned = list(d.devices[d.W - n:])
+            # largest parallel degree the retained width can carry
+            new_tp = max(t for t in range(1, min(d.tp, len(keep)) + 1)
+                         if len(keep) % t == 0)
+            n_steps += d.transform(new_tp, devices=keep)
+            loans.append(self.partition.lend(d.iid, eng.iid, loaned,
+                                             whole=False))
+            self._last_transform_step[d.iid] = self.steps
+        eng.awaiting_devices = True
+        self._pending_partials.append(
+            {"iid": eng.iid, "tp_to": act.tp_to, "loans": loans,
+             "donors": [d.iid for d in donors]})
+        return n_steps
+
+    def _advance_partials(self) -> None:
+        """Second phase of a partial merge: once every donor's shrink
+        session has drained (the loaned devices hold no donor arrays),
+        the target adopts them and widens across the grown mesh — still
+        serving its own work throughout."""
+        for p in list(self._pending_partials):
+            donors = [self._engine(i) for i in p["donors"]]
+            eng = self._engine(p["iid"])
+            if any(d.transforming for d in donors) or eng.transforming:
+                continue
+            self._pending_partials.remove(p)
+            devs = [dv for loan in p["loans"] for dv in loan.devices]
+            eng.adopt_devices(devs)
+            for loan in p["loans"]:
+                self.partition.adopt(eng.iid, loan)
+            eng.transform(p["tp_to"])
+            eng.awaiting_devices = False
+            self.partial_merges += 1
+            self._last_transform_step[eng.iid] = self.steps
+            self._update_reserve()
+
+    def _execute_spill(self, req: ServeRequest, act: Spill) -> bool:
+        """Rung 1 of the capacity ladder: serve a pool-ceiling-busting
+        request with NO transformation at all — the host engine reserves
+        whole free slots for the overflow pages and the guest serves the
+        request with decode attention gathering across both pools.
+        Returns False (nothing mutated) when the host cannot grant the
+        reservation; the caller falls back to a partial/full merge."""
+        guest = self._engine(act.iid)
+        host = self._engine(act.host_iid)
+        if guest is host or guest.transforming or guest.parked \
+                or host.transforming or host.parked:
+            return False
+        if guest._free_slot() is None:
+            return False
+        pt = guest.page_tokens
+        n_pages = -(-max(req.total_tokens - guest._local_page_cap(), 1)
+                    // pt)
+        hosting = host.host_spilled(n_pages)
+        if hosting is None:
+            return False
+        guest.admit_spilled(req, host, hosting)
+        self.partition.open_spill(guest.iid, host.iid, req.rid,
+                                  hosting["pages"], hosting["slots"],
+                                  handle=hosting["handle"])
+        self.actions.append(act)
+        self.spill_pages += -(-act.tokens // pt)
+        self._update_reserve()
+        return True
+
+    def _finalize_spills(self) -> None:
+        """Close spill regions whose request has finished (the engines
+        already freed the slots and released the hosting reservation)."""
+        done = {r.rid for r in self.requests if r.finished}
+        for region_id, region in list(self.partition.spills().items()):
+            if region.rid in done:
+                self.partition.close_spill(region_id)
 
     def _split(self, act: ScaleDown, eng: Engine) -> int:
         """Undo a merge: transform back onto the engine's home devices;
@@ -310,16 +455,28 @@ class ClusterEngine:
     def _finalize_releases(self) -> None:
         """Second half of a split: once the shrinking engine's session
         has drained (its arrays live only on its home devices again),
-        return each loan and revive the parked donor on it."""
+        return each loan — reviving parked whole-engine donors, and
+        widening partial donors back onto their returned devices (a
+        cross-device grow session; they never stopped serving)."""
         for iid in list(self._releasing):
             eng = self._engine(iid)
             if eng.transforming:
                 continue
             self._releasing.discard(iid)
-            for donor_iid, devs in self._loans.pop(iid, []):
-                donor = self._engine(donor_iid)
-                donor.revive(devs, self._params_src)
-                self._last_transform_step[donor_iid] = self.steps
+            by_lender: Dict[int, List[Loan]] = {}
+            for loan in self.partition.loans_to(iid):
+                by_lender.setdefault(loan.lender, []).append(loan)
+            for lender_iid, loans in by_lender.items():
+                donor = self._engine(lender_iid)
+                devs = [d for ln in loans
+                        for d in self.partition.return_loan(ln)]
+                if any(ln.whole for ln in loans):
+                    self.partition.revive(lender_iid)
+                    donor.revive(devs, self._params_src)
+                else:
+                    donor.transform(donor.tp,
+                                    devices=list(donor.devices) + devs)
+                self._last_transform_step[lender_iid] = self.steps
             self._update_reserve()
 
     # ------------------------------------------------------------------
@@ -343,10 +500,13 @@ class ClusterEngine:
             if not self._place(req):
                 self.waiting.insert(0, req)
                 break
-        # Alg 2 over dwell-gated, non-transforming instances
+        # Alg 2 over dwell-gated, non-transforming instances (spill
+        # participants cannot transform while their regions are open)
         eligible = [
             e for e in self._active_engines()
             if e.tp > 1 and not e.transforming
+            and not e._spills and not e._hosted
+            and not e.awaiting_devices
             and self.steps - self._last_transform_step[e.iid]
             >= self.dwell_steps]
         for act in self.scheduler.schedule_parallelism(
@@ -377,7 +537,9 @@ class ClusterEngine:
                 # now > transform_until + dwell) — keep re-stamping
                 # until the schedule drains
                 self._last_transform_step[e.iid] = self.steps
+        self._advance_partials()
         self._finalize_releases()
+        self._finalize_spills()
         self.total_tokens += emitted
         self.steps += 1
         return {"active": active, "emitted": emitted,
@@ -390,6 +552,7 @@ class ClusterEngine:
     @property
     def idle(self) -> bool:
         return (not self.waiting and not self._releasing
+                and not self._pending_partials
                 and all(not e.transforming and not e.waiting
                         and all(s is None for s in e.slots)
                         for e in self.engines))
@@ -425,7 +588,9 @@ class ClusterEngine:
             self._clock() - self.t_start)
         logs = [t for e in self.engines for t in e.transform_log]
         return summarize(self.requests, elapsed, self.total_tokens,
-                         self.n_transforms, transforms=logs)
+                         self.n_transforms, transforms=logs,
+                         spill_pages=self.spill_pages,
+                         partial_merges=self.partial_merges)
 
 
 class LiveReplayPlane:

@@ -151,6 +151,19 @@ class Engine:
         # chunks (attention KV lives in the slot's pool pages)
         self._prefilling: Dict[int, Dict] = {}
         self._prefill_deferred = 0      # consecutive decode-priority defers
+        # -- KV spill (Infinite-LLM-style distributed pool) -------------
+        # guest side: slot -> {"req", "host", "hosting", "ext_tokens"};
+        # plans keyed by rid until the request admits into a slot.
+        # host side: handle -> {"slots", "pages"} — whole local slots
+        # reserved to carry a neighbor's overflow pages.
+        self._spills: Dict[int, Dict] = {}
+        self._spill_plans: Dict[int, Dict] = {}
+        self._hosted: Dict[int, Dict] = {}
+        self._hosted_ids = itertools.count()
+        # set by the control plane while a pending partial merge will
+        # grow this engine's pool: over-ceiling requests wait in the
+        # queue instead of admitting into a slot they would overflow
+        self.awaiting_devices = False
         # chunk continuation needs causal caches (encoder/vision memory
         # is not causal; such models keep whole-prompt prefill).
         # Sliding-window RING caches chunk too: ``_pin_prefill_cursors``
@@ -297,8 +310,37 @@ class Engine:
 
         assert self.mesh is not None, "transform requires devices="
         assert self._session is None, "transformation already in progress"
+        assert not self._spills and not self._hosted, (
+            "no transforms while KV spill regions are open: a pool "
+            "resize would move hosted/overflow pages out from under "
+            "their distributed page tables (release the spill first)")
         target_devs = list(devices) if devices is not None else self.devices
         if tp_to == self.tp and target_devs == self.devices:
+            return 0
+        if tp_to == self.tp:
+            # same-degree device migration (a partial-merge donor
+            # shedding devices, or widening back onto a returned loan):
+            # the sharding layout is unchanged, so the whole state moves
+            # in one synchronous re-shard — no §4.3 session, and the
+            # engine never stops serving (callers run this between
+            # steps).  Live contexts must fit the new width's
+            # allocation; donor_loanable() guarantees it on the shrink
+            # side.
+            live = [r for r in self.slots if r is not None] + self.waiting
+            need = max((r.total_tokens for r in live), default=0)
+            need = -(-need // self.page_tokens) * self.page_tokens
+            alloc = self.seq_quantum * len(target_devs)
+            assert need <= alloc, (
+                f"live context ({need} tok) exceeds the retained "
+                f"width's allocation ({alloc} tok)")
+            self.mesh = self._make_mesh(tp_to, target_devs)
+            self.devices = list(target_devs)
+            self.W = len(target_devs)
+            self.params = jax.device_put(
+                self.params, self._shardings(self._pspecs, self.mesh))
+            self.repin_cache_shardings()
+            self._resize_pool(alloc)
+            self.check_capacity_invariant()
             return 0
         # memory follows the TP degree (§3.4): grow the physical pool to
         # back the TARGET policy ceiling before migration needs the room
@@ -400,6 +442,10 @@ class Engine:
 
     def kv_used_tokens(self) -> int:
         used = sum(r.context_len for r in self.slots if r is not None)
+        # whole slots reserved to host a neighbor's spilled pages are
+        # consumed capacity as far as admission control is concerned
+        used += sum(len(h["slots"]) for h in self._hosted.values()) \
+            * self.max_seq()
         return used + sum(len(r.prompt) for r in self.waiting)
 
     def kv_used_fraction(self) -> float:
@@ -511,6 +557,9 @@ class Engine:
         assert all(s is None for s in self.slots) and not self.waiting \
             and not self._prefilling, (
             "park requires a drained engine (export_active first)")
+        assert not self._spills and not self._hosted, (
+            "cannot park an engine participating in a KV spill "
+            "(its pages are reachable from a distributed page table)")
         devs = list(self.devices)
         self.parked = True
         self.params = self.caches = None
@@ -649,10 +698,14 @@ class Engine:
         self.waiting.append(req)
 
     def _free_slot(self) -> Optional[int]:
+        hosted = self._hosted_slots()
         for i, s in enumerate(self.slots):
-            if s is None:
+            if s is None and i not in hosted:
                 return i
         return None
+
+    def _hosted_slots(self) -> set:
+        return {s for h in self._hosted.values() for s in h["slots"]}
 
     # -- chunked prefill (PrefillPolicy-driven) --------------------------
     #
@@ -700,9 +753,22 @@ class Engine:
         req.state = State.PREFILL
         req.slot = slot
         self.slots[slot] = req
+        plan = self._spill_plans.pop(req.rid, None)
+        if plan is not None:
+            self._spills[slot] = {"req": req, **plan}
         chunks = (self.prefill_policy.chunk_sizes(len(req.prompt),
                                                   self.page_tokens)
                   if self._can_chunk else [len(req.prompt)])
+        if (plan is not None and len(chunks) == 1
+                and chunks[0] > self._min_chunk_cap()):
+            # spilled prompts longer than the local pool MUST chunk: the
+            # whole-prompt path builds a fresh local-capacity cache the
+            # prompt would overflow; the chunk path assembles the
+            # extended (local + host) view once the cursor crosses the
+            # local ceiling
+            cap = self._min_chunk_cap()
+            c = chunks[0]
+            chunks = [cap] * (c // cap) + ([c % cap] if c % cap else [])
         if len(chunks) > 1:
             # ring-cache models: no chunk may exceed the smallest
             # attention capacity (the cap is a page multiple, so the
@@ -728,6 +794,16 @@ class Engine:
         is multi-chunk — chunks run through the per-layer path, while
         whole-prompt prefills need the stacked params the session
         unstacked and wait for it to drain."""
+        if (req.total_tokens > self.max_seq_alloc
+                and req.rid not in self._spill_plans
+                and (self.awaiting_devices or self.tp_pending is not None)):
+            # capacity is on its way (pending partial-merge adoption or
+            # an in-flight grow transform): hold the over-ceiling
+            # request in the queue instead of admitting it into a slot
+            # it would overflow.  Spilled requests carry their own
+            # extension; legacy over-ceiling submits with no growth
+            # pending keep the old truncate-at-ceiling behavior.
+            return False
         if self._session is None:
             return True
         return self._can_chunk and self.prefill_policy.chunkable(
@@ -815,14 +891,21 @@ class Engine:
             # session's mixed-but-coherent device assemblies
             logits = self._run_chunk_layers(slot, prog, tokens, start_a)
         else:
-            sub = self._sanitize_sub(self._extract_slot_cache(slot),
-                                     prog["rec"], start)
+            # spilled slot past the local ceiling: the chunk computes on
+            # the EXTENDED view (local + host pages) and scatters back
+            # through spill_slot; jit keys on shapes, so the extended
+            # call simply traces its own entry
+            ext = (slot in self._spills
+                   and start + size > self._local_page_cap())
+            view = (self._assemble_spilled(slot) if ext
+                    else self._extract_slot_cache(slot))
+            sub = self._sanitize_sub(view, prog["rec"], start)
             # mirror of jit's trace-cache key: chunk shape, pool
             # allocation, the static first-chunk flag, AND the mesh
             # factorization — a transform re-commits params/caches to
             # new shardings, which retraces
             key = (tokens.shape[0], tokens.shape[1], self.max_seq_alloc,
-                   self.tp, self.W, start == 0)
+                   self.tp, self.W, start == 0, ext)
             if key in self._chunk_keys:
                 self.chunk_cache_hits += 1
             else:
@@ -831,7 +914,10 @@ class Engine:
             logits, sub = self._prefill_chunk_jit(self.params, tokens,
                                                   start_a, sub,
                                                   first_chunk=start == 0)
-            self._adopt_slot_cache(sub, slot, start + size)
+            if ext:
+                self.spill_slot(slot, sub)
+            else:
+                self._adopt_slot_cache(sub, slot, start + size)
             prog["rec"] = self._strip_pools(sub)
         prog["done"] += size
         prog["ci"] += 1
@@ -983,7 +1069,7 @@ class Engine:
         # 1-token request (or an immediate EOS) must not reach decode
         if (len(req.generated) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id)
-                or req.context_len >= self.max_seq_alloc):
+                or req.context_len >= self._slot_ceiling(slot)):
             req.state = State.DONE
             req.t_done = self._clock()
             self.slots[slot] = None
@@ -1131,6 +1217,235 @@ class Engine:
 
         self.caches = {k: visit(self.caches[k], sub[k]) for k in self.caches}
 
+    # -- KV spill (Infinite-LLM / DistAttention; capacity-ladder rung 1) --
+    #
+    # A pool-ceiling-busting request is served WITHOUT any merge: the
+    # guest keeps the first ``max_seq_alloc`` tokens of KV in its own
+    # slot, and the overflow pages live in whole slots reserved inside a
+    # neighbor (host) engine's pool (``host_spilled``).  While the
+    # context still fits locally the slot runs the ordinary batched
+    # paths; once it outgrows the local capacity, every chunk/decode
+    # assembles a batch-1 EXTENDED view (``paged.pool.concat_spilled``:
+    # local pages + host pages as one identity-paged state), computes on
+    # it with the ordinary jitted model functions — the distributed-pool
+    # read path — and writes the overflow pages back into the host pool
+    # through the §4.1 page-migration kernel (``spill_slot``).  The
+    # decision policy is ``core.scheduler.decide_spill``; the ledger is
+    # ``core.partition.PoolPartitionManager``.
+
+    def _local_page_cap(self) -> int:
+        from repro.models.blocks import full_attention_capacity
+        return full_attention_capacity(self.max_seq_alloc,
+                                       self.page_tokens)
+
+    def host_spilled(self, n_pages: int) -> Optional[Dict]:
+        """Host side of a KV spill: reserve whole FREE slots to carry
+        ``n_pages`` of a neighbor's overflow.  Returns the hosting
+        descriptor (handle, reserved slots, granted page count) or None
+        when the pool lacks the free slots — the control plane then
+        falls back down the capacity ladder instead of crashing."""
+        if self.parked or self.transforming or n_pages <= 0:
+            return None
+        mps = self._local_page_cap() // self.page_tokens
+        need = -(-n_pages // mps)
+        hosted = self._hosted_slots()
+        free = [i for i, s in enumerate(self.slots)
+                if s is None and i not in hosted]
+        if len(free) < need:
+            return None
+        slots = tuple(free[:need])
+        handle = next(self._hosted_ids)
+        self._hosted[handle] = {"slots": slots, "pages": need * mps}
+        return {"handle": handle, "slots": slots, "pages": need * mps,
+                "page_tokens": self.page_tokens}
+
+    def release_hosted(self, handle: int) -> None:
+        self._hosted.pop(handle, None)
+
+    def admit_spilled(self, req: ServeRequest, host: "Engine",
+                      hosting: Dict) -> None:
+        """Guest side: queue a request whose overflow KV will live in
+        ``host``'s pool (the reservation from ``host.host_spilled``)."""
+        assert hosting["page_tokens"] == self.page_tokens, (
+            "KV spill requires a uniform page size across the cluster")
+        ext_tokens = self._local_page_cap() \
+            + hosting["pages"] * self.page_tokens
+        assert ext_tokens >= req.total_tokens, (
+            ext_tokens, req.total_tokens)
+        self._spill_plans[req.rid] = {"host": host, "hosting": hosting,
+                                      "ext_tokens": ext_tokens}
+        self.submit(req)
+
+    def _slot_ceiling(self, slot: int) -> int:
+        """Context ceiling of one slot: the pool allocation, extended by
+        the hosted overflow for spilled slots."""
+        sp = self._spills.get(slot)
+        return self.max_seq_alloc if sp is None else sp["ext_tokens"]
+
+    def _replicate_here(self, tree):
+        """Cross-engine device move: land a (sub)tree replicated on this
+        engine's mesh (or the default device for meshless engines)."""
+        if self.mesh is None:
+            return jax.device_put(tree)
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        return jax.device_put(tree, jax.tree.map(
+            lambda _: NamedSharding(self.mesh, P()), tree))
+
+    def _assemble_spilled(self, slot: int):
+        """Extended batch-1 view of a spilled slot: local slot pages
+        followed by the host-pool overflow pages, per full-attention
+        leaf (window/ring caches and recurrent state never spill — the
+        window fits locally and recurrent state is O(1))."""
+        from repro.models.blocks import is_full_attention_state
+        from repro.paged import pool as PP
+        from repro.paged.pool import PagedState
+
+        sp = self._spills[slot]
+        host: Engine = sp["host"]
+        local = self._extract_slot_cache(slot)
+        parts = [self._replicate_here(host._extract_slot_cache(j))
+                 for j in sp["hosting"]["slots"]]
+
+        def visit(loc, ps):
+            if isinstance(loc, PagedState):
+                if is_full_attention_state(loc, self.max_seq_alloc,
+                                           self.page_tokens):
+                    return PP.concat_spilled([loc] + list(ps))
+                return loc
+            if isinstance(loc, dict):
+                return {k: visit(loc[k], [p[k] for p in ps])
+                        for k in loc}
+            if isinstance(loc, (list, tuple)):
+                out = [visit(a, [p[i] for p in ps])
+                       for i, a in enumerate(loc)]
+                return tuple(out) if isinstance(loc, tuple) else out
+            return loc
+
+        return {k: visit(local[k], [p[k] for p in parts]) for k in local}
+
+    def spill_slot(self, slot: int, ext) -> None:
+        """Write a spilled slot back after an extended-view compute: the
+        local part lands in the slot's own pages, and the overflow pages
+        MIGRATE into the host engine's pool — ``write_spill_pages`` ->
+        ``kv_transform.migrate_slot_pages`` -> the §4.1 page-copy
+        kernel.  This is the moment KV bytes actually cross engines."""
+        from repro.paged import pool as PP
+        from repro.paged.pool import PagedState
+
+        sp = self._spills[slot]
+        host: Engine = sp["host"]
+        host_slots = sp["hosting"]["slots"]
+        counts = [self._local_page_cap() // self.page_tokens] \
+            + [host._local_page_cap() // host.page_tokens] * len(host_slots)
+        ext_cap = sum(counts) * self.page_tokens
+        n_host = len(host_slots)
+
+        def visit(leaf):
+            # -> (local leaf, one leaf-or-None per host slot)
+            if isinstance(leaf, PagedState):
+                if leaf.positions.shape[-1] == ext_cap:
+                    parts = PP.split_spilled(leaf, counts)
+                    return parts[0], parts[1:]
+                return leaf, [None] * n_host
+            if isinstance(leaf, dict):
+                pairs = {k: visit(v) for k, v in leaf.items()}
+                return ({k: p[0] for k, p in pairs.items()},
+                        [{k: p[1][i] for k, p in pairs.items()}
+                         for i in range(n_host)])
+            if isinstance(leaf, (list, tuple)):
+                pairs = [visit(v) for v in leaf]
+                loc = [p[0] for p in pairs]
+                loc = tuple(loc) if isinstance(leaf, tuple) else loc
+                hps = []
+                for i in range(n_host):
+                    hp = [p[1][i] for p in pairs]
+                    hps.append(tuple(hp) if isinstance(leaf, tuple)
+                               else hp)
+                return loc, hps
+            return leaf, [None] * n_host
+
+        pairs = {k: visit(v) for k, v in ext.items()}
+        self._adopt_slot_cache({k: p[0] for k, p in pairs.items()},
+                               slot, 0)
+        for i, j in enumerate(host_slots):
+            host.write_spill_pages(j, {k: p[1][i]
+                                       for k, p in pairs.items()})
+
+    def write_spill_pages(self, j: int, part) -> None:
+        """Host side of ``spill_slot``: land one overflow segment in
+        reserved slot ``j``'s page range.  Only full-attention leaves
+        carry data (``part`` has None elsewhere); pool bytes move
+        through ``kv_transform.migrate_slot_pages`` and the positions
+        metadata rides alongside so hosted pages stay self-describing."""
+        from repro.core import kv_transform as KT
+        from repro.paged.pool import PagedState
+
+        part = self._replicate_here(part)
+
+        def visit(dst, src):
+            if src is None:
+                return dst
+            if isinstance(dst, PagedState):
+                mps_d = dst.page_table.shape[-1]
+                mps_s = src.page_table.shape[-1]
+                assert mps_s <= mps_d, (mps_s, mps_d)
+                pool = KT.migrate_slot_pages(src.pool, dst.pool, mps_s,
+                                             j * mps_d)
+                cap_d, cap_s = (dst.positions.shape[-1],
+                                src.positions.shape[-1])
+                pos_src = src.positions
+                if cap_s < cap_d:
+                    pad = [(0, 0)] * pos_src.ndim
+                    pad[-1] = (0, cap_d - cap_s)
+                    pos_src = jnp.pad(pos_src, pad, constant_values=-1)
+                pos = jax.lax.dynamic_update_slice_in_dim(
+                    dst.positions, pos_src.astype(dst.positions.dtype),
+                    j, axis=dst.positions.ndim - 2)
+                return PagedState(pool, dst.page_table, dst.seq_lens, pos)
+            if isinstance(dst, dict):
+                return {k: visit(dst[k], src[k]) for k in dst}
+            if isinstance(dst, (list, tuple)):
+                out = [visit(a, b) for a, b in zip(dst, src)]
+                return tuple(out) if isinstance(dst, tuple) else out
+            return dst
+
+        self.caches = {k: visit(self.caches[k], part[k])
+                       for k in self.caches}
+        if self.mesh is not None:
+            self.repin_cache_shardings()
+
+    def _decode_spilled(self, r: ServeRequest) -> int:
+        """One decode step for a slot whose context has outgrown the
+        local pool: assemble the extended view, run the ordinary jitted
+        decode on it (batch-1; the jit trace cache keys on the extended
+        shape), sample exactly like the batched path, write back."""
+        assert self._session is None, (
+            "spilled slots decode outside transform sessions")
+        slot = r.slot
+        ext = self._assemble_spilled(slot)
+        tok = jnp.asarray([r.generated[-1]], jnp.int32)
+        pos = jnp.asarray([r.context_len - 1], jnp.int32)
+        logits, ext = self._decode(self.params, ext, tok, pos)
+        t = int(_sample(logits, 0.0, self.rng)[0])
+        if r.temperature > 0:
+            sub_rng = jax.random.fold_in(
+                jax.random.fold_in(self.rng, r.rid), r.context_len)
+            t = int(_sample(logits[0][None], r.temperature, sub_rng)[0])
+        self.spill_slot(slot, ext)
+        r.generated.append(t)
+        if (len(r.generated) >= r.max_new_tokens
+                or (r.eos_id is not None and t == r.eos_id)
+                or r.context_len >= self._slot_ceiling(slot)):
+            r.state = State.DONE
+            r.t_done = self._clock()
+            self.slots[slot] = None
+        return 1
+
+    def _release_spill(self, slot: int) -> None:
+        sp = self._spills.pop(slot)
+        sp["host"].release_hosted(sp["hosting"]["handle"])
+
     # -- one engine iteration --------------------------------------------
     def step(self) -> Dict[str, int]:
         """One engine iteration.  A live transformation in progress
@@ -1170,17 +1485,33 @@ class Engine:
 
         active = [r for r in self.slots
                   if r is not None and r.state == State.DECODE]
-        if active:
+        # spilled slots past the local ceiling decode one-by-one on the
+        # extended (local + host pages) view; everything else stays on
+        # the batched fast path
+        lcap = self._local_page_cap() if self._spills else 0
+        ext_active = [r for r in active
+                      if r.slot in self._spills
+                      and r.context_len - 1 >= lcap]
+        ext_slots = {r.slot for r in ext_active}
+        batch_active = [r for r in active if r.slot not in ext_slots]
+        # the batched decode appends masked filler at EVERY row's cursor
+        # — including spilled rows whose local pages are completely full
+        # of real prefix (cursor % capacity would land ON it).  Save
+        # those rows' batch-1 views and restore them after the batch.
+        protect = [s for s in self._spills if s not in ext_slots
+                   and self.slots[s] is not None] if batch_active else []
+        saved = {s: self._extract_slot_cache(s) for s in protect}
+        if batch_active:
             tokens = np.zeros((self.max_batch,), np.int32)
             positions = np.zeros((self.max_batch,), np.int32)
-            for r in active:
+            for r in batch_active:
                 tokens[r.slot] = r.generated[-1]
                 positions[r.slot] = r.context_len - 1
             logits = self._decode_dispatch(
                 jnp.asarray(tokens), jnp.asarray(positions))
             nxt = _sample(logits, 0.0, self.rng)  # greedy batch default
             nxt = np.asarray(nxt)
-            for r in active:
+            for r in batch_active:
                 tok = int(nxt[r.slot])
                 if r.temperature > 0:
                     sub_rng = jax.random.fold_in(
@@ -1192,11 +1523,19 @@ class Engine:
                 decode_emitted += 1
                 if (len(r.generated) >= r.max_new_tokens
                         or (r.eos_id is not None and tok == r.eos_id)
-                        or r.context_len >= self.max_seq_alloc):
+                        or r.context_len >= self._slot_ceiling(r.slot)):
                     r.state = State.DONE
                     r.t_done = self._clock()
                     self.slots[r.slot] = None
             self._pin_prefill_cursors()
+        for s, sub in saved.items():
+            self._adopt_slot_cache(sub, s, 0)
+        for r in ext_active:
+            n = self._decode_spilled(r)
+            emitted += n
+            decode_emitted += n
+        for s in [s for s in self._spills if self.slots[s] is None]:
+            self._release_spill(s)
         # the final schedule step's transfers overlapped this decode;
         # complete them now so the session drains within this iteration
         if self._session is not None and self._session.all_dispatched:

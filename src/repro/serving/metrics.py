@@ -33,6 +33,11 @@ from typing import Dict, List, Sequence
 #: or in flight at trace end are CENSORED — counted in the denominator
 #: as violating, never silently dropped.  NaN when no request carries
 #: an SLO (the untimed lockstep paths).
+#: spill_pages / partial_merges count the capacity-ladder rungs below a
+#: full merge: KV pages spilled into neighbor pools (Infinite-LLM-style
+#: distributed-pool serving) and merges satisfied by fractional device
+#: loans with every member still serving.  Both planes feed them from
+#: the shared PoolPartitionManager ledger.
 METRIC_KEYS = ("throughput_tps", "finished", "total",
                "ttft_p50", "ttft_p99",
                "queue_delay_p50", "queue_delay_p99",
@@ -40,7 +45,8 @@ METRIC_KEYS = ("throughput_tps", "finished", "total",
                "goodput_slo",
                "n_transforms",
                "transform_s_p50", "transform_s_p99",
-               "transform_drift_frac", "merge_wall_s")
+               "transform_drift_frac", "merge_wall_s",
+               "spill_pages", "partial_merges")
 
 
 def percentile(xs: Sequence[float], p: float) -> float:
@@ -54,7 +60,9 @@ def percentile(xs: Sequence[float], p: float) -> float:
 
 def summarize(requests: Sequence, duration_s: float, total_tokens: float,
               n_transforms: int,
-              transforms: Sequence[Dict] = ()) -> Dict[str, float]:
+              transforms: Sequence[Dict] = (),
+              spill_pages: int = 0,
+              partial_merges: int = 0) -> Dict[str, float]:
     """Aggregate per-request latency metrics into the shared schema.
 
     ``requests`` may be trace records (``Request``) or live requests
@@ -105,4 +113,6 @@ def summarize(requests: Sequence, duration_s: float, total_tokens: float,
         "transform_drift_frac": percentile(drifts, 50),
         "merge_wall_s": float(sum(t["wall_s"] for t in transforms
                                   if t.get("cross"))),
+        "spill_pages": float(spill_pages),
+        "partial_merges": float(partial_merges),
     }

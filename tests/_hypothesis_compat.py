@@ -11,12 +11,21 @@ across runs, no shrinking, strictly weaker than hypothesis but far
 better than not collecting the module at all.
 
 Only the strategy surface this repo uses is implemented:
-``integers, floats, sampled_from, lists, tuples``.
+``integers, floats, sampled_from, lists, tuples, booleans`` — plus the
+stateful-testing surface (``RuleBasedStateMachine, rule, initialize,
+invariant, precondition, run_state_machine_as_test``) that the
+partition fuzz harness drives: the shim walks each machine through
+pseudo-random rule sequences (preconditions respected, every
+``@invariant`` checked after every step), which preserves the harness's
+bug-finding structure even without hypothesis's shrinking.
 """
 from __future__ import annotations
 
 try:                                    # pragma: no cover - CI path
     from hypothesis import given, settings, strategies  # noqa: F401
+    from hypothesis.stateful import (RuleBasedStateMachine,  # noqa: F401
+                                     initialize, invariant, precondition,
+                                     rule, run_state_machine_as_test)
     HAVE_HYPOTHESIS = True
 except ImportError:                     # the shim
     import functools
@@ -60,12 +69,17 @@ except ImportError:                     # the shim
             return _Strategy(
                 lambda r: tuple(e.example(r) for e in elems))
 
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
     class settings:                     # noqa: N801
         """Decorator recording max_examples; other kwargs accepted and
         ignored (deadline, derandomize, ...)."""
 
         def __init__(self, max_examples: int = 20, **_kw):
             self.max_examples = max_examples
+            self.stateful_step_count = _kw.get("stateful_step_count", 50)
 
         def __call__(self, fn):
             fn._compat_max_examples = self.max_examples
@@ -103,3 +117,79 @@ except ImportError:                     # the shim
             runner.__signature__ = inspect.Signature([])
             return runner
         return deco
+
+    # -- stateful testing (hypothesis.stateful surface) -----------------
+
+    class RuleBasedStateMachine:
+        """State-machine base: subclasses define ``@rule`` methods (with
+        strategy kwargs), optional ``@initialize`` setup steps, and
+        ``@invariant`` checks run after every step."""
+
+    def rule(**strats):
+        def deco(fn):
+            fn._compat_rule = strats
+            return fn
+        return deco
+
+    def initialize(**strats):
+        def deco(fn):
+            fn._compat_init = strats
+            return fn
+        return deco
+
+    def invariant():
+        def deco(fn):
+            fn._compat_invariant = True
+            return fn
+        return deco
+
+    def precondition(pred):
+        def deco(fn):
+            fn._compat_precondition = pred
+            return fn
+        return deco
+
+    def run_state_machine_as_test(cls, settings=None):
+        """Run ``max_examples`` pseudo-random rule sequences of up to
+        ``stateful_step_count`` steps each against fresh machines —
+        deterministic (PRNG seeded by the class name), preconditions
+        respected, every invariant checked after every step."""
+        n_seq = getattr(settings, "max_examples", 20) if settings else 20
+        n_steps = (getattr(settings, "stateful_step_count", 50)
+                   if settings else 50)
+        names = sorted(
+            n for n in dir(cls)
+            if hasattr(getattr(cls, n), "_compat_rule")
+            or hasattr(getattr(cls, n), "_compat_init"))
+        rnd = _random.Random(f"repro:{cls.__module__}.{cls.__qualname__}")
+
+        def check_invariants(m):
+            for n in dir(cls):
+                if getattr(getattr(cls, n), "_compat_invariant", False):
+                    getattr(m, n)()
+
+        for _ in range(n_seq):
+            m = cls()
+            for n in names:
+                fn = getattr(cls, n)
+                if hasattr(fn, "_compat_init"):
+                    kw = {k: s.example(rnd)
+                          for k, s in fn._compat_init.items()}
+                    getattr(m, n)(**kw)
+            check_invariants(m)
+            for _ in range(n_steps):
+                enabled = [
+                    n for n in names
+                    if hasattr(getattr(cls, n), "_compat_rule")
+                    and getattr(getattr(cls, n), "_compat_precondition",
+                                lambda _m: True)(m)]
+                if not enabled:
+                    break
+                n = rnd.choice(enabled)
+                fn = getattr(cls, n)
+                kw = {k: s.example(rnd)
+                      for k, s in fn._compat_rule.items()}
+                getattr(m, n)(**kw)
+                check_invariants(m)
+            if hasattr(m, "teardown"):
+                m.teardown()

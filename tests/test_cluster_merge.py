@@ -373,3 +373,234 @@ def test_migrate_slot_pages_kernel_matches_fallback():
     src3 = jnp.asarray(rng.normal(size=(2, 3, 2, 4, 8)), jnp.float32)
     with np.testing.assert_raises(Exception):
         migrate_slot_pages(src3, dst, 2, 0).block_until_ready()
+
+
+# ---- partial-merge / spill negative paths (ISSUE-8 satellites) --------
+
+
+def test_sim_spill_grant_failure_falls_back_to_partial_merge():
+    """When every spill grant fails (stale scheduler view: the chosen
+    host ran out of free pages), the simulated ladder falls one rung
+    down to a partial merge instead of crashing or dropping the
+    request."""
+    from repro.configs import get_config
+    from repro.core.cluster_sim import Cluster
+    from repro.core.scheduler import (GygesScheduler, PrefillPolicy,
+                                      ScaleUp, SchedulerConfig, Spill)
+    from repro.serving.request import Request
+
+    cfg = get_config("llama3-8b").reduced()
+    Q = 16
+    policy = PrefillPolicy(token_budget=16, mode="mixed",
+                           long_threshold=Q, order="sjf")
+    sched = GygesScheduler(SchedulerConfig(
+        long_threshold=Q, target_tp=4, spill=True, partial_merge=True,
+        spill_slack=2.0))
+    sim = Cluster(cfg, n_hosts=1, gpus_per_host=8, scheduler=sched,
+                  target_tp=4, prefill_policy=policy, seq_quantum=Q,
+                  max_batch=2, widths=[2, 2, 2, 2], page_tokens=Q)
+    sim._execute_spill = lambda act, req, now: False   # host never grants
+    now, dt = 0.0, 0.25
+    req = Request(9, now, 24, 16)          # total 40: the spill range
+    sim.submit(req, now)
+    for _ in range(20000):
+        sim.advance(now, dt)
+        now += dt
+        if req.tokens_done >= req.out_len \
+                and all(i.tp == 1 for i in sim.instances):
+            break
+    else:
+        raise RuntimeError("sim did not drain the spilled-over request")
+    assert not any(isinstance(a, Spill) for a in sim.actions), sim.actions
+    partials = [a for a in sim.actions
+                if isinstance(a, ScaleUp) and a.donor_devices]
+    assert partials, sim.actions
+    m = sim.metrics(now)
+    assert m["spill_pages"] == 0
+    assert m["partial_merges"] >= 1
+    sim.partition.check_invariants()
+    assert all(i.width == 2 for i in sim.instances)
+
+
+@pytest.mark.slow
+def test_partial_merge_donor_serves_mid_chunked_prefill():
+    """ISSUE-8 negative path: a donor that is MID-chunked-prefill when a
+    partial merge shears off one of its devices keeps advancing — its
+    in-flight request survives the same-degree shrink, finishes with a
+    stream bit-identical to a reference engine, nobody parks, and the
+    scale-down widens every donor back to its home width."""
+    out = run_py("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs import get_config
+        from repro.core.padding import make_plan
+        from repro.core.scheduler import (GygesScheduler, PrefillPolicy,
+                                          ScaleUp, SchedulerConfig)
+        from repro.models import model as M
+        from repro.serving.cluster import ClusterEngine
+        from repro.serving.engine import Engine
+        from repro.serving.request import ServeRequest
+
+        cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                                  dtype="float32")
+        devs = jax.devices()
+        plan = make_plan(cfg, len(devs), mode="page")
+        host_params = M.init_params(jax.random.PRNGKey(11), cfg, plan)
+        Q = 16
+        # chunk boundaries are page boundaries: 4-token pages + a
+        # 4-token budget force every 12-token prompt through 3 chunks,
+        # so a prefill is reliably mid-flight when the merge fires
+        policy = PrefillPolicy(token_budget=4, mode="mixed",
+                               long_threshold=Q, order="sjf")
+        sched = GygesScheduler(SchedulerConfig(
+            long_threshold=Q, target_tp=4, partial_merge=True))
+        cluster = ClusterEngine(cfg, devs[:8], n_instances=4,
+                                max_batch=2, max_seq=2 * Q,
+                                page_tokens=4, dwell_steps=4,
+                                params=host_params, scheduler=sched,
+                                prefill_policy=policy)
+        for e in cluster.engines:
+            e.transform(1)
+        cluster.run(max_steps=4000)
+        assert not cluster.actions
+
+        rng = np.random.default_rng(0)
+        prompts = {rid: rng.integers(0, cfg.vocab_size,
+                                     size=n).tolist()
+                   for rid, n in [(0, 12), (1, 12), (2, 12), (3, 12),
+                                  (9, 40)]}
+        shorts = [ServeRequest(rid=r, prompt=list(prompts[r]),
+                               max_new_tokens=4) for r in range(4)]
+        for r in shorts:
+            cluster.submit(r)
+        # one short per engine, so every merge donor holds live work
+        per_engine = [len(e.waiting) + sum(s is not None
+                                           for s in e.slots)
+                      for e in cluster.engines]
+        assert per_engine == [1, 1, 1, 1], per_engine
+        cluster.step()
+        # every engine is mid-chunk: some but not all prompt tokens
+        # prefilled ("done" counts completed tokens)
+        assert all(e._prefilling and all(
+                       0 < st["done"] < len(st["req"].prompt)
+                       for st in e._prefilling.values())
+                   for e in cluster.engines), (
+            [[(k, st["done"]) for k, st in e._prefilling.items()]
+             for e in cluster.engines])
+
+        long_r = ServeRequest(rid=9, prompt=list(prompts[9]),
+                              max_new_tokens=16)      # total 56
+        cluster.submit(long_r)
+        partials = [a for a in cluster.actions
+                    if isinstance(a, ScaleUp) and a.donor_devices]
+        assert partials, cluster.actions
+        act = partials[0]
+        donors = [cluster._engine(i) for i in act.donor_iids]
+        # the shrink already landed (same-degree re-shard, 0 steps):
+        # each donor kept serving width, kept its slot, never parked
+        for d, n in zip(donors, act.donor_devices):
+            assert not d.parked and d.W == 2 - n and d.tp == 1, (
+                d.iid, d.W, d.tp)
+            assert any(s is not None for s in d.slots), d.iid
+        before = {}
+        for d in donors:
+            slot = min(d._prefilling)
+            before[d.iid] = (slot, d._prefilling[slot]["ci"],
+                             len(shorts[d.iid].generated))
+        for _ in range(4):
+            cluster.step()
+        for d in donors:
+            slot, ci0, g0 = before[d.iid]
+            st = d._prefilling.get(slot)
+            advanced = (shorts[d.iid].finished
+                        or len(shorts[d.iid].generated) > g0
+                        or (st is not None and st["ci"] > ci0))
+            assert advanced, (d.iid, before[d.iid],
+                              shorts[d.iid].generated)
+
+        cluster.run(max_steps=8000)
+        assert all(r.finished for r in shorts) and long_r.finished
+        assert cluster.stall_steps == 0, cluster.stall_steps
+        assert all(not e.parked and e.tp == 1 and e.W == 2
+                   for e in cluster.engines), (
+            [(e.iid, e.W, e.tp, e.parked) for e in cluster.engines])
+        assert not cluster.partition._loans
+        cluster.partition.check_invariants()
+        assert cluster.metrics()["partial_merges"] >= 1
+
+        # bit-exact streams vs each request alone on a static engine
+        ref = Engine(cfg, params=host_params, max_batch=8, max_seq=64,
+                     devices=devs, plan=plan)
+        for got in shorts + [long_r]:
+            want = ServeRequest(rid=100 + got.rid,
+                                prompt=list(prompts[got.rid]),
+                                max_new_tokens=got.max_new_tokens)
+            ref.submit(want)
+            ref.run_until_done(2000)
+            assert want.generated == got.generated, (
+                got.rid, want.generated, got.generated)
+        print("PARTIAL_DONOR_OK")
+    """)
+    assert "PARTIAL_DONOR_OK" in out
+
+
+@pytest.mark.slow
+def test_live_spill_grant_failure_falls_back_to_partial_merge():
+    """ISSUE-8 negative path, live plane: the scheduler decides a spill
+    from a (stale) view that shows free host pages, but the host's
+    grant fails at execution time — the placement falls down the ladder
+    to a partial merge and the request is served, not dropped."""
+    out = run_py("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs import get_config
+        from repro.core.scheduler import (GygesScheduler, PrefillPolicy,
+                                          ScaleUp, SchedulerConfig,
+                                          Spill)
+        from repro.serving.cluster import ClusterEngine
+        from repro.serving.request import ServeRequest
+
+        cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                                  dtype="float32")
+        devs = jax.devices()
+        Q = 16
+        policy = PrefillPolicy(token_budget=16, mode="mixed",
+                               long_threshold=Q, order="sjf")
+        sched = GygesScheduler(SchedulerConfig(
+            long_threshold=Q, target_tp=4, spill=True,
+            partial_merge=True, spill_slack=2.0))
+        cluster = ClusterEngine(cfg, devs[:8], n_instances=4,
+                                max_batch=2, max_seq=2 * Q,
+                                page_tokens=Q, dwell_steps=4,
+                                scheduler=sched, prefill_policy=policy)
+        for e in cluster.engines:
+            e.transform(1)
+        cluster.run(max_steps=4000)
+        assert not cluster.actions
+
+        # every would-be host is out of free pages at grant time
+        for e in cluster.engines:
+            e.host_spilled = lambda n_pages: None
+
+        rng = np.random.default_rng(0)
+        long_r = ServeRequest(
+            rid=9, prompt=rng.integers(0, cfg.vocab_size,
+                                       size=24).tolist(),
+            max_new_tokens=16)             # total 40: the spill range
+        cluster.submit(long_r)
+        assert not any(isinstance(a, Spill) for a in cluster.actions), (
+            cluster.actions)
+        partials = [a for a in cluster.actions
+                    if isinstance(a, ScaleUp) and a.donor_devices]
+        assert partials, cluster.actions
+        assert not cluster.partition.spills()
+
+        cluster.run(max_steps=8000)
+        assert long_r.finished and len(long_r.generated) == 16
+        m = cluster.metrics()
+        assert m["spill_pages"] == 0 and m["partial_merges"] >= 1, m
+        assert all(not e.parked and e.W == 2 for e in cluster.engines)
+        cluster.partition.check_invariants()
+        print("SPILL_FALLBACK_OK")
+    """)
+    assert "SPILL_FALLBACK_OK" in out

@@ -1,0 +1,353 @@
+"""Stateful fuzz of the pool-partition ledger (the tentpole's proof).
+
+``core.partition.PoolPartitionManager`` is the single ledger both
+control planes mutate through every transformation: full merges
+(whole-engine loan + park + adopt), partial merges (fractional loan
+while the donor keeps serving), splits (loans returned, parked donors
+revived), and KV spill regions.  This harness drives the manager
+through RANDOM INTERLEAVINGS of exactly those transitions — the same
+call sequences ``serving.cluster.ClusterEngine`` and
+``core.cluster_sim.Cluster`` issue, minus the tensors — and checks the
+partition invariant after every single action:
+
+  * every registered device is reachable exactly once (held by one
+    serving partition, or in flight inside one un-adopted loan);
+  * parked partitions hold nothing;
+  * at most one open spill region per request.
+
+Illegal transitions (reviving a fractionally re-loaned donor,
+returning a loan whose devices were re-loaned, double-parking, lending
+devices one does not hold...) must refuse with ``PartitionError`` and
+leave the ledger byte-identical — refuse-and-rollback is itself an
+invariant here, checked by diffing a deep snapshot around every
+expected failure.
+
+Profile: ``PARTITION_FUZZ_SEQUENCES`` / ``PARTITION_FUZZ_STEPS`` bound
+the run (PR lane: the 200x30 default; the main-branch soak lane turns
+them up).  Runs under real hypothesis when installed, else under the
+deterministic shim in ``_hypothesis_compat`` (same machine, no
+shrinking).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from _hypothesis_compat import (RuleBasedStateMachine, initialize,  # noqa: E402
+                                invariant, precondition, rule,
+                                run_state_machine_as_test, settings,
+                                strategies as st)
+
+from repro.core.partition import (PartitionError,  # noqa: E402
+                                  PoolPartitionManager)
+
+N_SEQUENCES = int(os.environ.get("PARTITION_FUZZ_SEQUENCES", "200"))
+N_STEPS = int(os.environ.get("PARTITION_FUZZ_STEPS", "30"))
+
+
+def _snapshot(pm: PoolPartitionManager):
+    """Deep, comparison-friendly image of the whole ledger."""
+    return (
+        {i: tuple(pm.home_devices(i)) for i in pm.partitions()},
+        {i: tuple(pm.held_devices(i)) for i in pm.partitions()},
+        {i: pm.parked(i) for i in pm.partitions()},
+        tuple((ln.lender, ln.borrower, tuple(ln.devices), ln.whole,
+               ln.adopted)
+              for i in pm.partitions() for ln in pm.loans_to(i)),
+        tuple(sorted((rid, r.guest, r.host, r.rid, r.pages)
+                     for rid, r in pm.spills().items())),
+    )
+
+
+class PartitionMachine(RuleBasedStateMachine):
+    """Random transform-sequence driver.
+
+    Each rule draws an unbounded index and picks from the currently
+    eligible candidates by modulo — the standard way to make
+    state-dependent choices under hypothesis (``sampled_from`` over
+    live state would bake stale choices into the example database).
+    Rules that pick an INELIGIBLE candidate on purpose assert the
+    ``PartitionError`` refusal and that the ledger did not move.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self.pm = PoolPartitionManager()
+        self.next_rid = 0
+        self.open_regions = []          # region ids we opened
+
+    # -- helpers --------------------------------------------------------
+
+    def _live(self):
+        return [i for i in self.pm.partitions() if not self.pm.parked(i)]
+
+    def _parked(self):
+        return [i for i in self.pm.partitions() if self.pm.parked(i)]
+
+    def _expect_refusal(self, fn, *args, **kwargs):
+        before = _snapshot(self.pm)
+        try:
+            fn(*args, **kwargs)
+        except PartitionError:
+            assert _snapshot(self.pm) == before, (
+                "a refused operation mutated the ledger")
+            return
+        raise AssertionError(
+            f"{getattr(fn, '__name__', fn)}{args} should have raised "
+            f"PartitionError")
+
+    # -- setup ----------------------------------------------------------
+
+    @initialize(n=st.integers(min_value=3, max_value=6),
+                w=st.integers(min_value=1, max_value=4))
+    def register_cluster(self, n, w):
+        """n engines of width w (+1 wider engine so fractional loans
+        always have a donor with something to spare)."""
+        dev = iter(range(1000))
+        for iid in range(n):
+            self.pm.register(iid, [next(dev) for _ in range(w)])
+        self.pm.register(n, [next(dev) for _ in range(max(w, 2))])
+
+    # -- transform-sequence rules (the cluster's call patterns) ---------
+
+    @rule(i=st.integers(min_value=0, max_value=10 ** 6),
+          j=st.integers(min_value=0, max_value=10 ** 6),
+          k=st.integers(min_value=0, max_value=10 ** 6),
+          defer=st.booleans())
+    def partial_merge(self, i, j, k, defer):
+        """A donor sheds a strict fraction of its held devices to a
+        live borrower (``_merge_partial`` / ``_execute_partial``); the
+        borrower adopts now (sim) or later (the live plane's two-phase
+        ``_advance_partials``, exercised by ``adopt_pending``)."""
+        donors = [x for x in self._live()
+                  if len(self.pm.held_devices(x)) >= 2]
+        if not donors:
+            return
+        donor = donors[i % len(donors)]
+        borrowers = [x for x in self._live() if x != donor]
+        if not borrowers:
+            return
+        borrower = borrowers[j % len(borrowers)]
+        held = self.pm.held_devices(donor)
+        n = 1 + k % (len(held) - 1)       # 1 .. held-1: donor keeps >=1
+        loan = self.pm.lend(donor, borrower, held[-n:], whole=False)
+        if not defer:
+            self.pm.adopt(borrower, loan)
+
+    @rule(i=st.integers(min_value=0, max_value=10 ** 6))
+    def adopt_pending(self, i):
+        """Phase 2 of a live partial merge: the borrower widens onto an
+        in-flight loan."""
+        pending = [ln for x in self.pm.partitions()
+                   for ln in self.pm.loans_to(x) if not ln.adopted]
+        if not pending:
+            return
+        loan = pending[i % len(pending)]
+        self.pm.adopt(loan.borrower, loan)
+
+    @rule(i=st.integers(min_value=0, max_value=10 ** 6),
+          j=st.integers(min_value=0, max_value=10 ** 6))
+    def full_merge(self, i, j):
+        """Whole-engine donor: lend everything, park, borrower adopts
+        (``ClusterEngine._merge`` / ``Cluster._merge_members``)."""
+        donors = [x for x in self._live()
+                  if self.pm.held_devices(x) and not self.pm.loans_from(x)
+                  and not self.pm.loans_to(x)]
+        if not donors:
+            return
+        donor = donors[i % len(donors)]
+        borrowers = [x for x in self._live() if x != donor]
+        if not borrowers:
+            return
+        borrower = borrowers[j % len(borrowers)]
+        loan = self.pm.lend(donor, borrower,
+                            self.pm.held_devices(donor), whole=True)
+        self.pm.park(donor)
+        self.pm.adopt(borrower, loan)
+
+    @rule(i=st.integers(min_value=0, max_value=10 ** 6))
+    def split(self, i):
+        """Return one loan; revive its lender when that was the last
+        loan keeping a parked donor's home set apart
+        (``_finalize_releases``).  If the borrower re-lent any of the
+        devices the return must refuse and change nothing."""
+        loans = [ln for x in self.pm.partitions()
+                 for ln in self.pm.loans_to(x)]
+        if not loans:
+            return
+        loan = loans[i % len(loans)]
+        if loan.adopted and any(
+                d not in self.pm.held_devices(loan.borrower)
+                for d in loan.devices):
+            self._expect_refusal(self.pm.return_loan, loan)
+            return
+        lender = loan.lender
+        self.pm.return_loan(loan)
+        if self.pm.parked(lender):
+            held = self.pm.held_devices(lender)
+            if all(d in held for d in self.pm.home_devices(lender)):
+                self.pm.revive(lender)
+            else:
+                self._expect_refusal(self.pm.revive, lender)
+
+    @rule(i=st.integers(min_value=0, max_value=10 ** 6))
+    def revive_early(self, i):
+        """Reviving a donor whose home devices are still out (possibly
+        fractionally re-loaned to a third engine) must refuse with a
+        clear error naming the holders — never a silent double-own."""
+        stuck = [x for x in self._parked()
+                 if any(d not in self.pm.held_devices(x)
+                        for d in self.pm.home_devices(x))]
+        if not stuck:
+            return
+        self._expect_refusal(self.pm.revive, stuck[i % len(stuck)])
+
+    @rule(i=st.integers(min_value=0, max_value=10 ** 6),
+          j=st.integers(min_value=0, max_value=10 ** 6),
+          pages=st.integers(min_value=1, max_value=64))
+    def spill_open(self, i, j, pages):
+        """Open a spill region guest -> host; a second region for the
+        same request must refuse."""
+        live = self._live()
+        if len(live) < 2:
+            return
+        guest = live[i % len(live)]
+        host = [x for x in live if x != guest][j % (len(live) - 1)]
+        rid = self.next_rid
+        self.next_rid += 1
+        region = self.pm.open_spill(guest, host, rid, pages, (0,),
+                                    tokens=pages * 16)
+        self.open_regions.append(region)
+        self._expect_refusal(self.pm.open_spill, guest, host, rid,
+                             pages, (0,))
+        self._expect_refusal(self.pm.open_spill, guest, guest,
+                             rid + 10 ** 7, pages, (0,))
+
+    @rule(i=st.integers(min_value=0, max_value=10 ** 6))
+    def spill_close(self, i):
+        if not self.open_regions:
+            return
+        region = self.open_regions.pop(i % len(self.open_regions))
+        self.pm.close_spill(region)
+        self._expect_refusal(self.pm.close_spill, region)
+
+    @rule(i=st.integers(min_value=0, max_value=10 ** 6),
+          k=st.integers(min_value=0, max_value=10 ** 6))
+    def relend_borrowed(self, i, k):
+        """A borrower may lend devices it holds on loan onward (the
+        ledger keeps single ownership either way) — this is what makes
+        the later whole-loan return refuse until the chain unwinds."""
+        cands = [x for x in self._live()
+                 if len(self.pm.held_devices(x)) >= 2
+                 and self.pm.loans_to(x)]
+        if not cands:
+            return
+        src = cands[i % len(cands)]
+        others = [x for x in self._live() if x != src]
+        if not others:
+            return
+        dst = others[k % len(others)]
+        held = self.pm.held_devices(src)
+        loan = self.pm.lend(src, dst, held[-1:], whole=False)
+        self.pm.adopt(dst, loan)
+
+    @rule(i=st.integers(min_value=0, max_value=10 ** 6))
+    def illegal_lend(self, i):
+        """Lending a device one does not hold refuses; self-loans
+        refuse; double-parks refuse."""
+        parts = self.pm.partitions()
+        x = parts[i % len(parts)]
+        foreign = object()
+        self._expect_refusal(self.pm.lend, x, (x + 1) % len(parts),
+                             [foreign], whole=False)
+        self._expect_refusal(self.pm.lend, x, x, [], whole=False)
+        if self.pm.parked(x):
+            self._expect_refusal(self.pm.park, x)
+        elif self.pm.held_devices(x):
+            self._expect_refusal(self.pm.park, x)
+
+    # -- THE invariant ---------------------------------------------------
+
+    @invariant()
+    def partition_invariant(self):
+        self.pm.check_invariants()
+
+    @invariant()
+    def spill_books_match(self):
+        assert sorted(self.open_regions) == sorted(self.pm.spills())
+
+
+def test_partition_fuzz():
+    """>= 200 random transform sequences (PR profile; the soak lane
+    raises PARTITION_FUZZ_SEQUENCES), every action invariant-checked."""
+    run_state_machine_as_test(
+        PartitionMachine,
+        settings=settings(max_examples=N_SEQUENCES,
+                          stateful_step_count=N_STEPS,
+                          deadline=None))
+
+
+# -- deterministic regressions (the fuzz found / guards these) ----------
+
+
+def test_revive_fractionally_reloaned_donor_raises():
+    """Donor A whole-lends to B and parks; B re-lends one of A's home
+    devices to C.  Returning B's loan must refuse (device now held by
+    C), and reviving A must refuse with an error naming the holder."""
+    pm = PoolPartitionManager()
+    pm.register(0, ["a0", "a1"])
+    pm.register(1, ["b0", "b1"])
+    pm.register(2, ["c0"])
+    whole = pm.lend(0, 1, ["a0", "a1"], whole=True)
+    pm.park(0)
+    pm.adopt(1, whole)
+    pm.check_invariants()
+    onward = pm.lend(1, 2, ["a1"], whole=False)
+    pm.adopt(2, onward)
+    pm.check_invariants()
+    try:
+        pm.return_loan(whole)
+        raise AssertionError("return of a re-loaned loan must refuse")
+    except PartitionError as e:
+        assert "re-loaned" in str(e)
+    try:
+        pm.revive(0)
+        raise AssertionError("revive with devices still out must refuse")
+    except PartitionError as e:
+        assert "loaned out" in str(e) and "2" in str(e)
+    # unwind the chain and the revive goes through
+    pm.return_loan(onward)
+    pm.return_loan(whole)
+    pm.revive(0)
+    pm.check_invariants()
+    assert pm.held_devices(0) == ["a0", "a1"]
+
+
+def test_partial_loan_keeps_single_ownership():
+    """A fractional loan moves devices out of the lender immediately
+    (in-flight), into the borrower on adopt — never in two places."""
+    pm = PoolPartitionManager()
+    pm.register(0, [0, 1, 2, 3])
+    pm.register(1, [4])
+    loan = pm.lend(0, 1, [2, 3], whole=False)
+    assert pm.held_devices(0) == [0, 1]
+    assert pm.held_devices(1) == [4]      # in flight, not yet adopted
+    pm.check_invariants()
+    pm.adopt(1, loan)
+    assert pm.held_devices(1) == [4, 2, 3]
+    pm.check_invariants()
+    assert pm.return_loan(loan) == [2, 3]
+    assert pm.held_devices(0) == [0, 1, 2, 3]
+    pm.check_invariants()
+
+
+def test_whole_loan_requires_every_held_device():
+    pm = PoolPartitionManager()
+    pm.register(0, [0, 1])
+    pm.register(1, [2])
+    try:
+        pm.lend(0, 1, [0], whole=True)
+        raise AssertionError("partial whole-loan must refuse")
+    except PartitionError:
+        pass
+    pm.check_invariants()

@@ -16,12 +16,13 @@ class StubView:
     """Minimal InstanceView for policy-only tests (no sim, no jax)."""
 
     def __init__(self, iid, tp=1, max_tp=4, base_seq=16, used=0.0,
-                 reserved=False, long_active=False):
+                 reserved=False, long_active=False, width=None):
         self.iid = iid
         self.tp = tp
         self.max_tp = max_tp
         self.base_seq = base_seq
         self.reserved = reserved
+        self.width = width if width is not None else tp
         self._used = used
         self._long = long_active
 
@@ -387,3 +388,89 @@ def test_pressure_is_opt_in_and_narrows_merges():
     assert aware.pressure_high()
     act = aware.decide_merge(views(), total)
     assert isinstance(act, ScaleUp) and act.tp_to == 4
+
+
+# -- capacity ladder: spill < partial merge < full merge ----------------
+
+
+def test_donor_loanable_admissibility():
+    """The relaxed merge-admissibility predicate: a donor may join a
+    (partial) merge iff it can shed >= 1 device and keep serving —
+    replacing the old hard requirement of a whole idle TP1 engine."""
+    sch = GygesScheduler(SchedulerConfig(long_threshold=16))
+    # single-device engines have nothing to spare
+    assert sch.donor_loanable(StubView(0, tp=1, width=1)) == 0
+    # an idle width-4 donor keeps 1 device, loans 3
+    assert sch.donor_loanable(StubView(1, tp=1, width=4)) == 3
+    # 60% full: keep = ceil(0.6 * 4) = 3, loan 1
+    assert sch.donor_loanable(StubView(2, tp=1, width=4, used=0.6)) == 1
+    # full: nothing loanable
+    assert sch.donor_loanable(StubView(3, tp=1, width=4, used=1.0)) == 0
+    # a long request pins the donor's whole ceiling
+    assert sch.donor_loanable(
+        StubView(4, tp=1, width=4, long_active=True)) == 0
+
+
+def test_ladder_is_opt_in():
+    """Defaults keep legacy behavior byte-identical: without the
+    ``spill`` / ``partial_merge`` flags the ladder rungs return None
+    and ``decide_capacity`` degrades to plain ``decide_merge``."""
+    sch = GygesScheduler(SchedulerConfig(long_threshold=16, target_tp=4))
+    views = [StubView(i, tp=1, width=2, base_seq=16) for i in range(4)]
+    assert sch.decide_spill(views, 40) is None
+    assert sch.decide_partial_merge(views, 56) is None
+    act = sch.decide_capacity(views, 56)
+    assert isinstance(act, ScaleUp) and not act.donor_devices
+
+
+def test_decide_partial_merge_geometry():
+    """Width-2 engines, pool 8: a 56-token request widens one target to
+    4 with two donors loaning one device each — every donor keeps a
+    device and keeps serving."""
+    sch = GygesScheduler(SchedulerConfig(long_threshold=16, target_tp=4,
+                                         partial_merge=True))
+    views = [StubView(i, tp=1, width=2, base_seq=16) for i in range(4)]
+    act = sch.decide_partial_merge(views, 56)
+    assert isinstance(act, ScaleUp)
+    assert act.tp_to == 4
+    assert act.donor_iids == (1, 2)       # idlest-first, iid tie-break
+    assert act.donor_devices == (1, 1)    # each keeps one device
+    # a busy donor is skipped in favor of idler ones
+    views[1]._used = 0.9
+    act = sch.decide_partial_merge(views, 56)
+    assert act.donor_iids == (2, 3)
+
+
+def test_decide_spill_bounds_and_host_choice():
+    """Spill serves only bounded overflow (<= spill_slack * ceiling)
+    and needs a host with whole free slots for the overflow."""
+    sch = GygesScheduler(SchedulerConfig(long_threshold=16, target_tp=4,
+                                         spill=True, spill_slack=2.0))
+    views = [StubView(i, tp=1, width=2, base_seq=16) for i in range(4)]
+    act = sch.decide_spill(views, 40)     # overflow 24 <= 32
+    assert act is not None
+    assert act.iid == 0 and act.host_iid == 1 and act.tokens == 24
+    assert sch.decide_spill(views, 16) is None       # fits locally
+    assert sch.decide_spill(views, 49) is None       # overflow 33 > 32
+    # hosts without the free slots are skipped
+    for v in views[1:]:
+        v._used = 1.0
+    assert sch.decide_spill(views, 40) is None
+
+
+def test_decide_capacity_orders_the_rungs():
+    """When several rungs can serve the request the ladder takes the
+    cheapest: spill < partial merge < full merge (rung index without a
+    cost model; Table-1 modeled seconds with one attached)."""
+    sch = GygesScheduler(SchedulerConfig(long_threshold=16, target_tp=4,
+                                         spill=True, partial_merge=True,
+                                         spill_slack=2.0))
+    views = [StubView(i, tp=1, width=2, base_seq=16) for i in range(4)]
+    from repro.core.scheduler import Spill
+    assert isinstance(sch.decide_capacity(views, 40), Spill)
+    act = sch.decide_capacity(views, 56)  # overflow 40 > slack: no spill
+    assert isinstance(act, ScaleUp) and act.donor_devices == (1, 1)
+    # with a Table-1 cost model attached the ordering is by modeled
+    # seconds, and a small spill still beats any transform
+    sch.attach_cost(CostModel(CFG))
+    assert isinstance(sch.decide_capacity(views, 40), Spill)

@@ -185,6 +185,131 @@ def test_decision_parity_sim_vs_live(sched):
     assert r["live_keys"] == r["sim_keys"] == r["metric_keys"]
 
 
+#: capacity-ladder geometry: 4 width-2 engines (pool 8), quantum 16.
+#: In-place growth covers totals <= 32, so with spill_slack=2.0 the
+#: spill rung owns totals 33-48 and the partial-merge rung 49-64:
+#:   r1 (total 40) -> KV spill, guest 0 hosting on 1, NO transform;
+#:   r2 (total 56) -> partial merge: target 0 widens to 4 on one
+#:                    device from each of donors 1 and 2 — who keep
+#:                    serving at width 1 (nobody parks, nobody drains)
+LADDER_TRACE = [(0, 10, 4), (1, 24, 16), (2, 40, 16), (3, 10, 4)]
+
+LADDER_DRIVER = """
+    import dataclasses, json
+    import jax, numpy as np
+
+    from repro.configs import get_config
+    from repro.core.cluster_sim import Cluster
+    from repro.core.scheduler import (GygesScheduler, PrefillPolicy,
+                                      SchedulerConfig, ScaleUp, Spill)
+    from repro.serving.cluster import ClusterEngine
+    from repro.serving.metrics import METRIC_KEYS
+    from repro.serving.request import Request, ServeRequest
+
+    TRACE = {trace}
+    Q = 16
+    POLICY = PrefillPolicy(token_budget=16, mode="mixed",
+                           long_threshold=Q, order="sjf")
+    mk_sched = lambda: GygesScheduler(SchedulerConfig(
+        long_threshold=Q, target_tp=4, spill=True, partial_merge=True,
+        spill_slack=2.0))
+
+    def act_key(a):
+        return (type(a).__name__, a.iid, getattr(a, "tp_to", None),
+                tuple(sorted(getattr(a, "donor_iids", ()) or ())),
+                tuple(getattr(a, "donor_devices", ()) or ()),
+                getattr(a, "host_iid", None))
+
+    # ---- live plane: 4 width-2 engines ----------------------------
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    devs = jax.devices()
+    assert len(devs) >= 8, len(devs)
+    rng = np.random.default_rng(0)
+    prompts = {{rid: rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for rid, n, _ in TRACE}}
+    live = ClusterEngine(cfg, devs[:8], n_instances=4, max_batch=2,
+                         max_seq=2 * Q, page_tokens=Q, dwell_steps=4,
+                         scheduler=mk_sched(), prefill_policy=POLICY)
+    # width-2 engines construct at tp=2; the ladder serves shorts at
+    # tp=1, so warm every engine down (a same-degree contract as the
+    # sim's widths= construction; direct engine calls, no actions)
+    for e in live.engines:
+        e.transform(1)
+    live.run(max_steps=4000)
+    assert not live.actions and live.n_transforms == 0
+    for rid, n, out in TRACE:
+        live.submit(ServeRequest(rid=rid, prompt=list(prompts[rid]),
+                                 max_new_tokens=out))
+        live.run(max_steps=8000)    # drain + Alg-2 quiet window
+        assert all(e.tp == 1 and not e.parked for e in live.engines)
+        assert not live.partition.spills()
+    live_metrics = live.metrics()
+
+    # ---- simulated plane: matched geometry ------------------------
+    sim = Cluster(cfg, n_hosts=1, gpus_per_host=8, scheduler=mk_sched(),
+                  target_tp=4, prefill_policy=POLICY, seq_quantum=Q,
+                  max_batch=2, widths=[2, 2, 2, 2], page_tokens=Q)
+    sim.scale_down_dwell = 5.0
+    now = 0.0
+    dt = 0.25
+    for rid, n, out in TRACE:
+        sim.submit(Request(rid, now, n, out), now)
+        for _ in range(20000):
+            sim.advance(now, dt)
+            now += dt
+            done = all(r.tokens_done >= r.out_len
+                       for r in sim._req_by_rid.values())
+            if done and all(i.tp == 1 for i in sim.instances) \
+                    and not sim.waiting and not sim.partition.spills():
+                break
+        else:
+            raise RuntimeError(f"sim did not drain request {{rid}}")
+        sim.partition.check_invariants()
+    sim_metrics = sim.metrics(now)
+    live.partition.check_invariants()
+
+    print("RESULT " + json.dumps({{
+        "live_placements": {{str(k): v
+                            for k, v in live.placements.items()}},
+        "sim_placements": {{str(k): v
+                           for k, v in sim.placements.items()}},
+        "live_actions": [act_key(a) for a in live.actions],
+        "sim_actions": [act_key(a) for a in sim.actions],
+        "live_keys": list(live_metrics), "sim_keys": list(sim_metrics),
+        "metric_keys": list(METRIC_KEYS),
+        "live_spills": sum(1 for a in live.actions
+                           if isinstance(a, Spill)),
+        "live_partials": sum(1 for a in live.actions
+                             if isinstance(a, ScaleUp)
+                             and a.donor_devices),
+        "live_spill_pages": live_metrics["spill_pages"],
+        "sim_spill_pages": sim_metrics["spill_pages"],
+        "live_partial_merges": live_metrics["partial_merges"],
+        "sim_partial_merges": sim_metrics["partial_merges"],
+    }}))
+"""
+
+
+def test_ladder_decision_parity_partial_merge_and_spill():
+    """The capacity-ladder tentpole, differentially: a trace whose
+    longs trigger >= 1 KV spill and >= 1 partial merge replays through
+    both planes with identical routing, an identical action sequence
+    (same spill guest/host, same partial-merge target, donors AND
+    per-donor device counts), and identical spill/partial counters."""
+    body = textwrap.dedent(LADDER_DRIVER).format(trace=LADDER_TRACE)
+    r = _run_driver(body, "ladder")
+    assert r["live_placements"] == r["sim_placements"], (
+        r["live_placements"], r["sim_placements"])
+    assert r["live_actions"] == r["sim_actions"], (
+        r["live_actions"], r["sim_actions"])
+    assert r["live_spills"] >= 1, r["live_actions"]
+    assert r["live_partials"] >= 1, r["live_actions"]
+    assert r["live_spill_pages"] == r["sim_spill_pages"] > 0
+    assert r["live_partial_merges"] == r["sim_partial_merges"] >= 1
+    assert r["live_keys"] == r["sim_keys"] == r["metric_keys"]
+
+
 #: the timed case delegates to the SAME dual-replay driver the CI
 #: ``bench_e2e --replay-smoke`` lane runs at 1000+ requests — one code
 #: path, two scales
