@@ -590,8 +590,12 @@ def weight_stream_micro() -> Dict[str, float]:
 
 #: trajectory schema: bump when scenario names / column meaning change
 #: (v2: + kernel.chunk_prefill scenario — gated chunk_prefill_tok_per_s,
-#: informational speedup_vs_unfused and weight_stream_overlap_frac)
-TRAJECTORY_SCHEMA_VERSION = 2
+#: informational speedup_vs_unfused and weight_stream_overlap_frac;
+#: v3: + calibration.isolated scenario — gated kv_drift_gated, the
+#: noise-floored modeled-vs-isolated-measured drift of the fitted link
+#: on the kernel KV-migration spans, with raw drift, span walls and
+#: fitted constants informational)
+TRAJECTORY_SCHEMA_VERSION = 3
 
 #: gated columns and the direction that counts as BETTER; every other
 #: emitted column (transform walls, merge_wall_s, ...) is informational
@@ -601,6 +605,7 @@ TRAJECTORY_GATES = {
     "tpot_p50": "lower", "tpot_p99": "lower",
     "goodput_slo": "higher",
     "chunk_prefill_tok_per_s": "higher",
+    "kv_drift_gated": "lower",
 }
 
 _TRAJECTORY_COLUMNS = ("throughput_tps", "ttft_p50", "ttft_p99",
@@ -636,6 +641,8 @@ def trajectory_payload() -> Dict[str, object]:
             cp["chunk_prefill_speedup_vs_unfused"],
         "weight_stream_overlap_frac": ws["weight_stream_overlap_frac"],
     }
+    from benchmarks.bench_calibrate import calibration_metrics
+    scenarios["calibration.isolated"] = calibration_metrics()
     return {
         "schema_version": TRAJECTORY_SCHEMA_VERSION,
         "gates": dict(TRAJECTORY_GATES),

@@ -12,9 +12,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_ablation, bench_e2e, bench_kv_transform,
-                        bench_overall_cost, bench_scheduler,
-                        bench_tp_tradeoff, bench_weights)
+from benchmarks import (bench_ablation, bench_calibrate, bench_e2e,
+                        bench_kv_transform, bench_overall_cost,
+                        bench_scheduler, bench_tp_tradeoff,
+                        bench_weights)
 
 MODULES = {
     "table1": bench_tp_tradeoff,
@@ -24,6 +25,7 @@ MODULES = {
     "fig12": bench_scheduler,
     "fig14": bench_e2e,
     "ablation": bench_ablation,
+    "calibration": bench_calibrate,
 }
 
 

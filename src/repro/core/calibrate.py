@@ -1,0 +1,460 @@
+"""Measured-cost calibration: the scheduler's cost model answers to the
+clock it schedules against (ISSUE 9 tentpole).
+
+PR 8 made the capacity ladder (spill < partial merge < full merge) a
+bet on ``CostModel`` predictions — but those were hardcoded paper
+constants (NVLink ``LinkModel``, H20 ``Hardware``) never cross-validated
+against this repo's own wall times, and the live ``transform_drift_frac``
+column only UPPER-BOUNDS the model error: overlapped ``StepReport``
+spans include whatever decode compute the transfer hid under.  This
+module closes the loop in three moves:
+
+1. **Isolated micro-measurements** (``measure_kv_migration`` /
+   ``measure_weight_put`` / ``measure_spill_copy``): the §4.1 page-
+   migration kernel pipeline, per-layer weight ``device_put``, and the
+   spill page-copy path are each timed ALONE on the actual backend —
+   fake host devices in CI, real accelerators when present — with no
+   concurrent serving work polluting the spans.  Each measurement
+   carries the exact byte/segment accounting of what moved
+   (``kv_transform.sharded_migration_stats``), so the span is directly
+   comparable to the model's prediction.
+
+2. **Fitting** (``fit_link_model`` / ``fit_hardware``): the
+   ``LinkModel`` constants the whole accounting plane prices against
+   (bandwidth, per-segment overhead) are least-squares fitted from the
+   isolated spans; ``overlap_fraction`` keeps its prior unless the
+   caller supplies overlapped/isolated measurement pairs (isolated
+   micros by construction hide nothing).  ``calibrate`` packages the
+   fit as a ``CalibratedCostModel`` both planes can attach.
+
+3. **Measured feedback** (``MeasuredCosts``): the control planes feed
+   every realized transform/spill wall time from their ``transform_log``
+   into a per-(action-kind, degree-pair, bytes-bucket) EWMA; the
+   scheduler's ``_rung_cost`` and pressure horizon then consume the
+   measured estimate once warm, with the modeled value as the
+   cold-start prior.  The simulator attaches the SAME fitted constants,
+   so sim/live parity extends to costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.costmodel import (CostModel, H20, Hardware,
+                                  kv_bytes_per_token)
+from repro.core.kv_transform import LinkModel, MigrationStats
+
+__all__ = ["Measurement", "CalibrationReport", "MeasuredCosts",
+           "CalibratedCostModel", "measure_kv_migration",
+           "measure_weight_put", "measure_spill_copy", "fit_link_model",
+           "fit_hardware", "predicted_time", "calibrate"]
+
+
+# ---------------------------------------------------------------------------
+# Isolated micro-measurements
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Measurement:
+    """One isolated span: ``wall_s`` to move ``bytes_moved`` in
+    ``segments`` contiguous pieces, with nothing else running."""
+    kind: str                  # kv_migrate_up | kv_migrate_down |
+                               # weight_put | spill_copy
+    bytes_moved: int
+    segments: int
+    wall_s: float
+    tp_from: int = 1
+    tp_to: int = 1
+
+
+def _median(xs: Sequence[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def _time_isolated(fn, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds of ``fn()`` after ``warmup`` untimed calls
+    (the first call compiles; steady-state is what the model prices).
+    ``fn`` must return a jax array (or pytree) to block on."""
+    import jax
+
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn())
+    spans = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        spans.append(time.perf_counter() - t0)
+    return _median(spans)
+
+
+def measure_kv_migration(n_workers: int = 2,
+                         pages_per_worker: Sequence[int] = (8, 32),
+                         kv_slots: int = 4, page_tokens: int = 16,
+                         head_dim: int = 32, dtype=None,
+                         devices=None, repeats: int = 5,
+                         interpret: Optional[bool] = None
+                         ) -> List[Measurement]:
+    """Time the §4.1 sharded page-migration pipeline
+    (``migrate_scale_up_sharded`` / ``_down_sharded``) in isolation on
+    a ``n_workers``-wide mesh, one scale-up + one scale-down span per
+    pool size.  The byte/segment accounting is the kernel path's exact
+    geometry (``sharded_migration_stats``)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P_
+
+    from repro.core.kv_transform import (migrate_scale_down_sharded,
+                                         migrate_scale_up_sharded,
+                                         sharded_migration_stats)
+
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < n_workers:
+        raise ValueError(f"kv-migration micro needs {n_workers} devices,"
+                         f" have {len(devs)}")
+    if dtype is None:
+        dtype = jnp.float32
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    mesh = Mesh(devs[:n_workers], ("tp",))
+    out: List[Measurement] = []
+    for npw in pages_per_worker:
+        shape = (n_workers * npw, kv_slots, 2, page_tokens, head_dim)
+        stats = sharded_migration_stats(n_workers, npw, kv_slots,
+                                        page_tokens, head_dim,
+                                        dtype_bytes=dtype_bytes)
+        key = jax.random.PRNGKey(npw)
+        pool = jax.device_put(
+            jax.random.normal(key, shape, dtype),
+            NamedSharding(mesh, P_("tp")))
+        up = _time_isolated(
+            lambda p=pool: migrate_scale_up_sharded(
+                p, mesh, "tp", interpret=interpret), repeats=repeats)
+        out.append(Measurement("kv_migrate_up", stats.bytes_moved,
+                               stats.segments, up, 1, n_workers))
+        merged = jax.device_put(
+            jax.random.normal(key, shape, dtype),
+            NamedSharding(mesh, P_(None, "tp")))
+        down = _time_isolated(
+            lambda p=merged: migrate_scale_down_sharded(
+                p, mesh, "tp", interpret=interpret), repeats=repeats)
+        out.append(Measurement("kv_migrate_down", stats.bytes_moved,
+                               stats.segments, down, n_workers, 1))
+    return out
+
+
+def measure_weight_put(layer_bytes: Sequence[int] = (1 << 18, 1 << 21),
+                       devices=None, repeats: int = 5
+                       ) -> List[Measurement]:
+    """Time a per-layer weight ``device_put`` — the unit transfer the
+    live transform session streams once per layer per schedule step —
+    in isolation, device 0 -> device 1, one span per layer size."""
+    import jax
+    import jax.numpy as jnp
+
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < 2:
+        raise ValueError("weight-put micro needs 2 devices")
+    out: List[Measurement] = []
+    for nb in layer_bytes:
+        n = max(1, nb // 4)
+        src = jax.device_put(
+            jax.random.normal(jax.random.PRNGKey(n % 97), (n,),
+                              jnp.float32), devs[0])
+        jax.block_until_ready(src)
+        wall = _time_isolated(lambda s=src: jax.device_put(s, devs[1]),
+                              repeats=repeats)
+        out.append(Measurement("weight_put", n * 4, 1, wall))
+    return out
+
+
+def measure_spill_copy(n_pages: Sequence[int] = (4, 16),
+                       kv_slots: int = 4, page_tokens: int = 16,
+                       head_dim: int = 32, devices=None,
+                       repeats: int = 5,
+                       interpret: Optional[bool] = None
+                       ) -> List[Measurement]:
+    """Time the spill page-copy path in isolation: ``device_put`` of a
+    donor slot's page range onto the host engine's device followed by
+    the §4.1 ``migrate_slot_pages`` scatter — exactly what rung 1 of
+    the capacity ladder executes per spilled region."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.kv_transform import migrate_slot_pages
+
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < 2:
+        raise ValueError("spill-copy micro needs 2 devices")
+    page_nbytes = kv_slots * 2 * page_tokens * head_dim * 4
+    out: List[Measurement] = []
+    for np_ in n_pages:
+        src = jax.device_put(
+            jax.random.normal(jax.random.PRNGKey(np_),
+                              (np_, kv_slots, 2, page_tokens, head_dim),
+                              jnp.float32), devs[0])
+        dst = jax.device_put(
+            jnp.zeros((2 * np_, kv_slots, 2, page_tokens, head_dim),
+                      jnp.float32), devs[1])
+        jax.block_until_ready((src, dst))
+
+        def copy(s=src, d=dst, n=np_):
+            moved = jax.device_put(s, devs[1])
+            return migrate_slot_pages(moved, d, n, 0,
+                                      interpret=interpret)
+
+        wall = _time_isolated(copy, repeats=repeats)
+        out.append(Measurement("spill_copy", np_ * page_nbytes, np_,
+                               wall))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fitting
+# ---------------------------------------------------------------------------
+
+def predicted_time(m: Measurement, link: LinkModel) -> float:
+    """What the accounting plane predicts for an ISOLATED (never
+    overlapped) span of ``m``'s geometry under ``link``."""
+    return MigrationStats(bytes_moved=m.bytes_moved,
+                          segments=m.segments).time_s(link, overlap=False)
+
+
+def fit_link_model(measurements: Sequence[Measurement],
+                   prior: LinkModel = LinkModel(),
+                   kinds: Optional[Sequence[str]] = None) -> LinkModel:
+    """Least-squares fit of ``wall = bytes/bandwidth + segments *
+    segment_overhead`` over the isolated spans.  ``kinds`` restricts
+    the fit to the paths the link model actually prices (``calibrate``
+    fits from the kv-migration kernel spans: a bulk ``device_put`` and
+    an interpret-mode page copy have their own effective constants, and
+    mixing them in ruins the fit for the path that matters).
+    ``overlap_fraction`` keeps the prior: isolated micros hide nothing
+    by construction, so they carry no information about it.  Degenerate
+    inputs (too few points, non-positive coefficients) fall back to a
+    totals-ratio bandwidth with the prior's segment overhead — never a
+    crash, never a negative constant."""
+    import numpy as np
+
+    if kinds is not None:
+        pre = [m for m in measurements if m.kind in kinds]
+        measurements = pre if pre else measurements
+    ms = [m for m in measurements if m.wall_s > 0 and m.bytes_moved > 0]
+    if not ms:
+        return prior
+    total_ratio = sum(m.bytes_moved for m in ms) / sum(m.wall_s
+                                                       for m in ms)
+    bandwidth = max(total_ratio, 1.0)
+    seg_overhead = prior.segment_overhead
+    if len(ms) >= 2:
+        a = np.array([[m.bytes_moved, m.segments] for m in ms],
+                     dtype=np.float64)
+        b = np.array([m.wall_s for m in ms], dtype=np.float64)
+        x, *_ = np.linalg.lstsq(a, b, rcond=None)
+        if x[0] > 0.0:
+            bandwidth = 1.0 / x[0]
+            seg_overhead = max(float(x[1]), 0.0)
+    return LinkModel(bandwidth=float(bandwidth),
+                     segment_overhead=float(seg_overhead),
+                     overlap_fraction=prior.overlap_fraction)
+
+
+def fit_hardware(prior: Hardware = H20,
+                 decode_tps: Optional[float] = None,
+                 prefill_tps: Optional[float] = None) -> Hardware:
+    """Replace the throughput constants of ``prior`` with measured
+    values where the caller supplies them (e.g. ``measure_decode_tps``
+    on a live engine); the TP-efficiency curve (alpha/beta) keeps its
+    Table-1 fit — one instance's micro cannot re-derive a curve."""
+    kw = {}
+    if decode_tps is not None and decode_tps > 0:
+        kw["base_tps"] = float(decode_tps)
+    if prefill_tps is not None and prefill_tps > 0:
+        kw["prefill_tps"] = float(prefill_tps)
+    return dataclasses.replace(prior, **kw) if kw else prior
+
+
+def measure_decode_tps(engine, steps: int = 8) -> float:
+    """Decode tokens/second of a live engine with work resident —
+    feeds ``fit_hardware``.  The engine must have active decode slots
+    (the caller primes it); spans are engine steps end-to-end."""
+    import jax
+
+    emitted = 0
+    t0 = time.perf_counter()
+    for _ in range(max(steps, 1)):
+        emitted += engine.step()["emitted"]
+    jax.block_until_ready(engine.caches)
+    wall = time.perf_counter() - t0
+    return emitted / max(wall, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Measured feedback: the EWMA the decisions consume
+# ---------------------------------------------------------------------------
+
+class MeasuredCosts:
+    """Per-(action-kind, degree-pair, bytes-bucket) EWMA of realized
+    wall times, fed by both control planes from their ``transform_log``
+    (and spill log).  ``estimate`` returns None until a key is WARM
+    (``min_samples`` observations) — the caller then falls back to the
+    modeled value, which is exactly the cold-start-prior rule the
+    scheduler documents."""
+
+    def __init__(self, alpha: float = 0.25, min_samples: int = 3):
+        self.alpha = alpha
+        self.min_samples = max(int(min_samples), 1)
+        self._ewma: Dict[Tuple[str, int, int, int], float] = {}
+        self._count: Dict[Tuple[str, int, int, int], int] = {}
+
+    @staticmethod
+    def bucket(nbytes: float) -> int:
+        """log2 size bucket: transfers within 2x of each other share a
+        key, so the EWMA tracks cost-per-shape, not a global blur."""
+        n = int(max(nbytes, 0))
+        return n.bit_length() if n else 0
+
+    def observe(self, kind: str, tp_from: int, tp_to: int,
+                wall_s: float, nbytes: float = 0.0) -> None:
+        if wall_s < 0.0:
+            return
+        key = (kind, int(tp_from), int(tp_to), self.bucket(nbytes))
+        prev = self._ewma.get(key)
+        self._ewma[key] = (wall_s if prev is None
+                           else (1 - self.alpha) * prev
+                           + self.alpha * wall_s)
+        self._count[key] = self._count.get(key, 0) + 1
+
+    def observe_record(self, rec: Dict) -> None:
+        """Ingest one control-plane log record (the shared
+        ``transform_log`` schema; spill logs carry ``kind='spill'``)."""
+        self.observe(rec.get("kind", "transform"),
+                     rec.get("tp_from", 0), rec.get("tp_to", 0),
+                     float(rec.get("wall_s", -1.0)),
+                     float(rec.get("bytes", 0.0)))
+
+    def _keys_for(self, kind: str, tp_from: int, tp_to: int):
+        return [k for k in self._ewma
+                if k[0] == kind and k[1] == int(tp_from)
+                and k[2] == int(tp_to)]
+
+    def warm(self, kind: str, tp_from: int = 0, tp_to: int = 0) -> bool:
+        return sum(self._count[k]
+                   for k in self._keys_for(kind, tp_from, tp_to)) \
+            >= self.min_samples
+
+    def estimate(self, kind: str, tp_from: int = 0, tp_to: int = 0,
+                 nbytes: Optional[float] = None) -> Optional[float]:
+        """Measured wall-time estimate for a degree pair, or None when
+        cold.  With ``nbytes`` the matching size bucket wins when it is
+        warm on its own; otherwise (and by default) the estimate is the
+        observation-weighted mean across the pair's buckets."""
+        keys = self._keys_for(kind, tp_from, tp_to)
+        if not keys:
+            return None
+        if nbytes is not None:
+            b = self.bucket(nbytes)
+            key = (kind, int(tp_from), int(tp_to), b)
+            if self._count.get(key, 0) >= self.min_samples:
+                return self._ewma[key]
+        total = sum(self._count[k] for k in keys)
+        if total < self.min_samples:
+            return None
+        return sum(self._ewma[k] * self._count[k] for k in keys) / total
+
+
+class CalibratedCostModel(CostModel):
+    """A ``CostModel`` whose link constants are FITTED (not the paper's
+    NVLink numbers) and whose transform/spill estimates come from the
+    ``MeasuredCosts`` EWMA once warm, with the fitted model as the
+    cold-start prior.  Attach to a scheduler with ``attach_cost`` and
+    let the owning plane feed ``observe_transform``; both planes
+    sharing one fitted link is what extends sim/live parity to costs."""
+
+    def __init__(self, cfg: ModelConfig, hw: Hardware = H20,
+                 link: Optional[LinkModel] = None,
+                 measured: Optional[MeasuredCosts] = None):
+        super().__init__(cfg, hw, link=link)
+        self.measured = measured if measured is not None \
+            else MeasuredCosts()
+
+    def observe_transform(self, rec: Dict) -> None:
+        """Control-plane feedback hook (``ClusterEngine.step`` /
+        ``Cluster`` transform logging call it per new record)."""
+        self.measured.observe_record(rec)
+
+    def transform_time(self, method: str, n_layers: int | None = None,
+                       tp_from: int = 1, tp_to: int | None = None
+                       ) -> float:
+        est = self.measured.estimate("transform", tp_from,
+                                     4 if tp_to is None else tp_to)
+        if est is not None:
+            return est
+        return super().transform_time(method, n_layers, tp_from, tp_to)
+
+    def spill_time(self, tokens: int, page_tokens: int = 64,
+                   pages: int | None = None) -> float:
+        nbytes = kv_bytes_per_token(self.cfg) * max(tokens, 0)
+        est = self.measured.estimate("spill", 0, 0, nbytes)
+        if est is not None:
+            return est
+        return super().spill_time(tokens, page_tokens, pages)
+
+
+# ---------------------------------------------------------------------------
+# The calibration entry point
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CalibrationReport:
+    """Everything a calibration run produced: the isolated spans, the
+    fitted link, the per-measurement relative drift of the FITTED model
+    against the isolated spans (the honest model error — no overlapped
+    serving work in the denominator), and the ready-to-attach model."""
+    link: LinkModel
+    measurements: List[Measurement] = field(default_factory=list)
+    drift_fracs: List[float] = field(default_factory=list)
+    model: Optional[CalibratedCostModel] = None
+
+    @property
+    def kv_migration_drift_frac(self) -> float:
+        """Median |predicted - measured| / measured of the fitted model
+        on the isolated KV-migration spans — the gated trajectory
+        column (modeled-vs-isolated-measured drift for the kernel
+        path)."""
+        kv = [d for m, d in zip(self.measurements, self.drift_fracs)
+              if m.kind.startswith("kv_migrate")]
+        return _median(kv) if kv else float("nan")
+
+    @property
+    def drift_frac(self) -> float:
+        return _median(self.drift_fracs) if self.drift_fracs \
+            else float("nan")
+
+
+def calibrate(cfg: ModelConfig, hw: Hardware = H20, devices=None,
+              n_workers: int = 2, repeats: int = 5,
+              interpret: Optional[bool] = None,
+              measured: Optional[MeasuredCosts] = None
+              ) -> CalibrationReport:
+    """Run every isolated micro on the actual backend, fit the link,
+    and package a ``CalibratedCostModel``.  Works on fake host devices
+    (CI: ``--xla_force_host_platform_device_count``) and on real
+    accelerators alike; raises when fewer than 2 devices exist (a
+    1-device session has no interconnect to calibrate)."""
+    ms: List[Measurement] = []
+    ms += measure_kv_migration(n_workers=n_workers, devices=devices,
+                               repeats=repeats, interpret=interpret)
+    ms += measure_weight_put(devices=devices, repeats=repeats)
+    ms += measure_spill_copy(devices=devices, repeats=repeats,
+                             interpret=interpret)
+    link = fit_link_model(ms, kinds=("kv_migrate_up",
+                                     "kv_migrate_down"))
+    drifts = [abs(predicted_time(m, link) - m.wall_s)
+              / max(m.wall_s, 1e-12) for m in ms]
+    model = CalibratedCostModel(cfg, hw, link=link, measured=measured)
+    return CalibrationReport(link=link, measurements=ms,
+                             drift_fracs=drifts, model=model)

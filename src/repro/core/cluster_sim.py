@@ -271,7 +271,8 @@ class Cluster:
                  prefill_policy: Optional[PrefillPolicy] = None,
                  seq_quantum: Optional[int] = None, max_batch: int = 1,
                  widths: Optional[List[int]] = None,
-                 page_tokens: int = 16):
+                 page_tokens: int = 16,
+                 cost_model: Optional[CostModel] = None):
         """``prefill_policy`` / ``seq_quantum`` / ``max_batch`` mirror
         the live ``ClusterEngine`` configuration (see ``SimInstance``):
         with them set, the sim serves the same chunked-prefill policy
@@ -281,10 +282,19 @@ class Cluster:
         live plane's); a merge keeps the TARGET's iid and a split
         restores the members' — identity follows what the live plane
         does with parked/revived engines."""
-        self.cm = CostModel(cfg, hw)
+        # ``cost_model`` lets both planes share ONE fitted model (e.g. a
+        # ``core.calibrate.CalibratedCostModel``) so sim/live parity
+        # extends to costs; default stays the Table-1 prior.
+        self.cm = cost_model if cost_model is not None \
+            else CostModel(cfg, hw)
         self.cfg = cfg
         self.method = method
         self.scheduler = scheduler or GygesScheduler()
+        # the scheduler's rung costing prices spill segments against the
+        # pool geometry this plane actually configures
+        if hasattr(self.scheduler, "cfg") \
+                and hasattr(self.scheduler.cfg, "page_tokens"):
+            self.scheduler.cfg.page_tokens = page_tokens
         self.gpus_per_host = gpus_per_host
         self.target_tp = target_tp
         self.prefill_policy = prefill_policy
@@ -349,6 +359,29 @@ class Cluster:
         rate = self.cm.hw.per_req_tps * (1.0 + 0.25 * (tp - 1))
         return steps / rate
 
+    def _transform_dur(self, tp_from: int, tp_to: int) -> float:
+        """Modeled wall time of the REAL degree pair this action moves
+        between (satellite fix: a TP1->2 merge no longer prices — or
+        dwells — like TP2->4)."""
+        return self.cm.transform_time(self.method, tp_from=tp_from,
+                                      tp_to=tp_to) \
+            * TRANSFORM_TIME_FACTOR[self.method]
+
+    def _log_transform(self, dur: float, tp_from: int, tp_to: int,
+                       cross: bool) -> None:
+        """Append a transform record AND feed it to the attached cost
+        model's measured-EWMA when it has one (CalibratedCostModel) —
+        the sim's feedback loop mirrors ``ClusterEngine.step``'s, except
+        measured IS modeled here, so a sim-warmed EWMA converges back to
+        the model it was seeded from (decisions stay parity-safe)."""
+        rec = {"wall_s": dur, "measured_s": dur, "modeled_s": dur,
+               "tp_from": tp_from, "tp_to": tp_to, "cross": cross,
+               "kind": "transform"}
+        self.transform_log.append(rec)
+        cm = getattr(self.scheduler, "cost_model", None)
+        if cm is not None and hasattr(cm, "observe_transform"):
+            cm.observe_transform(rec)
+
     # ------------------------------------------------------------------
     @property
     def instances(self) -> List[SimInstance]:
@@ -402,8 +435,7 @@ class Cluster:
                     self.partition.park(m.iid)
                     self.partition.adopt(target_iid, loan)
         merged.dirty()
-        dur = self.cm.transform_time(self.method) \
-            * TRANSFORM_TIME_FACTOR[self.method]
+        dur = self._transform_dur(1, merged.tp)
         merged.transform_until = now + dur
         merged.session_until = now + max(dur,
                                          self._session_window(merged.tp))
@@ -411,8 +443,7 @@ class Cluster:
         self.n_transforms += 1
         # sim instances always merge across device assemblies: every
         # transform record is cross, with wall == measured == modeled
-        self.transform_log.append({"wall_s": dur, "measured_s": dur,
-                                   "modeled_s": dur, "cross": True})
+        self._log_transform(dur, 1, merged.tp, cross=True)
         self.actions.append(ScaleUp(
             iid=merged.iid, tp_to=merged.tp,
             donor_iids=tuple(merged.member_iids[1:]),
@@ -475,15 +506,14 @@ class Cluster:
         inst = next((i for i in self.instances if i.iid == act.iid), None)
         if inst is None or act.tp_to > inst.width:
             return None
-        dur = self.cm.transform_time(self.method) \
-            * TRANSFORM_TIME_FACTOR[self.method]
+        tp_prev = inst.tp
+        dur = self._transform_dur(tp_prev, act.tp_to)
         inst.tp = act.tp_to
         inst.transform_until = now + dur
         inst.session_until = now + max(dur, self._session_window(inst.tp))
         inst.n_transforms += 1
         self.n_transforms += 1
-        self.transform_log.append({"wall_s": dur, "measured_s": dur,
-                                   "modeled_s": dur, "cross": False})
+        self._log_transform(dur, tp_prev, act.tp_to, cross=False)
         self.actions.append(act)
         self._update_reserve()
         return inst
@@ -500,8 +530,7 @@ class Cluster:
         target = by_iid.get(act.iid)
         if target is None or target.tp != 1:
             return None
-        dur = self.cm.transform_time(self.method) \
-            * TRANSFORM_TIME_FACTOR[self.method]
+        dur = self._transform_dur(1, act.tp_to)
         # only the loaned fraction of the widened pool re-shards
         dur *= sum(act.donor_devices) / max(act.tp_to, 1)
         for iid, n in zip(act.donor_iids, act.donor_devices):
@@ -524,8 +553,7 @@ class Cluster:
         target.dirty()
         self.n_transforms += 1
         self.partial_merges += 1
-        self.transform_log.append({"wall_s": dur, "measured_s": dur,
-                                   "modeled_s": dur, "cross": True})
+        self._log_transform(dur, 1, act.tp_to, cross=True)
         self.actions.append(act)
         self._update_reserve()
         return target
@@ -609,8 +637,8 @@ class Cluster:
             # still-serving donors (they widen in place); nobody parks
             # or revives and the target keeps its own work
             by_iid = {i.iid: i for i in self.instances}
-            dur = self.cm.transform_time(self.method) \
-                * TRANSFORM_TIME_FACTOR[self.method]
+            tp_prev = inst.tp
+            dur = self._transform_dur(tp_prev, 1)
             for ln in list(loans):
                 d = by_iid[ln.lender]
                 d._width += len(self.partition.return_loan(ln))
@@ -623,8 +651,7 @@ class Cluster:
             inst.transform_until = now + dur
             inst.session_until = now + max(dur, self._session_window(1))
             self.n_transforms += 1
-            self.transform_log.append({"wall_s": dur, "measured_s": dur,
-                                       "modeled_s": dur, "cross": True})
+            self._log_transform(dur, tp_prev, 1, cross=True)
             self.actions.append(ScaleDown(iid=inst.iid, tp_to=1,
                                           reason="low load"))
             self._update_reserve()
@@ -652,14 +679,12 @@ class Cluster:
             parts[j % len(parts)].active.append(r)
         for j, r in enumerate(inst.prefill_q):
             parts[j % len(parts)].prefill_q.append(r)
-        dur = self.cm.transform_time(self.method) \
-            * TRANSFORM_TIME_FACTOR[self.method]
+        dur = self._transform_dur(inst.tp, 1)
         for p in parts:
             p.transform_until = now + dur
             p.session_until = now + max(dur, self._session_window(1))
         self.n_transforms += 1
-        self.transform_log.append({"wall_s": dur, "measured_s": dur,
-                                   "modeled_s": dur, "cross": True})
+        self._log_transform(dur, inst.tp, 1, cross=True)
         self.actions.append(ScaleDown(iid=inst.iid, tp_to=1,
                                       reason="low load"))
         host.extend(parts)

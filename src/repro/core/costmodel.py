@@ -79,9 +79,21 @@ def _kv_bytes_guarded(cfg: ModelConfig) -> float:
 
 
 class CostModel:
-    def __init__(self, cfg: ModelConfig, hw: Hardware = H20):
+    """Table-1 memory/throughput model plus §4 transformation costing.
+
+    ``link`` is the interconnect model every transfer cost is priced
+    against; it defaults to the paper's NVLink-class constants and is
+    the knob ``core.calibrate`` replaces with a FITTED ``LinkModel``
+    (``CalibratedCostModel``) so modeled costs answer to the backend
+    this repo actually runs on."""
+
+    def __init__(self, cfg: ModelConfig, hw: Hardware = H20, link=None):
         self.cfg = cfg
         self.hw = hw
+        if link is None:
+            from repro.core.kv_transform import LinkModel
+            link = LinkModel()
+        self.link = link
 
     # ---- memory ----------------------------------------------------------
     def kv_capacity_tokens(self, tp: int) -> int:
@@ -120,44 +132,69 @@ class CostModel:
         return input_len / (self.hw.prefill_tps * tp * eff)
 
     # ---- spill cost (capacity-ladder rung 1) -----------------------------
-    def spill_time(self, tokens: int) -> float:
+    def spill_time(self, tokens: int, page_tokens: int = 64,
+                   pages: int | None = None) -> float:
         """Wall time to move ``tokens`` of overflow KV into a neighbor's
         pool — a page-granular interconnect copy with no weight
         re-sharding, which is what makes spill the cheapest rung of the
-        capacity ladder for modest overflows."""
-        from repro.core.kv_transform import LinkModel
-        link = LinkModel()
+        capacity ladder for modest overflows.
+
+        ``page_tokens`` is the POOL's page geometry (the scheduler
+        threads its plane's configured value through
+        ``SchedulerConfig.page_tokens``); overflow lands in whole
+        contiguous pages, one interconnect segment each, so the segment
+        count is the real overflow-page count — pass ``pages`` directly
+        when the caller already knows it."""
         bytes_moved = _kv_bytes_guarded(self.cfg) * max(tokens, 0)
-        # overflow lands in whole contiguous pages: one segment per page
-        segments = max(1, -(-max(tokens, 0) // 64))
-        return (bytes_moved / link.bandwidth
-                + segments * link.segment_overhead)
+        if pages is None:
+            pages = -(-max(tokens, 0) // max(page_tokens, 1))
+        segments = max(1, pages)
+        return (bytes_moved / self.link.bandwidth
+                + segments * self.link.segment_overhead)
 
     # ---- transformation cost (per §4 accounting, method-dependent) -------
-    def transform_time(self, method: str, n_layers: int | None = None
+    def transform_time(self, method: str, n_layers: int | None = None,
+                       tp_from: int = 1, tp_to: int | None = None
                        ) -> float:
-        """Wall time an instance is degraded during a TP transformation."""
+        """Wall time an instance is degraded during a TP transformation
+        of the REAL degree pair ``tp_from -> tp_to``.
+
+        ``tp_to=None`` preserves the legacy call shape (the paper's
+        canonical TP1->4 merge).  Scale-downs (``tp_to < tp_from``) pay
+        the §4.2 weight all-gather instead of the zero-copy page
+        release, so a 4->1 split prices higher than a 1->2 merge — the
+        asymmetry ``_rung_cost`` and the pressure horizon now see."""
         from repro.core import weight_transform as WT
-        from repro.core.kv_transform import (LinkModel, account_scale_up)
+        from repro.core.kv_transform import account_scale_up
         from repro.core.padding import make_plan
         n_layers = n_layers or self.cfg.num_layers
-        plan = make_plan(self.cfg, 4, mode="page")
-        link = LinkModel()
+        tp_to = 4 if tp_to is None else tp_to
+        lo, hi = sorted((max(tp_from, 1), max(tp_to, 1)))
+        if lo == hi:
+            return 0.0              # same-degree device migration: no
+                                    # head re-sharding to price here
+        k = max(2, hi // lo)        # workers per migration group
+        plan = make_plan(self.cfg, hi, mode="page")
+        link = self.link
         # pages per worker per layer at 90% KV utilization (paper §6.2.1)
         # each layer holds its own pool covering the full context
-        cap_tokens = max(self.kv_capacity_tokens(1), 1)
+        cap_tokens = max(self.kv_capacity_tokens(lo), 1)
         ppw = max(1, int(0.9 * min(cap_tokens, 10_000_000) / 64))
         kv = account_scale_up("header_centric"
                               if method in ("gyges", "gyges-") else
                               "page_friendly",
-                              4, ppw, max(self.cfg.num_kv_heads, 1), 64,
+                              k, ppw, max(self.cfg.num_kv_heads, 1), 64,
                               self.cfg.resolved_head_dim)
         overlap = method == "gyges"
         w_meth = "padded" if method in ("gyges", "gyges-") else "swap"
+        scale_up = tp_to >= tp_from
         t = 0.0
         for _ in range(n_layers):
-            t += WT.account_scale_up(self.cfg, plan, 4, w_meth).time_s(
-                link, overlap=overlap)
+            if scale_up:
+                w = WT.account_scale_up(self.cfg, plan, hi, w_meth)
+            else:
+                w = WT.account_scale_down(self.cfg, plan, hi, w_meth)
+            t += w.time_s(link, overlap=overlap)
             t += kv.time_s(link, overlap=overlap)
         if method == "seesaw":
             from repro.core.transform_engine import seesaw_cost

@@ -132,6 +132,22 @@ def account_scale_up(
                           stages=n_stages)
 
 
+def sharded_migration_stats(n_workers: int, pages_per_worker: int,
+                            kv_slots: int, page_tokens: int,
+                            head_dim: int, dtype_bytes: int = 2
+                            ) -> MigrationStats:
+    """Accounting for ONE ``migrate_scale_up_sharded`` /
+    ``migrate_scale_down_sharded`` execution on a ``n_workers``-wide
+    mesh: every worker ships the (n-1)/n foreign head-slices of its
+    pages, one contiguous segment per (page, destination) pair — the
+    header-centric property the kernel path realizes literally.  This
+    is what ``core.calibrate`` prices its isolated micro-measurements
+    against (and fits ``LinkModel`` from)."""
+    return account_scale_up("header_centric", n_workers,
+                            pages_per_worker, kv_slots, page_tokens,
+                            head_dim, dtype_bytes=dtype_bytes)
+
+
 def simulate_phased_migration(n_workers: int, pages_per_worker: int,
                               n_stages: int, headroom_pages: int
                               ) -> Tuple[int, bool]:

@@ -280,9 +280,18 @@ class SchedulerConfig:
     target_tp: int = 4
     # -- arrival-pressure weighting (only active when an estimator is
     #    attached via BaseScheduler.attach_pressure) ------------------
-    transform_cost_s: float = 0.0    # modeled wall time of one merge /
-                                     # split (CostModel.transform_time);
-                                     # sets the prediction horizon
+    transform_cost_s: float = 0.0    # wall time of one merge / split;
+                                     # sets the prediction horizon.  0.0
+                                     # means DERIVE it from the attached
+                                     # cost model (transform_horizon_s)
+                                     # — pressure with neither attached
+                                     # warns: the horizon would be zero
+                                     # and holds silently never fire
+    page_tokens: int = 64            # the owning plane's pool page
+                                     # geometry (tokens per KV page);
+                                     # both control planes overwrite it
+                                     # at construction so spill rung
+                                     # costs count REAL overflow pages
     pressure_hold: float = 0.5       # hold a scale-down (and widen
                                      # merges) when the expected LONG
                                      # arrivals within 2x the transform
@@ -334,8 +343,22 @@ class BaseScheduler:
     def attach_pressure(self, estimator) -> None:
         """Attach a ``core.events.ArrivalPressure`` estimator; both
         control planes then feed it via ``observe_arrival`` (submit
-        path) and ``observe_time`` (serving loop)."""
+        path) and ``observe_time`` (serving loop).
+
+        Warns when the prediction horizon would be ZERO — i.e.
+        ``cfg.transform_cost_s`` was left at its 0.0 default and no
+        cost model is attached to derive it from — because then
+        ``pressure_high`` can never hold a scale-down and the estimator
+        silently does nothing (the pre-calibration footgun)."""
         self.pressure = estimator
+        if estimator is not None and self.transform_horizon_s() <= 0.0:
+            import warnings
+            warnings.warn(
+                "ArrivalPressure attached with a zero transform-cost "
+                "horizon: set SchedulerConfig.transform_cost_s or "
+                "attach_cost() a CostModel so the horizon can be "
+                "derived — otherwise pressure never holds a scale-down",
+                RuntimeWarning, stacklevel=2)
 
     def observe_arrival(self, now: float, total_tokens: int) -> None:
         """Serving-clock arrival hook, called by BOTH control planes on
@@ -351,16 +374,32 @@ class BaseScheduler:
         if self.pressure is not None:
             self.pressure.advance_to(now)
 
+    def transform_horizon_s(self) -> float:
+        """The transform-cost horizon the arrival-pressure signal is
+        weighed over: ``cfg.transform_cost_s`` when the caller set it,
+        else DERIVED from the attached cost model as the cost of one
+        TP1 -> target_tp transformation (which, for a
+        ``CalibratedCostModel``, is the measured EWMA estimate once
+        warm — the horizon tracks the clock it schedules against).
+        0.0 with neither attached (``attach_pressure`` warns)."""
+        if self.cfg.transform_cost_s > 0.0:
+            return self.cfg.transform_cost_s
+        if self.cost_model is not None:
+            return self.cost_model.transform_time(
+                "gyges", tp_from=1, tp_to=max(self.cfg.target_tp, 2))
+        return 0.0
+
     def pressure_high(self) -> bool:
         """Predicted long-arrival pressure over the transformation
-        horizon.  The horizon is 2x the modeled transform wall time —
+        horizon.  The horizon is 2x the transform wall time
+        (``transform_horizon_s`` — configured, modeled, or measured) —
         a scale-down now that must be undone costs one split PLUS one
         merge before the predicted long can be served — and the
         threshold is ``cfg.pressure_hold`` expected long arrivals.
         Always False without an estimator (every pre-existing caller)."""
         if self.pressure is None:
             return False
-        horizon = 2.0 * self.cfg.transform_cost_s
+        horizon = 2.0 * self.transform_horizon_s()
         return self.pressure.expected_longs(horizon) \
             >= self.cfg.pressure_hold
 
@@ -629,14 +668,23 @@ class BaseScheduler:
         return min(cands, key=lambda c: c[0])[1]
 
     def _rung_cost(self, act: Action, rung: int) -> Tuple[float, int]:
-        """(modeled seconds, rung index): the rung index breaks ties and
-        is the WHOLE ordering when no cost model is attached."""
+        """(estimated seconds, rung index): the rung index breaks ties
+        and is the WHOLE ordering when no cost model is attached.
+
+        The estimate prices the action's REAL shape: a spill counts its
+        overflow pages at the plane's configured ``cfg.page_tokens``,
+        and a transform is costed at its actual degree pair (merge
+        targets sit at TP1, so ``1 -> tp_to``).  With a
+        ``CalibratedCostModel`` attached, both estimates come from the
+        per-(kind, degree-pair) EWMA of realized wall times once it is
+        warm — the modeled value is only the cold-start prior."""
         cm = self.cost_model
         if cm is None:
             return (0.0, rung)
         if isinstance(act, Spill):
-            return (cm.spill_time(act.tokens), rung)
-        t = cm.transform_time("gyges")
+            return (cm.spill_time(act.tokens,
+                                  page_tokens=self.cfg.page_tokens), rung)
+        t = cm.transform_time("gyges", tp_from=1, tp_to=act.tp_to)
         if act.donor_devices and sum(act.donor_devices) < act.tp_to:
             # partial: only the loaned fraction of the target's widened
             # pool re-shards, and no donor KV is exported

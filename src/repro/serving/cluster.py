@@ -116,8 +116,18 @@ class ClusterEngine:
         if scheduler is None:
             base = self.engines[0].max_seq_at(1)
             scheduler = GygesScheduler(SchedulerConfig(
-                long_threshold=base, target_tp=W))
+                long_threshold=base, target_tp=W,
+                page_tokens=page_tokens))
+        elif hasattr(scheduler, "cfg") \
+                and hasattr(scheduler.cfg, "page_tokens"):
+            # spill rung costs price segments against THIS pool's page
+            # geometry, not the SchedulerConfig default
+            scheduler.cfg.page_tokens = page_tokens
         self.scheduler = scheduler
+        # measured-cost feedback cursors: how many transform/spill log
+        # records per engine have already been fed to the attached cost
+        # model's EWMA (core.calibrate.CalibratedCostModel)
+        self._cost_fed: Dict[int, Tuple[int, int]] = {}
 
         self.waiting: List[ServeRequest] = []   # router-level queue
         self.requests: List[ServeRequest] = []  # everything submitted
@@ -540,6 +550,7 @@ class ClusterEngine:
         self._advance_partials()
         self._finalize_releases()
         self._finalize_spills()
+        self._feed_measured_costs()
         self.total_tokens += emitted
         self.steps += 1
         return {"active": active, "emitted": emitted,
@@ -547,6 +558,26 @@ class ClusterEngine:
                 len(self.waiting),
                 "transforming": sum(e.transforming for e in self.engines),
                 "parked": sum(e.parked for e in self.engines)}
+
+    def _feed_measured_costs(self) -> None:
+        """Measured-cost feedback (core.calibrate): stream every NEW
+        realized transform/spill wall time from the engines' logs into
+        the attached cost model's EWMA, so ``_rung_cost`` and the
+        pressure horizon consume what this backend actually clocked
+        once a (kind, degree-pair) key is warm.  A plain ``CostModel``
+        has no ``observe_transform`` — the loop is then a no-op and the
+        modeled prior keeps deciding (cold-start rule)."""
+        cm = getattr(self.scheduler, "cost_model", None)
+        if cm is None or not hasattr(cm, "observe_transform"):
+            return
+        for e in self.engines:
+            t_fed, s_fed = self._cost_fed.get(e.iid, (0, 0))
+            for rec in e.transform_log[t_fed:]:
+                cm.observe_transform(rec)
+            for rec in e.spill_log[s_fed:]:
+                cm.observe_transform(rec)
+            self._cost_fed[e.iid] = (len(e.transform_log),
+                                     len(e.spill_log))
 
     # ------------------------------------------------------------------
     @property

@@ -187,6 +187,10 @@ class Engine:
         # per-action transform records (wall/measured/modeled seconds,
         # cross-device flag) surfaced by ClusterEngine.metrics
         self.transform_log: List[Dict] = []
+        # realized spill page-copy wall times, same feedback schema
+        # (kind/wall_s/bytes); kept OUT of transform_log so merge-wall
+        # metrics and the parity diff keep their action-only semantics
+        self.spill_log: List[Dict] = []
         if devices:
             from repro.core import instance as I
             assert layout == "header_centric", (
@@ -471,18 +475,31 @@ class Engine:
         session = TE.close_owner_session(self)
         self.tp_pending = None
         self.transform_reports.extend(session.reports)
+        try:
+            cache_bytes = sum(int(x.nbytes)
+                              for x in jax.tree.leaves(self.caches)
+                              if hasattr(x, "nbytes"))
+        except Exception:
+            cache_bytes = 0
         self.transform_log.append({
+            "kind": "transform",
             "tp_from": session.schedule.tp_from,
             "tp_to": session.schedule.tp_to,
+            # pool-size proxy for what the session moved — selects the
+            # measured-EWMA size bucket (core.calibrate.MeasuredCosts),
+            # nothing downstream treats it as exact transfer bytes
+            "bytes": cache_bytes,
             "cross": self._session_cross,
             "steps": session.schedule.n_steps,
             "wall_s": time.monotonic() - self._session_t0,
             # measured_s: the StepReport step times (dispatch ->
             # resident).  For overlapped steps the span includes
             # whatever serving work the transfer hid under, so the
-            # derived drift is an UPPER BOUND on model error;
-            # exposed_s (dispatch + blocking wait — the cost serving
-            # actually paid, the Fig. 11 overhead) rides alongside
+            # derived drift UPPER-BOUNDS model error on this path;
+            # the HONEST model error is core.calibrate's isolated
+            # micro-spans (nothing hides under them).  exposed_s
+            # (dispatch + blocking wait — the cost serving actually
+            # paid, the Fig. 11 overhead) rides alongside
             "measured_s": sum(r.seconds for r in session.reports),
             "exposed_s": sum(r.blocked_s for r in session.reports),
             "modeled_s": sum(r.modeled_s for r in session.reports),
@@ -1333,6 +1350,7 @@ class Engine:
         from repro.paged import pool as PP
         from repro.paged.pool import PagedState
 
+        t0 = time.monotonic()
         sp = self._spills[slot]
         host: Engine = sp["host"]
         host_slots = sp["hosting"]["slots"]
@@ -1371,6 +1389,15 @@ class Engine:
         for i, j in enumerate(host_slots):
             host.write_spill_pages(j, {k: p[1][i]
                                        for k, p in pairs.items()})
+        from repro.core.costmodel import kv_bytes_per_token
+        overflow_pages = sum(counts[1:])
+        self.spill_log.append({
+            "kind": "spill", "tp_from": 0, "tp_to": 0,
+            "wall_s": time.monotonic() - t0,
+            "bytes": kv_bytes_per_token(self.cfg) * overflow_pages
+            * self.page_tokens,
+            "pages": overflow_pages,
+        })
 
     def write_spill_pages(self, j: int, part) -> None:
         """Host side of ``spill_slot``: land one overflow segment in

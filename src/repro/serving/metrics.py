@@ -23,7 +23,9 @@ from typing import Dict, List, Sequence
 #: drift of the executed schedule steps (StepReport.seconds, dispatch
 #: -> resident; 0 in the sim, where measured IS the model).  Live,
 #: overlapped steps' spans include the serving work the transfer hid
-#: under, so treat the column as an UPPER BOUND on model error — the
+#: under, so the column UPPER-BOUNDS model error on this path; the
+#: honest modeled-vs-measured drift is ``core.calibrate``'s ISOLATED
+#: micro-spans (the gated ``calibration.*`` trajectory columns) — the
 #: per-action log also carries exposed_s (dispatch + blocking wait,
 #: the cost serving actually paid); merge_wall_s is the cumulative wall
 #: time spent inside CROSS-DEVICE (merge/split) sessions — the window

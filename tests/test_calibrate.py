@@ -1,0 +1,472 @@
+"""Measured-cost calibration (ISSUE 9): the cost model answers to the
+clock it schedules against.
+
+Three layers, mirroring the tentpole:
+
+* **bugfix regressions** (pure python, no devices): degree-pair cost
+  monotonicity in ``CostModel.transform_time``, the zero-horizon
+  ``attach_pressure`` guard, and page-size threading in ``spill_time``;
+* **feedback loop** (pure python): the ``MeasuredCosts`` EWMA semantics
+  (cold -> None, warm -> measured; bytes-bucket selection) and the
+  acceptance-criterion unit-assert that the live scheduler's
+  ``_rung_cost`` consumes measured EWMA estimates once warm;
+* **cross-validation on fake devices** (subprocess, 8 forced host
+  devices — same pattern as test_sim_live_parity): ``calibrate`` runs
+  the isolated micros, the fitted ``CalibratedCostModel`` predicts the
+  isolated measured kernel-migration spans within a tolerance band,
+  modeled-vs-measured RUNG ORDERING agrees on the representative ladder
+  scenario, and sim/live decision parity holds on the PR-8 ladder trace
+  with the calibrated model attached to BOTH planes.
+
+CPU-interpret kernel timing is noisy (x2 run-to-run swings are normal),
+so the tolerance bands here are deliberately wide: they catch a model
+that is WRONG (order-of-magnitude drift, inverted rung ordering), not
+one that is merely jittery.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.calibrate import (CalibratedCostModel, MeasuredCosts,
+                                  Measurement, fit_link_model,
+                                  predicted_time)
+from repro.core.costmodel import CostModel
+from repro.core.events import ArrivalPressure
+from repro.core.kv_transform import LinkModel
+from repro.core.scheduler import (GygesScheduler, ScaleUp,
+                                  SchedulerConfig, Spill)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CFG = get_config("llama3-8b").reduced()
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: transform_time prices the real degree pair
+# ---------------------------------------------------------------------------
+
+def test_transform_time_degree_pair_monotone():
+    """A TP1->2 merge moves less KV and fewer weight shards than
+    TP1->4, so it must price strictly cheaper — the PR-8 behavior
+    (everything priced as TP1->4) inverted ladder economics for
+    width-2 rungs."""
+    cm = CostModel(CFG)
+    t12 = cm.transform_time("gyges", tp_from=1, tp_to=2)
+    t14 = cm.transform_time("gyges", tp_from=1, tp_to=4)
+    assert 0.0 < t12 < t14
+
+
+def test_transform_time_default_is_legacy_tp4():
+    """``tp_to=None`` keeps the legacy call shape: existing callers
+    (bench tables, sim TRANSFORM_TIME_FACTOR paths) see byte-identical
+    numbers to the pre-calibration hardcoded-4 costing."""
+    cm = CostModel(CFG)
+    for method in ("gyges", "gyges-", "basic"):
+        assert cm.transform_time(method) == cm.transform_time(
+            method, tp_from=1, tp_to=4)
+
+
+def test_transform_time_same_degree_free_and_down_differs():
+    cm = CostModel(CFG)
+    assert cm.transform_time("gyges", tp_from=2, tp_to=2) == 0.0
+    # scale-down pays the §4.2 all-gather, scale-up the zero-copy page
+    # release — the directions must not collapse to one number
+    up = cm.transform_time("gyges", tp_from=1, tp_to=4)
+    down = cm.transform_time("gyges", tp_from=4, tp_to=1)
+    assert up > 0.0 and down > 0.0 and up != down
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: zero-horizon guard + derived horizon
+# ---------------------------------------------------------------------------
+
+def test_attach_pressure_warns_on_zero_horizon():
+    s = GygesScheduler(SchedulerConfig(long_threshold=16))
+    with pytest.warns(RuntimeWarning, match="zero transform-cost"):
+        s.attach_pressure(ArrivalPressure())
+
+
+def test_horizon_derived_from_attached_cost_model():
+    import warnings
+    s = GygesScheduler(SchedulerConfig(long_threshold=16, target_tp=4))
+    s.attach_cost(CostModel(CFG))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")   # no warning may fire
+        s.attach_pressure(ArrivalPressure())
+    assert s.transform_horizon_s() == pytest.approx(
+        CostModel(CFG).transform_time("gyges", tp_from=1, tp_to=4))
+
+
+def test_explicit_transform_cost_still_wins():
+    import warnings
+    s = GygesScheduler(SchedulerConfig(long_threshold=16,
+                                       transform_cost_s=5.0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        s.attach_pressure(ArrivalPressure())
+    assert s.transform_horizon_s() == 5.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: spill_time tracks the pool's page geometry
+# ---------------------------------------------------------------------------
+
+def test_spill_time_threads_page_size():
+    """Smaller pages => more overflow pages => more interconnect
+    segments for the same token count; and an explicit ``pages=``
+    override (the caller knows the real overflow-page count) wins over
+    token-count division."""
+    cm = CostModel(CFG)
+    tokens = 1024
+    t16 = cm.spill_time(tokens, page_tokens=16)
+    t64 = cm.spill_time(tokens, page_tokens=64)
+    assert t16 > t64
+    seg = cm.link.segment_overhead
+    assert t16 - t64 == pytest.approx((1024 // 16 - 1024 // 64) * seg)
+    assert cm.spill_time(tokens, page_tokens=16, pages=1) == \
+        pytest.approx(cm.spill_time(tokens, page_tokens=1024))
+
+
+def test_rung_cost_uses_configured_page_tokens():
+    tokens = 1024
+    costs = {}
+    for pt in (16, 64):
+        s = GygesScheduler(SchedulerConfig(long_threshold=16,
+                                           page_tokens=pt))
+        s.attach_cost(CostModel(CFG))
+        costs[pt], _ = s._rung_cost(
+            Spill(iid=0, host_iid=1, tokens=tokens), 0)
+    assert costs[16] > costs[64]
+
+
+# ---------------------------------------------------------------------------
+# The feedback loop: MeasuredCosts EWMA + _rung_cost consumption
+# ---------------------------------------------------------------------------
+
+def test_measured_costs_cold_then_warm():
+    mc = MeasuredCosts(alpha=0.5, min_samples=3)
+    assert mc.estimate("transform", 1, 4) is None
+    mc.observe("transform", 1, 4, 1.0, nbytes=1e6)
+    mc.observe("transform", 1, 4, 1.0, nbytes=1e6)
+    assert mc.estimate("transform", 1, 4) is None      # still cold
+    mc.observe("transform", 1, 4, 1.0, nbytes=1e6)
+    assert mc.warm("transform", 1, 4)
+    assert mc.estimate("transform", 1, 4) == pytest.approx(1.0)
+    # other degree pairs stay cold — keys are per (kind, pair)
+    assert mc.estimate("transform", 1, 2) is None
+
+
+def test_measured_costs_bytes_bucket_selection():
+    mc = MeasuredCosts(min_samples=2)
+    for _ in range(2):
+        mc.observe("spill", 0, 0, 0.010, nbytes=1 << 20)   # ~1 MiB
+    for _ in range(2):
+        mc.observe("spill", 0, 0, 0.500, nbytes=1 << 28)   # ~256 MiB
+    small = mc.estimate("spill", 0, 0, nbytes=1 << 20)
+    large = mc.estimate("spill", 0, 0, nbytes=1 << 28)
+    assert small == pytest.approx(0.010)
+    assert large == pytest.approx(0.500)
+    # no size hint -> observation-weighted aggregate across buckets
+    blended = mc.estimate("spill", 0, 0)
+    assert small < blended < large
+
+
+def test_rung_cost_consumes_measured_ewma():
+    """Acceptance criterion, unit-asserted: once the EWMA is warm, the
+    live scheduler's ``_rung_cost`` returns the MEASURED estimate for a
+    transform rung — not the modeled prior — and falls back to the
+    modeled value for pairs that are still cold."""
+    cal = CalibratedCostModel(CFG)
+    s = GygesScheduler(SchedulerConfig(long_threshold=16, target_tp=4))
+    s.attach_cost(cal)
+    act = ScaleUp(iid=0, tp_to=4, donor_iids=(1, 2, 3))
+    modeled, _ = s._rung_cost(act, 2)
+    assert modeled == pytest.approx(
+        CostModel(CFG).transform_time("gyges", tp_from=1, tp_to=4))
+    # feed realized wall times through the control-plane hook (the
+    # transform_log record schema ClusterEngine.step streams)
+    for _ in range(3):
+        cal.observe_transform({"kind": "transform", "tp_from": 1,
+                               "tp_to": 4, "wall_s": 0.321,
+                               "bytes": 1e6})
+    warm, _ = s._rung_cost(act, 2)
+    assert warm == pytest.approx(0.321)
+    assert warm != modeled
+    # cold pair still priced by the model
+    cold, _ = s._rung_cost(ScaleUp(iid=0, tp_to=2, donor_iids=(1,)), 2)
+    assert cold == pytest.approx(
+        CostModel(CFG).transform_time("gyges", tp_from=1, tp_to=2))
+
+
+def test_pressure_horizon_tracks_measured_costs():
+    cal = CalibratedCostModel(CFG)
+    s = GygesScheduler(SchedulerConfig(long_threshold=16, target_tp=4))
+    s.attach_cost(cal)
+    for _ in range(3):
+        cal.observe_transform({"kind": "transform", "tp_from": 1,
+                               "tp_to": 4, "wall_s": 7.5})
+    assert s.transform_horizon_s() == pytest.approx(7.5)
+
+
+def test_calibrated_spill_time_warm_and_cold():
+    cal = CalibratedCostModel(CFG)
+    prior = CostModel(CFG)
+    assert cal.spill_time(512, page_tokens=16) == pytest.approx(
+        prior.spill_time(512, page_tokens=16))
+    for _ in range(3):
+        cal.observe_transform({"kind": "spill", "tp_from": 0,
+                               "tp_to": 0, "wall_s": 0.042})
+    assert cal.spill_time(512, page_tokens=16) == pytest.approx(0.042)
+
+
+# ---------------------------------------------------------------------------
+# fit_link_model on synthetic spans (no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_fit_recovers_synthetic_link():
+    true = LinkModel(bandwidth=2e8, segment_overhead=5e-6)
+    # bytes/segments ratios must VARY or the two columns are collinear
+    # and the parameters are unidentifiable (any bw/overhead split fits)
+    ms = [Measurement("kv_migrate_up", b, s,
+                      b / true.bandwidth + s * true.segment_overhead)
+          for b, s in ((1 << 17, 16), (1 << 19, 512), (1 << 21, 64),
+                       (1 << 22, 4096))]
+    fit = fit_link_model(ms)
+    assert fit.bandwidth == pytest.approx(true.bandwidth, rel=1e-6)
+    assert fit.segment_overhead == pytest.approx(true.segment_overhead,
+                                                 rel=1e-6)
+    for m in ms:
+        assert predicted_time(m, fit) == pytest.approx(m.wall_s,
+                                                       rel=1e-6)
+
+
+def test_fit_degenerate_inputs_fall_back():
+    prior = LinkModel()
+    assert fit_link_model([], prior) == prior
+    one = [Measurement("kv_migrate_up", 1 << 20, 16, 0.01)]
+    fit = fit_link_model(one, prior)
+    assert fit.bandwidth == pytest.approx((1 << 20) / 0.01)
+    assert fit.segment_overhead == prior.segment_overhead
+    assert fit.overlap_fraction == prior.overlap_fraction
+
+
+def test_fit_kinds_scoping():
+    """``kinds`` restricts the fit to the kernel-migration path so a
+    slow interpret-mode spill span cannot drag the migration fit."""
+    true = LinkModel(bandwidth=1e8, segment_overhead=1e-6)
+    kv = [Measurement("kv_migrate_up", b, s,
+                      b / true.bandwidth + s * true.segment_overhead)
+          for b, s in ((1 << 17, 16), (1 << 20, 2048), (1 << 22, 256))]
+    junk = [Measurement("spill_copy", 1 << 16, 4, 0.3)]
+    fit = fit_link_model(kv + junk, kinds=("kv_migrate_up",
+                                           "kv_migrate_down"))
+    assert fit.bandwidth == pytest.approx(true.bandwidth, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Cross-validation on fake devices (subprocess, 8 forced devices)
+# ---------------------------------------------------------------------------
+
+CALIBRATE_DRIVER = """
+    import json
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.calibrate import calibrate
+    from repro.core.costmodel import CostModel
+    from repro.core.scheduler import (GygesScheduler, ScaleUp,
+                                      SchedulerConfig, Spill)
+
+    cfg = get_config("llama3-8b").reduced()
+    rep = calibrate(cfg, repeats=3)
+    cal = rep.model
+
+    # representative ladder scenario (the PR-8 geometry): one spill,
+    # one partial merge (2 of 4 devices loaned), one full merge
+    def rung_costs(model):
+        s = GygesScheduler(SchedulerConfig(long_threshold=16,
+                                           target_tp=4,
+                                           page_tokens=16))
+        s.attach_cost(model)
+        acts = [Spill(iid=0, host_iid=1, tokens=24),
+                ScaleUp(iid=0, tp_to=4, donor_iids=(1, 2),
+                        donor_devices=(1, 1)),
+                ScaleUp(iid=0, tp_to=4, donor_iids=(1, 2, 3))]
+        return [s._rung_cost(a, i)[0] for i, a in enumerate(acts)]
+
+    print("RESULT " + json.dumps({
+        "n_measurements": len(rep.measurements),
+        "kinds": sorted({m.kind for m in rep.measurements}),
+        "bandwidth": rep.link.bandwidth,
+        "segment_overhead": rep.link.segment_overhead,
+        "kv_drift": rep.kv_migration_drift_frac,
+        "walls": [m.wall_s for m in rep.measurements],
+        "modeled_order": rung_costs(CostModel(cfg)),
+        "measured_order": rung_costs(cal),
+    }))
+"""
+
+
+def _run_driver(body: str, tag: str) -> dict:
+    use_subprocess = "xla_force_host_platform_device_count=8" \
+        not in os.environ.get("XLA_FLAGS", "")
+    if use_subprocess:
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8",
+                   PYTHONPATH=os.pathsep.join(
+                       [os.path.join(REPO, "src"), REPO]))
+        out = subprocess.run([sys.executable, "-c", body],
+                             capture_output=True, text=True, env=env,
+                             timeout=900)
+        assert out.returncode == 0, (
+            f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}")
+        stdout = out.stdout
+    else:
+        import contextlib
+        import io
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            exec(compile(body, f"<calibrate:{tag}>", "exec"), {})
+        stdout = buf.getvalue()
+    line = next(ln for ln in stdout.splitlines()
+                if ln.startswith("RESULT "))
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.slow
+def test_calibration_cross_validation_on_fake_devices():
+    """The fitted ``CalibratedCostModel`` predicts the isolated
+    measured kernel-migration spans within a (wide — CPU timing)
+    tolerance band, and the modeled vs measured RUNG ORDERING agrees
+    on the representative ladder scenario: spill cheapest, partial
+    merge cheaper than the full merge."""
+    r = _run_driver(textwrap.dedent(CALIBRATE_DRIVER), "xval")
+    assert r["n_measurements"] >= 6
+    assert r["kinds"] == ["kv_migrate_down", "kv_migrate_up",
+                          "spill_copy", "weight_put"]
+    assert r["bandwidth"] > 0 and r["segment_overhead"] >= 0
+    assert all(w > 0 for w in r["walls"])
+    # cross-validation band: the 2-parameter link explains its own
+    # isolated kernel spans to within ~2x median relative error (CPU
+    # interpret-mode kernels jitter hard; a broken fit lands at 5-100x)
+    assert r["kv_drift"] == r["kv_drift"], "drift is NaN"
+    assert r["kv_drift"] < 2.0, r
+    # rung-ordering agreement, modeled vs measured
+    for costs in (r["modeled_order"], r["measured_order"]):
+        spill, partial, full = costs
+        assert spill < partial < full, r
+
+
+CALIBRATED_LADDER_DRIVER = """
+    import dataclasses, json
+    import jax, numpy as np
+
+    from repro.configs import get_config
+    from repro.core.calibrate import CalibratedCostModel, calibrate
+    from repro.core.cluster_sim import Cluster
+    from repro.core.scheduler import (GygesScheduler, PrefillPolicy,
+                                      SchedulerConfig, ScaleUp, Spill)
+    from repro.serving.cluster import ClusterEngine
+    from repro.serving.request import Request, ServeRequest
+
+    TRACE = [(0, 10, 4), (1, 24, 16), (2, 40, 16), (3, 10, 4)]
+    Q = 16
+    POLICY = PrefillPolicy(token_budget=16, mode="mixed",
+                           long_threshold=Q, order="sjf")
+
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    # ONE calibration run; each plane gets its own CalibratedCostModel
+    # sharing the fitted link (separate EWMAs — the planes must agree
+    # from the fitted constants + cold-start rule alone)
+    link = calibrate(cfg, repeats=2).link
+
+    def mk_sched():
+        s = GygesScheduler(SchedulerConfig(
+            long_threshold=Q, target_tp=4, spill=True,
+            partial_merge=True, spill_slack=2.0))
+        s.attach_cost(CalibratedCostModel(cfg, link=link))
+        return s
+
+    def act_key(a):
+        return (type(a).__name__, a.iid, getattr(a, "tp_to", None),
+                tuple(sorted(getattr(a, "donor_iids", ()) or ())),
+                tuple(getattr(a, "donor_devices", ()) or ()),
+                getattr(a, "host_iid", None))
+
+    devs = jax.devices()
+    assert len(devs) >= 8, len(devs)
+    rng = np.random.default_rng(0)
+    prompts = {rid: rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for rid, n, _ in TRACE}
+    live = ClusterEngine(cfg, devs[:8], n_instances=4, max_batch=2,
+                         max_seq=2 * Q, page_tokens=Q, dwell_steps=4,
+                         scheduler=mk_sched(), prefill_policy=POLICY)
+    for e in live.engines:
+        e.transform(1)
+    live.run(max_steps=4000)
+    for rid, n, out in TRACE:
+        live.submit(ServeRequest(rid=rid, prompt=list(prompts[rid]),
+                                 max_new_tokens=out))
+        live.run(max_steps=8000)
+    live_fed = sum(live.scheduler.cost_model.measured._count.values())
+
+    sim = Cluster(cfg, n_hosts=1, gpus_per_host=8, scheduler=mk_sched(),
+                  target_tp=4, prefill_policy=POLICY, seq_quantum=Q,
+                  max_batch=2, widths=[2, 2, 2, 2], page_tokens=Q,
+                  cost_model=CalibratedCostModel(cfg, link=link))
+    sim.scale_down_dwell = 5.0
+    now = 0.0
+    dt = 0.25
+    for rid, n, out in TRACE:
+        sim.submit(Request(rid, now, n, out), now)
+        for _ in range(20000):
+            sim.advance(now, dt)
+            now += dt
+            done = all(r.tokens_done >= r.out_len
+                       for r in sim._req_by_rid.values())
+            if done and all(i.tp == 1 for i in sim.instances) \
+                    and not sim.waiting and not sim.partition.spills():
+                break
+        else:
+            raise RuntimeError(f"sim did not drain request {rid}")
+
+    print("RESULT " + json.dumps({
+        "live_placements": {str(k): v
+                            for k, v in live.placements.items()},
+        "sim_placements": {str(k): v
+                           for k, v in sim.placements.items()},
+        "live_actions": [act_key(a) for a in live.actions],
+        "sim_actions": [act_key(a) for a in sim.actions],
+        "live_spills": sum(1 for a in live.actions
+                           if isinstance(a, Spill)),
+        "live_partials": sum(1 for a in live.actions
+                             if isinstance(a, ScaleUp)
+                             and a.donor_devices),
+        "live_fed": live_fed,
+    }))
+"""
+
+
+@pytest.mark.slow
+def test_calibrated_ladder_parity_sim_vs_live():
+    """Acceptance criterion: sim/live decision parity holds on the
+    PR-8 ladder trace with the CalibratedCostModel (one shared fitted
+    link) attached to BOTH planes, and the live plane actually fed
+    realized wall times into its EWMA along the way."""
+    r = _run_driver(textwrap.dedent(CALIBRATED_LADDER_DRIVER),
+                    "calibrated-ladder")
+    assert r["live_placements"] == r["sim_placements"], (
+        r["live_placements"], r["sim_placements"])
+    assert r["live_actions"] == r["sim_actions"], (
+        r["live_actions"], r["sim_actions"])
+    assert r["live_spills"] >= 1 and r["live_partials"] >= 1, r
+    assert r["live_fed"] >= 1, (
+        "ClusterEngine.step streamed no realized wall times into the "
+        "calibrated model's EWMA")
