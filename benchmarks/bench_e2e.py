@@ -17,6 +17,13 @@ p50/p99 and queue delay.  Asserts the headline claim: chunked
 decode-priority improves background TTFT p99 over whole-prompt
 prefill on the same trace.
 
+``--layout-smoke`` is the elastic-SP lane: the modeled SP2xTP2-vs-TP4
+headline, a sim A/B on a long-context decode trace (layout rung on vs
+off, same degree budget), and a LIVE engine that the scheduler
+re-factorizes TP4 -> SP2xTP2 mid-decode through a same-degree §4.3
+session — asserting a layout rung was chosen and zero decode-stall
+steps while the session was open.
+
 ``--replay-smoke`` is the event-driven lane: the Fig.-2-shaped
 production trace replayed through the simulator under SLOs (goodput
 for rr/llf/gyges, pressure-aware vs pressure-blind gyges), plus a
@@ -28,8 +35,8 @@ import os
 from typing import Dict, List, Tuple
 
 from repro.configs import get_config
-from repro.core.cluster_sim import (Cluster, burst_trace, longtail_trace,
-                                    production_trace)
+from repro.core.cluster_sim import (Cluster, Request, burst_trace,
+                                    longtail_trace, production_trace)
 from repro.core.costmodel import H20
 from repro.core.events import SLO, ArrivalPressure
 from repro.core.scheduler import (SCHEDULERS, GygesScheduler,
@@ -379,6 +386,179 @@ def run_spill_smoke() -> List[str]:
             f"{n_shorts},{m['finished']},{m['total']},{wall:.1f}"]
 
 
+def long_decode_trace(duration: float = 240.0, qps: float = 2.0,
+                      in_len: int = 2_500, out_len: int = 600,
+                      seed: int = 5) -> List[Request]:
+    """Long-context decode pressure: every request's context exceeds
+    the TP1 admission ceiling of the layout A/B's pool (so it runs
+    wide) and its decode phase dominates wall time — the workload mix
+    where sequence-parallel shards pay off and pure TP's AllReduce
+    does not."""
+    import random
+    rnd = random.Random(seed)
+    reqs: List[Request] = []
+    t, rid = 0.0, 0
+    while t < duration:
+        reqs.append(Request(rid, t, in_len, out_len))
+        rid += 1
+        t += rnd.expovariate(qps)
+    return reqs
+
+
+def layout_ab_sim(duration: float = 240.0) -> Dict[str, Dict[str, float]]:
+    """The tentpole A/B: one width-4 instance serving the long-decode
+    trace with the scheduler's layout rung OFF (it scales up to pure
+    TP4 and stays there) vs ON (``decide_layout`` re-factorizes the
+    same 4 devices to SP2xTP2 while long-context work is in service).
+    Same trace, same degree budget — only the factorization moves.
+
+    The quantized capacity contract (``seq_quantum`` x ``max_batch``)
+    keeps enough long requests decoding concurrently that the
+    INSTANCE throughput ceiling binds (below ~18 active the per-request
+    TPOT floor does, and any degree-4 layout looks identical); the
+    ladder opt-in (``partial_merge``) routes placement through
+    ``decide_scale_up``'s in-place rung, which is how a lone wide
+    instance grows in both planes."""
+    cfg = get_config("qwen2.5-32b")
+    out: Dict[str, Dict[str, float]] = {}
+    for name, lay in (("tp4-static", False), ("layout-rung", True)):
+        sched = GygesScheduler(SchedulerConfig(
+            long_threshold=1_000, partial_merge=True, layouts=lay))
+        c = Cluster(cfg, n_hosts=1, gpus_per_host=4, widths=[4],
+                    seq_quantum=1_000, max_batch=32, scheduler=sched)
+        m = c.run(long_decode_trace(duration), dt=0.25)
+        m["layout_changes"] = float(sum(
+            1 for a in c.actions
+            if getattr(a, "layout", None) is not None))
+        out[name] = m
+    return out
+
+
+def run_layout_smoke() -> List[str]:
+    """The ``--layout-smoke`` CI lane (elastic-SP tentpole proof):
+
+    1. modeled headline: SP2xTP2 beats TP4 on long-context decode tps
+       while TP4 keeps the short-context win;
+    2. sim A/B on the long-decode trace: the layout rung must fire and
+       must RAISE throughput over the same pool stuck at pure TP4;
+    3. live: a 4-device engine is scaled to TP4 by a long request, the
+       layout scan re-factorizes it to SP2xTP2 through a same-degree
+       session, and decodes in flight never fully stall while any
+       layout session is open (zero-stall contract, measured per step
+       from control-plane-visible state)."""
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core.costmodel import layout_decode_tps
+    from repro.launch.mesh import Layout
+    from repro.serving.cluster import ClusterEngine
+    from repro.serving.request import ServeRequest, State
+
+    tp4_s = layout_decode_tps(Layout(1, 4), False)
+    tp4_l = layout_decode_tps(Layout(1, 4), True)
+    sp_s = layout_decode_tps(Layout(2, 2), False)
+    sp_l = layout_decode_tps(Layout(2, 2), True)
+    assert sp_l > tp4_l, "SP2xTP2 must win long-context decode"
+    assert tp4_s > sp_s, "TP4 must keep the short-context win"
+    rows = ["layout.modeled,layout,short_ctx_tps,long_ctx_tps",
+            f"layout.modeled,TP4,{tp4_s:.0f},{tp4_l:.0f}",
+            f"layout.modeled,SP2xTP2,{sp_s:.0f},{sp_l:.0f}"]
+
+    ab = layout_ab_sim()
+    assert ab["layout-rung"]["layout_changes"] >= 1, (
+        "the scheduler never chose a layout rung in the sim A/B")
+    assert ab["layout-rung"]["throughput_tps"] \
+        > ab["tp4-static"]["throughput_tps"], (
+        "SP2xTP2 did not beat TP4 on long-context decode throughput",
+        {k: v["throughput_tps"] for k, v in ab.items()})
+    rows.append("layout.sim,system,tps,finished,total,layout_changes,"
+                "n_transforms")
+    for name, m in ab.items():
+        rows.append(f"layout.sim,{name},{m['throughput_tps']:.1f},"
+                    f"{m['finished']:.0f},{m['total']:.0f},"
+                    f"{m['layout_changes']:.0f},{m['n_transforms']:.0f}")
+    gain = (ab["layout-rung"]["throughput_tps"]
+            / ab["tp4-static"]["throughput_tps"])
+    rows.append(f"layout.sim,derived,long-decode gain = {gain:.2f}x "
+                f"(layout rung vs static TP4, same 4 devices)")
+
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    devs = jax.devices()
+    if len(devs) < 4:
+        return rows + ["layout.live-smoke,SKIPPED (needs >= 4 devices)"]
+    Q = 16
+    sched = GygesScheduler(SchedulerConfig(
+        long_threshold=Q, target_tp=4, layouts=True))
+    pol = PrefillPolicy(token_budget=Q, mode="mixed", long_threshold=Q,
+                        order="sjf")
+    cluster = ClusterEngine(cfg, devs[:4], n_instances=1, max_batch=4,
+                            max_seq=4 * Q, page_tokens=Q, dwell_steps=4,
+                            scheduler=sched, prefill_policy=pol)
+    eng = cluster.engines[0]
+    rng = np.random.default_rng(0)
+    shorts = [ServeRequest(rid=i, prompt=rng.integers(
+                  0, cfg.vocab_size, size=4).tolist(), max_new_tokens=24)
+              for i in range(2)]
+    t0 = time.perf_counter()
+    for r in shorts:
+        cluster.submit(r)
+    for _ in range(3):
+        cluster.step()
+    full = eng.max_seq_at(4)
+    long_r = ServeRequest(rid=99, prompt=rng.integers(
+        0, cfg.vocab_size, size=full - 17).tolist(), max_new_tokens=12)
+    cluster.submit(long_r)
+    reqs = shorts + [long_r]
+
+    def decoded() -> int:
+        return sum(len(r.generated) for r in reqs)
+
+    stalls = layout_steps = 0
+    observed = set()
+    before = decoded()
+    for _ in range(8_000):
+        # a same-degree open session IS a layout change here: no merge
+        # donors exist (single instance), so tp_pending == tp only when
+        # the factorization is what moves
+        in_layout = eng.transforming and eng.tp_pending == eng.tp
+        decoding = sum(1 for r in eng.slots if r is not None
+                       and r.state == State.DECODE)
+        cluster.step()
+        observed.add(str(eng.par_layout))
+        after = decoded()
+        if in_layout:
+            layout_steps += 1
+            if decoding > 0 and after <= before:
+                stalls += 1
+        before = after
+        if all(r.finished for r in reqs) and not eng.transforming:
+            break
+    m = cluster.run(max_steps=4_000)      # quiet window: Alg 2 returns
+    wall = time.perf_counter() - t0
+    lay_acts = [a for a in cluster.actions
+                if getattr(a, "layout", None) is not None]
+    assert lay_acts, "the live scheduler never chose a layout rung"
+    assert any(str(a.layout) == "SP2xTP2" for a in lay_acts), lay_acts
+    assert "SP2xTP2" in observed, observed
+    assert stalls == 0, (
+        f"decode stalled during a layout session: {stalls} full-stall "
+        f"steps of {layout_steps}")
+    assert m["finished"] == m["total"] == len(reqs)
+    rows += ["layout.live-smoke,arch,devices,layout_actions,"
+             "layouts_seen,layout_session_steps,decode_stall_steps,"
+             "finished,total,wall_s",
+             f"layout.live-smoke,{cfg.name},4,{len(lay_acts)},"
+             f"{'|'.join(sorted(observed))},{layout_steps},{stalls},"
+             f"{m['finished']},{m['total']},{wall:.1f}"]
+    return rows
+
+
 def replay_goodput_sim(sched: str = "gyges", pressure: bool = False,
                        duration: float = 600.0,
                        seed: int = 0) -> Dict[str, float]:
@@ -442,7 +622,8 @@ def timed_parity_trace(n_bursts: int) -> List:
 
 def _act_key(a) -> Tuple:
     return (type(a).__name__, a.iid, a.tp_to,
-            tuple(sorted(getattr(a, "donor_iids", ()) or ())))
+            tuple(sorted(getattr(a, "donor_iids", ()) or ())),
+            str(getattr(a, "layout", None)))
 
 
 def timed_dual_replay(n_bursts: int) -> Dict[str, object]:
@@ -594,8 +775,13 @@ def weight_stream_micro() -> Dict[str, float]:
 #: v3: + calibration.isolated scenario — gated kv_drift_gated, the
 #: noise-floored modeled-vs-isolated-measured drift of the fitted link
 #: on the kernel KV-migration spans, with raw drift, span walls and
-#: fitted constants informational)
-TRAJECTORY_SCHEMA_VERSION = 3
+#: fitted constants informational;
+#: v4: + layout.long_decode scenario — the elastic-SP A/B on the
+#: long-decode trace with throughput/latency columns gated plus a
+#: gated layout_gain_frac (layout-rung tps over static-TP4 tps - 1);
+#: calibration.isolated additionally carries informational
+#: overlap_frac_fitted / overlap_drift_frac columns)
+TRAJECTORY_SCHEMA_VERSION = 4
 
 #: gated columns and the direction that counts as BETTER; every other
 #: emitted column (transform walls, merge_wall_s, ...) is informational
@@ -606,6 +792,7 @@ TRAJECTORY_GATES = {
     "goodput_slo": "higher",
     "chunk_prefill_tok_per_s": "higher",
     "kv_drift_gated": "lower",
+    "layout_gain_frac": "higher",
 }
 
 _TRAJECTORY_COLUMNS = ("throughput_tps", "ttft_p50", "ttft_p99",
@@ -643,6 +830,18 @@ def trajectory_payload() -> Dict[str, object]:
     }
     from benchmarks.bench_calibrate import calibration_metrics
     scenarios["calibration.isolated"] = calibration_metrics()
+    ab = layout_ab_sim()
+    lm = ab["layout-rung"]
+    scenarios["layout.long_decode"] = {
+        "throughput_tps": lm["throughput_tps"],
+        "ttft_p99": lm["ttft_p99"], "tpot_p99": lm["tpot_p99"],
+        "layout_gain_frac": (lm["throughput_tps"]
+                             / max(ab["tp4-static"]["throughput_tps"],
+                                   1e-9) - 1.0),
+        "layout_changes": lm["layout_changes"],
+        "static_tp4_tps": ab["tp4-static"]["throughput_tps"],
+        "n_transforms": lm["n_transforms"],
+    }
     return {
         "schema_version": TRAJECTORY_SCHEMA_VERSION,
         "gates": dict(TRAJECTORY_GATES),
@@ -651,6 +850,8 @@ def trajectory_payload() -> Dict[str, object]:
                                      burst_period=45.0, burst_dur=8.0,
                                      burst_qps=6.0, seed=0),
             "timed_parity_trace": dict(n_bursts=24),
+            "long_decode_trace": dict(duration=240.0, qps=2.0,
+                                      in_len=2_500, out_len=600, seed=5),
         },
         "scenarios": scenarios,
     }
@@ -675,13 +876,20 @@ def main():
                          "request is served across two engines' pools "
                          "with no transformation; per-step zero-drain "
                          "asserted on both engines)")
+    ap.add_argument("--layout-smoke", action="store_true",
+                    help="elastic-SP lane: modeled SP2xTP2-vs-TP4 "
+                         "headline, sim A/B on a long-decode trace, "
+                         "and a live same-degree TP4 -> SP2xTP2 "
+                         "re-factorization with zero decode stalls")
     ap.add_argument("--replay-smoke", action="store_true",
                     help="event-driven replay: production-trace goodput "
                          "sweep (rr/llf/gyges, pressure-aware vs blind) "
                          "+ 1000+ timed requests through sim AND live "
                          "with decision parity asserted")
     args = ap.parse_args()
-    if args.merge_smoke:
+    if args.layout_smoke:
+        rows = run_layout_smoke()
+    elif args.merge_smoke:
         rows = run_merge_smoke()
     elif args.spill_smoke:
         rows = run_spill_smoke()

@@ -22,10 +22,12 @@ module closes the loop in three moves:
 2. **Fitting** (``fit_link_model`` / ``fit_hardware``): the
    ``LinkModel`` constants the whole accounting plane prices against
    (bandwidth, per-segment overhead) are least-squares fitted from the
-   isolated spans; ``overlap_fraction`` keeps its prior unless the
-   caller supplies overlapped/isolated measurement pairs (isolated
-   micros by construction hide nothing).  ``calibrate`` packages the
-   fit as a ``CalibratedCostModel`` both planes can attach.
+   isolated spans; ``overlap_fraction`` is fitted separately from
+   PAIRED spans (``measure_overlap_pairs`` / ``fit_overlap_fraction``:
+   the same transfer timed alone and under concurrent compute —
+   isolated micros by construction hide nothing, so only the pairs
+   carry overlap information).  ``calibrate`` packages the fit as a
+   ``CalibratedCostModel`` both planes can attach.
 
 3. **Measured feedback** (``MeasuredCosts``): the control planes feed
    every realized transform/spill wall time from their ``transform_log``
@@ -47,10 +49,12 @@ from repro.core.costmodel import (CostModel, H20, Hardware,
                                   kv_bytes_per_token)
 from repro.core.kv_transform import LinkModel, MigrationStats
 
-__all__ = ["Measurement", "CalibrationReport", "MeasuredCosts",
-           "CalibratedCostModel", "measure_kv_migration",
-           "measure_weight_put", "measure_spill_copy", "fit_link_model",
-           "fit_hardware", "predicted_time", "calibrate"]
+__all__ = ["Measurement", "OverlapPair", "CalibrationReport",
+           "MeasuredCosts", "CalibratedCostModel",
+           "measure_kv_migration", "measure_weight_put",
+           "measure_spill_copy", "measure_overlap_pairs",
+           "fit_link_model", "fit_overlap_fraction", "fit_hardware",
+           "predicted_time", "calibrate"]
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +216,83 @@ def measure_spill_copy(n_pages: Sequence[int] = (4, 16),
     return out
 
 
+@dataclass(frozen=True)
+class OverlapPair:
+    """Paired spans for one transfer geometry: the SAME transfer timed
+    alone and launched under concurrent decode-like compute.  The
+    isolated micros above by construction hide nothing, so they carry
+    no information about ``LinkModel.overlap_fraction`` — these pairs
+    are what does: the fraction of the isolated transfer time that
+    vanished when compute ran alongside it."""
+    bytes_moved: int
+    transfer_s: float        # transfer alone
+    compute_s: float         # compute alone
+    both_s: float            # transfer dispatched, compute run, both
+                             # blocked on
+
+    @property
+    def overlap_frac(self) -> float:
+        """Hidden fraction of the transfer: (t_c + t_t - t_both) / t_t,
+        clamped to [0, 1].  1.0 = the transfer fully disappeared behind
+        compute; 0.0 = fully serialized (what a host-only backend with
+        no independent copy stream measures)."""
+        if self.transfer_s <= 0.0:
+            return 0.0
+        hidden = self.compute_s + self.transfer_s - self.both_s
+        return min(max(hidden / self.transfer_s, 0.0), 1.0)
+
+
+def measure_overlap_pairs(transfer_bytes: Sequence[int] = (1 << 20,
+                                                           1 << 22),
+                          compute_dim: int = 256,
+                          compute_iters: int = 8,
+                          devices=None, repeats: int = 5
+                          ) -> List[OverlapPair]:
+    """Time each transfer size three ways — transfer alone (device 0 ->
+    device 1, the per-layer weight-stream unit), a decode-like matmul
+    chain alone on the destination device, and the transfer DISPATCHED
+    then the compute run with one blocking join — yielding the paired
+    spans ``fit_overlap_fraction`` turns into a measured
+    ``overlap_fraction``."""
+    import jax
+    import jax.numpy as jnp
+
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < 2:
+        raise ValueError("overlap micro needs 2 devices")
+    scale = 1.0 / float(compute_dim) ** 0.5
+
+    @jax.jit
+    def burn(a):
+        for _ in range(compute_iters):
+            a = jnp.tanh(a @ a * scale)
+        return a
+
+    out: List[OverlapPair] = []
+    for nb in transfer_bytes:
+        n = max(1, nb // 4)
+        src = jax.device_put(
+            jax.random.normal(jax.random.PRNGKey(n % 89), (n,),
+                              jnp.float32), devs[0])
+        x = jax.device_put(
+            jax.random.normal(jax.random.PRNGKey(7), (compute_dim,
+                                                      compute_dim),
+                              jnp.float32), devs[1])
+        jax.block_until_ready((src, x))
+        tt = _time_isolated(lambda s=src: jax.device_put(s, devs[1]),
+                            repeats=repeats)
+        tc = _time_isolated(lambda a=x: burn(a), repeats=repeats)
+
+        def both(s=src, a=x):
+            moved = jax.device_put(s, devs[1])   # async dispatch ...
+            y = burn(a)                          # ... compute alongside
+            return (moved, y)
+
+        tb = _time_isolated(both, repeats=repeats)
+        out.append(OverlapPair(n * 4, tt, tc, tb))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Fitting
 # ---------------------------------------------------------------------------
@@ -260,6 +341,20 @@ def fit_link_model(measurements: Sequence[Measurement],
     return LinkModel(bandwidth=float(bandwidth),
                      segment_overhead=float(seg_overhead),
                      overlap_fraction=prior.overlap_fraction)
+
+
+def fit_overlap_fraction(pairs: Sequence[OverlapPair],
+                         prior: float = LinkModel().overlap_fraction
+                         ) -> float:
+    """Median hidden-fraction over the paired spans; the prior when no
+    valid pair exists (e.g. a 1-device session never ran the micro).
+    The clamp lives in ``OverlapPair.overlap_frac`` — a backend whose
+    copies fully serialize fits 0.0, and the accounting plane then
+    prices transform transfers at FULL cost even for the overlapped
+    method, which is exactly what that backend clocks."""
+    vals = [p.overlap_frac for p in pairs
+            if p.transfer_s > 0.0 and p.both_s > 0.0]
+    return _median(vals) if vals else prior
 
 
 def fit_hardware(prior: Hardware = H20,
@@ -330,8 +425,18 @@ class MeasuredCosts:
 
     def observe_record(self, rec: Dict) -> None:
         """Ingest one control-plane log record (the shared
-        ``transform_log`` schema; spill logs carry ``kind='spill'``)."""
-        self.observe(rec.get("kind", "transform"),
+        ``transform_log`` schema; spill logs carry ``kind='spill'``).
+        Same-degree LAYOUT changes (TP4 -> SP2xTP2: identical
+        ``tp_from``/``tp_to`` but differing layout tags) file under
+        their own ``'layout'`` kind — blurring them into the degree
+        pair's EWMA would teach the model that a no-op migration costs
+        a full re-partition."""
+        kind = rec.get("kind", "transform")
+        lf, lt = rec.get("layout_from"), rec.get("layout_to")
+        if (kind == "transform" and lf is not None and lf != lt
+                and rec.get("tp_from") == rec.get("tp_to")):
+            kind = "layout"
+        self.observe(kind,
                      rec.get("tp_from", 0), rec.get("tp_to", 0),
                      float(rec.get("wall_s", -1.0)),
                      float(rec.get("bytes", 0.0)))
@@ -387,13 +492,25 @@ class CalibratedCostModel(CostModel):
         self.measured.observe_record(rec)
 
     def transform_time(self, method: str, n_layers: int | None = None,
-                       tp_from: int = 1, tp_to: int | None = None
-                       ) -> float:
-        est = self.measured.estimate("transform", tp_from,
-                                     4 if tp_to is None else tp_to)
+                       tp_from: int = 1, tp_to: int | None = None,
+                       layout_from=None, layout_to=None) -> float:
+        from repro.launch.mesh import Layout
+        tt = 4 if tp_to is None else tp_to
+        lay_from = Layout.of(layout_from if layout_from is not None
+                             else max(tp_from, 1))
+        lay_to = Layout.of(layout_to if layout_to is not None
+                           else max(tt, 1))
+        # same-degree re-factorizations have their own measured key
+        # (see MeasuredCosts.observe_record) — a warm (4, 4) transform
+        # EWMA of zero-cost migrations must not price a layout change
+        kind = ("layout" if tp_from == tt and lay_from != lay_to
+                else "transform")
+        est = self.measured.estimate(kind, tp_from, tt)
         if est is not None:
             return est
-        return super().transform_time(method, n_layers, tp_from, tp_to)
+        return super().transform_time(method, n_layers, tp_from, tp_to,
+                                      layout_from=layout_from,
+                                      layout_to=layout_to)
 
     def spill_time(self, tokens: int, page_tokens: int = 64,
                    pages: int | None = None) -> float:
@@ -418,6 +535,9 @@ class CalibrationReport:
     measurements: List[Measurement] = field(default_factory=list)
     drift_fracs: List[float] = field(default_factory=list)
     model: Optional[CalibratedCostModel] = None
+    overlap_pairs: List[OverlapPair] = field(default_factory=list)
+    # the overlap prior the fitted value replaced (drift denominator)
+    overlap_prior: float = LinkModel().overlap_fraction
 
     @property
     def kv_migration_drift_frac(self) -> float:
@@ -433,6 +553,21 @@ class CalibrationReport:
     def drift_frac(self) -> float:
         return _median(self.drift_fracs) if self.drift_fracs \
             else float("nan")
+
+    @property
+    def overlap_frac(self) -> float:
+        """The FITTED overlap fraction (what ``link`` now carries)."""
+        return self.link.overlap_fraction
+
+    @property
+    def overlap_drift_frac(self) -> float:
+        """|fitted - prior| / prior for the overlap fraction — how far
+        this backend's measured transfer-hiding sits from the paper's
+        §4.1 constant (the ``bench_calibrate`` drift column)."""
+        if not self.overlap_pairs:
+            return float("nan")
+        return abs(self.link.overlap_fraction - self.overlap_prior) \
+            / max(self.overlap_prior, 1e-12)
 
 
 def calibrate(cfg: ModelConfig, hw: Hardware = H20, devices=None,
@@ -453,8 +588,17 @@ def calibrate(cfg: ModelConfig, hw: Hardware = H20, devices=None,
                              interpret=interpret)
     link = fit_link_model(ms, kinds=("kv_migrate_up",
                                      "kv_migrate_down"))
+    # the isolated spans cannot see hiding; the paired overlap micro
+    # replaces the §4.1 prior with what THIS backend's copy stream hides
+    pairs = measure_overlap_pairs(devices=devices, repeats=repeats)
+    prior_overlap = link.overlap_fraction
+    link = dataclasses.replace(
+        link, overlap_fraction=fit_overlap_fraction(pairs,
+                                                    prior_overlap))
     drifts = [abs(predicted_time(m, link) - m.wall_s)
               / max(m.wall_s, 1e-12) for m in ms]
     model = CalibratedCostModel(cfg, hw, link=link, measured=measured)
     return CalibrationReport(link=link, measurements=ms,
-                             drift_fracs=drifts, model=model)
+                             drift_fracs=drifts, model=model,
+                             overlap_pairs=pairs,
+                             overlap_prior=prior_overlap)

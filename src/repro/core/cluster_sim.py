@@ -28,6 +28,7 @@ from repro.core.partition import PoolPartitionManager
 from repro.core.scheduler import (Action, BaseScheduler, GygesScheduler,
                                   PrefillPolicy, ScaleDown, ScaleUp,
                                   SchedulerConfig, Spill)
+from repro.launch.mesh import Layout
 from repro.serving.metrics import summarize
 from repro.serving.request import Request
 
@@ -71,6 +72,10 @@ class SimInstance:
         ``max_batch`` for the KV-capacity denominator."""
         self.iid = next(SimInstance._ids) if iid is None else iid
         self.tp = tp
+        # parallelism layout of the tp devices (elastic sequence
+        # parallelism): pure TP unless a decide_layout action
+        # re-factorized it; degree always equals self.tp
+        self.par_layout = Layout.of(tp)
         # devices this instance spans; legacy sims run width == tp (an
         # instance IS its parallel degree), the live-parity geometries
         # decouple them (a width-2 engine serving at TP1 can grow in
@@ -163,7 +168,14 @@ class SimInstance:
 
     # ---- dynamics ----------------------------------------------------------
     def effective_tps(self, now: float) -> float:
-        base = self.cm.instance_tps(self.tp) * ENGINE_EFFICIENCY[self.method]
+        """Decode rate at the instance's CURRENT parallelism layout:
+        SP shards split the context, so their speedup only materializes
+        while long-context work is in service (the same workload
+        predicate ``decide_layout`` scores layouts by)."""
+        lay = self.par_layout
+        base = self.cm.instance_tps(
+            lay.tp, lay.sp, long_context=self.has_long_request()) \
+            * ENGINE_EFFICIENCY[self.method]
         if now < self.transform_until:
             # Gyges overlaps; others stall (paper Fig. 11: <1% vs stalls)
             return base * TRANSFORM_OVERLAP.get(self.method,
@@ -203,19 +215,15 @@ class SimInstance:
             queue = (pol.service_order(self.prefill_q,
                                        lambda r: r.in_len - r.prefilled)
                      if pol is not None else list(self.prefill_q))
-            in_session = now < max(self.transform_until,
-                                   self.session_until)
             consumed = 0.0
+            # live-engine parity (Engine._admittable_now /
+            # _advanceable_now): whole-prompt prefills no longer wait
+            # out transform sessions — mid-session they run as one
+            # first-chunk call through the per-layer path, so no
+            # request is skipped here
             for r in queue:
                 if budget <= 0:
                     break
-                if pol is not None and in_session \
-                        and not pol.chunkable(r.in_len):
-                    # live-engine parity (Engine._admittable_now /
-                    # _advanceable_now): a whole-prompt prefill cannot
-                    # interleave with transform-session schedule steps,
-                    # so single-chunk prompts wait for the drain
-                    continue
                 adv = min(r.in_len - r.prefilled, budget)
                 if adv > 0 and r.t_prefill_start is None:
                     r.t_prefill_start = now
@@ -368,7 +376,8 @@ class Cluster:
             * TRANSFORM_TIME_FACTOR[self.method]
 
     def _log_transform(self, dur: float, tp_from: int, tp_to: int,
-                       cross: bool) -> None:
+                       cross: bool, layout_from: Optional[Layout] = None,
+                       layout_to: Optional[Layout] = None) -> None:
         """Append a transform record AND feed it to the attached cost
         model's measured-EWMA when it has one (CalibratedCostModel) —
         the sim's feedback loop mirrors ``ClusterEngine.step``'s, except
@@ -376,7 +385,9 @@ class Cluster:
         the model it was seeded from (decisions stay parity-safe)."""
         rec = {"wall_s": dur, "measured_s": dur, "modeled_s": dur,
                "tp_from": tp_from, "tp_to": tp_to, "cross": cross,
-               "kind": "transform"}
+               "kind": "transform",
+               "layout_from": str(layout_from or Layout.of(tp_from)),
+               "layout_to": str(layout_to or Layout.of(tp_to))}
         self.transform_log.append(rec)
         cm = getattr(self.scheduler, "cost_model", None)
         if cm is not None and hasattr(cm, "observe_transform"):
@@ -509,6 +520,7 @@ class Cluster:
         tp_prev = inst.tp
         dur = self._transform_dur(tp_prev, act.tp_to)
         inst.tp = act.tp_to
+        inst.par_layout = Layout.of(act.layout or act.tp_to)
         inst.transform_until = now + dur
         inst.session_until = now + max(dur, self._session_window(inst.tp))
         inst.n_transforms += 1
@@ -541,11 +553,13 @@ class Cluster:
             self.partition.adopt(target.iid, loan)
             d._width -= n
             d.tp = min(d.tp, d._width)
+            d.par_layout = Layout.of(d.tp)
             d.transform_until = now + dur
             d.session_until = now + max(dur, self._session_window(d.tp))
             d.dirty()
         target._width += sum(act.donor_devices)
         target.tp = act.tp_to
+        target.par_layout = Layout.of(act.layout or act.tp_to)
         target.transform_until = now + dur
         target.session_until = now + max(dur,
                                          self._session_window(act.tp_to))
@@ -625,6 +639,34 @@ class Cluster:
                 return True
         return False
 
+    def _execute_layout(self, act: ScaleUp, now: float
+                        ) -> Optional[SimInstance]:
+        """Same-degree layout change (elastic sequence parallelism):
+        re-factorize ``act.iid``'s devices to ``act.layout`` at the
+        modeled re-partition cost.  Capacity is untouched — only the
+        decode-rate model (``SimInstance.effective_tps``) changes.  The
+        live plane runs the same action as a §4.3 layer-coherent
+        session (``Engine.transform(tp_to, layout=...)``)."""
+        inst = next((i for i in self.instances if i.iid == act.iid), None)
+        if (inst is None or act.layout is None or inst.tp != act.tp_to
+                or Layout.of(act.layout) == inst.par_layout):
+            return None
+        lay_from, lay_to = inst.par_layout, Layout.of(act.layout)
+        dur = self.cm.transform_time(
+            self.method, tp_from=inst.tp, tp_to=act.tp_to,
+            layout_from=lay_from, layout_to=lay_to) \
+            * TRANSFORM_TIME_FACTOR[self.method]
+        inst.par_layout = lay_to
+        inst.transform_until = now + dur
+        inst.session_until = now + max(dur, self._session_window(inst.tp))
+        inst.n_transforms += 1
+        inst.dirty()
+        self.n_transforms += 1
+        self._log_transform(dur, inst.tp, inst.tp, cross=False,
+                            layout_from=lay_from, layout_to=lay_to)
+        self.actions.append(act)
+        return inst
+
     def execute_scale_down(self, inst: SimInstance, now: float) -> None:
         host = self._host_of(inst)
         tp1_cap = inst.max_seq_at(1)
@@ -648,6 +690,7 @@ class Cluster:
                 d.dirty()
             inst._width = len(self.partition.held_devices(inst.iid))
             inst.tp = 1
+            inst.par_layout = Layout.of(1)
             inst.transform_until = now + dur
             inst.session_until = now + max(dur, self._session_window(1))
             self.n_transforms += 1
@@ -779,6 +822,15 @@ class Cluster:
             for act in self.scheduler.schedule_parallelism(
                     eligible, any_long_wait):
                 self.execute_scale_down(by_iid[act.iid], now)
+            # elastic-SP layout scan (opt-in via SchedulerConfig.layouts;
+            # decision-for-decision with ClusterEngine.step): any wide
+            # instance outside a transform window may re-factorize its
+            # degree to the layout that wins its current workload mix
+            lay_eligible = [
+                i for i in self.instances if i.tp > 1
+                and now > max(i.transform_until, i.session_until)]
+            for act in self.scheduler.decide_layout(lay_eligible):
+                self._execute_layout(act, now)
         # close spill regions whose guest request finished: the host's
         # reserved slots return to its free pool (live
         # ``_finalize_spills`` / ``release_hosted``)

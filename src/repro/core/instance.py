@@ -1,12 +1,15 @@
 """A transformable serving instance group (paper §3.4/§4, JAX-native).
 
 The paper merges four TP1 processes into one TP4 process.  The JAX-native
-formulation: a host's W devices always form a 2-D mesh ``(rep, tp)`` with
-``rep * tp == W``.  Request batches shard over ``rep``; heads / d_ff / KV
-heads / pages shard over ``tp`` — with *identical* PartitionSpecs for every
-TP degree.  A parallelism transformation is then exactly:
+formulation: a host's W devices always form a 3-D mesh ``(rep, sp, tp)``
+with ``rep * sp * tp == W`` (``launch.mesh.Layout``).  Request batches
+shard over ``rep``; heads / d_ff / KV heads shard over ``tp``; KV *pages*
+— the sequence dimension of the paged pool — shard over ``(rep, sp)``,
+so an sp shard owns a slice of every slot's context (elastic sequence
+parallelism) — with *identical* PartitionSpecs for every layout.  A
+parallelism transformation is then exactly:
 
-    re-factorize the mesh (rep, tp) -> (rep', tp')  and
+    re-factorize the mesh (rep, sp, tp) -> (rep', sp', tp')  and
     device_put every live array to the same spec on the new mesh.
 
 XLA lowers that device_put to the all-to-all the paper hand-implements;
@@ -32,10 +35,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.padding import PaddingPlan, make_plan
+from repro.launch.mesh import Layout
 from repro.models import model as M
 from repro.paged.pool import PagedState
 
-REP, TP = "rep", "tp"
+REP, SP, TP = "rep", "sp", "tp"
 
 
 def mesh_context(mesh: Mesh):
@@ -94,13 +98,14 @@ def param_pspecs(params, transform_attn: bool = True):
 def layer_cache_pspecs(c, bdim: int = 0):
     """Cache specs for ONE layer's cache tree (``bdim`` = batch axis of
     recurrent-state leaves; stacked group caches pass 1).  KV pools:
-    pages over ``rep`` (each replica owns its requests' pages), kv heads
-    over ``tp`` — one spec valid for all TP degrees."""
+    pages over ``(rep, sp)`` (each replica owns its requests' pages; an
+    sp shard owns a slice of each page range — sequence parallelism),
+    kv heads over ``tp`` — one spec valid for all layouts."""
     if isinstance(c, PagedState):
+        from repro.models.shardhints import instance_kv_hint
         nd = c.pool.ndim  # (G?, NP, kvs, 2, P, dh) canonical
-        lead = [None] * (nd - 5)
         return PagedState(
-            pool=P(*lead, REP, TP, None, None, None),
+            pool=instance_kv_hint(lead=nd - 5),
             page_table=P(*([None] * (c.page_table.ndim - 2)), REP, None),
             seq_lens=P(*([None] * (c.seq_lens.ndim - 1)), REP),
             positions=P(*([None] * (c.positions.ndim - 2)), REP, None),
@@ -148,6 +153,7 @@ class InstanceGroup:
         self.page_tokens = page_tokens
         self.transform_attn = transform_attn
         self.tp = 1
+        self.par_layout = Layout.of(1)
         self.mesh = self._mesh(1)
         self.transform_count = 0
         self._session = None
@@ -166,47 +172,53 @@ class InstanceGroup:
         self._decode_jit: Dict[int, Any] = {}
 
     # -- mesh / sharding helpers ------------------------------------------
-    def _mesh(self, tp: int) -> Mesh:
+    def _mesh(self, layout) -> Mesh:
         from repro.launch.mesh import make_instance_mesh
-        return make_instance_mesh(self.devices, tp)
+        return make_instance_mesh(self.devices, layout)
 
     def _shardings(self, pspec_tree, mesh: Optional[Mesh] = None):
         from repro.core.transform_engine import shard_tree
         return shard_tree(pspec_tree, mesh or self.mesh)
 
     # -- the paper's §4: the transformation itself -------------------------
-    def transform(self, new_tp: int) -> None:
+    def transform(self, new_tp) -> None:
         """Cross-instance parallelism transformation: re-factorize the mesh
-        and reshard every live array (weights + KV pools) to it."""
+        and reshard every live array (weights + KV pools) to it.
+        ``new_tp`` is a TP degree or a full ``Layout``."""
         assert self._session is None, (
             "scheduled transformation in progress: the live state is the "
             "session's per-layer view, not self.params/self.caches")
-        if new_tp == self.tp:
+        lay = Layout.of(new_tp)
+        if lay == self.par_layout:
             return
-        new_mesh = self._mesh(new_tp)
+        new_mesh = self._mesh(lay)
         self.params = jax.device_put(
             self.params, self._shardings(self._pspecs, new_mesh))
         self.caches = jax.device_put(
             self.caches, self._shardings(self._cspecs, new_mesh))
         self.mesh = new_mesh
-        self.tp = new_tp
+        self.tp = lay.degree
+        self.par_layout = lay
         self.transform_count += 1
 
     # -- §4.3: the scheduled transformation (step-by-step data plane) ------
-    def begin_transform(self, new_tp: int, layers_per_step: int = 1,
+    def begin_transform(self, new_tp, layers_per_step: int = 1,
                         interpret=None):
         """Start a step-wise transformation: unstack to per-layer state,
         build the §4.3 schedule (MLP-first on scale-up, layer-staggered on
         scale-down, reversed traversal) and return the live
         ``TransformSession``.  While the session is open, ``decode`` runs
-        through the per-layer path so serving continues between steps."""
+        through the per-layer path so serving continues between steps.
+        ``new_tp`` is a TP degree or a full ``Layout``."""
         from repro.core import transform_engine as TE
 
+        lay = Layout.of(new_tp)
         return TE.open_owner_session(
-            self, new_tp, self._mesh(new_tp),
+            self, lay.degree, self._mesh(lay),
             param_spec_fn=lambda t: param_pspecs(t, self.transform_attn),
             cache_spec_fn=layer_cache_pspecs,
-            layers_per_step=layers_per_step, interpret=interpret)
+            layers_per_step=layers_per_step, interpret=interpret,
+            layout_to=lay)
 
     def finish_transform(self) -> None:
         """Restack per-layer state once every schedule step has run."""
@@ -215,12 +227,12 @@ class InstanceGroup:
         TE.close_owner_session(self)
         self.transform_count += 1
 
-    def transform_scheduled(self, new_tp: int, layers_per_step: int = 1,
+    def transform_scheduled(self, new_tp, layers_per_step: int = 1,
                             between_steps=None, interpret=None):
         """Run a full scheduled transformation; ``between_steps(report)``
         fires after each step (e.g. to interleave decode iterations).
         Returns the per-step ``StepReport`` list."""
-        if new_tp == self.tp:
+        if Layout.of(new_tp) == self.par_layout:
             return []
         session = self.begin_transform(new_tp, layers_per_step, interpret)
         reports = session.run(between_steps)

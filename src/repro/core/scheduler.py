@@ -24,6 +24,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Protocol, Sequence, Tuple, Union
 
+from repro.launch.mesh import Layout
+
 MAX = float("inf")
 
 
@@ -223,12 +225,20 @@ class ScaleUp:
     donor loans fewer devices than it spans, the control plane shrinks
     it in place (``Engine.transform(devices=)``) and it KEEPS SERVING on
     its retained devices — no park, no drain.
+
+    ``layout`` names the FULL target parallelism factorization (a
+    ``launch.mesh.Layout`` with ``degree == tp_to``); None means pure
+    TP.  A ``ScaleUp`` with ``tp_to == inst.tp`` and a different
+    ``layout`` is a same-degree LAYOUT CHANGE (``decide_layout`` — e.g.
+    TP4 -> SP2xTP2 for long-context decode), executed live via
+    ``Engine.transform(tp_to, layout=...)``.
     """
     iid: int
     tp_to: int
     reason: str = ""
     donor_iids: Tuple[int, ...] = ()
     donor_devices: Tuple[int, ...] = ()
+    layout: Optional[Layout] = None
 
 
 @dataclass(frozen=True)
@@ -305,6 +315,17 @@ class SchedulerConfig:
     spill_slack: float = 1.0         # max overflow a spill may carry, as
                                      # a fraction of the guest's ceiling
                                      # (beyond that a merge is cheaper)
+    # -- elastic sequence parallelism (OPT-IN like the ladder rungs:
+    #    default preserves every pre-existing trace byte-for-byte) ------
+    layouts: bool = False            # let decide_layout re-factorize a
+                                     # wide instance between pure TP and
+                                     # SPxTP by workload mix (long-
+                                     # context decode -> SP shards win)
+    max_sp: int = 2                  # deepest sp factor proposed: sp
+                                     # shards replicate weights, so deep
+                                     # sp is weight-memory-bound — one
+                                     # sequence split keeps the memory
+                                     # model honest
 
 
 class BaseScheduler:
@@ -444,6 +465,59 @@ class BaseScheduler:
                           reason="low load, no long requests")
                 for i in instances
                 if i.tp > 1 and self.want_scale_down(i, any_long_waiting)]
+
+    # --- elastic sequence parallelism (layout rungs) ---------------------
+
+    def _layout_tps(self, layout: Layout, long_context: bool) -> float:
+        """Modeled decode tokens/s of one instance at ``layout``; the
+        attached cost model's hardware constants when present, the
+        Table-1 defaults otherwise."""
+        from repro.core.costmodel import layout_decode_tps
+        if self.cost_model is not None:
+            return self.cost_model.layout_tps(layout, long_context)
+        return layout_decode_tps(layout, long_context)
+
+    def best_layout(self, degree: int, long_context: bool) -> Layout:
+        """The throughput-winning ``(sp, tp)`` factorization of
+        ``degree`` devices for the given workload mix.  Candidates are
+        every divisor split with ``sp <= cfg.max_sp``; ties break
+        toward pure TP (smaller sp) so the legacy layout is the
+        deterministic default."""
+        cands = [Layout(sp, degree // sp)
+                 for sp in range(1, min(self.cfg.max_sp, degree) + 1)
+                 if degree % sp == 0]
+        return max(cands,
+                   key=lambda l: (self._layout_tps(l, long_context),
+                                  -l.sp))
+
+    def decide_layout(self, instances: Sequence[InstanceView]
+                      ) -> List[ScaleUp]:
+        """Per-instance layout scan (opt-in via ``cfg.layouts``): for
+        every wide instance, pick the ``best_layout`` of its CURRENT
+        degree for its CURRENT workload mix (long-context work in
+        service -> SP shards split the context and win; shorts only ->
+        pure TP wins) and emit a same-degree ``ScaleUp`` carrying the
+        target ``layout`` when it differs from the instance's.  Both
+        control planes run this scan decision-for-decision — the
+        simulator charges the modeled re-partition duration, the live
+        plane opens a §4.3 layer-coherent session."""
+        if not self.cfg.layouts:
+            return []
+        acts: List[ScaleUp] = []
+        for inst in instances:
+            d = inst.tp
+            if d < 2 or getattr(inst, "reserved", False):
+                continue
+            cur = Layout.of(getattr(inst, "par_layout", None) or d)
+            long_ctx = inst.has_long_request()
+            best = self.best_layout(d, long_ctx)
+            if best != cur:
+                acts.append(ScaleUp(
+                    iid=inst.iid, tp_to=d, layout=best,
+                    reason=(f"layout {cur} -> {best} "
+                            f"({'long' if long_ctx else 'short'}-context "
+                            "mix)")))
+        return acts
 
     def decide_scale_up(self, instances: Sequence[InstanceView],
                         input_len: int, output_len_hint: int

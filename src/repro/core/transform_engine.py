@@ -30,6 +30,7 @@ from repro.core.kv_transform import (LinkModel, MigrationStats, TPU_ICI,
                                      migrate_scale_down_sharded,
                                      migrate_scale_up_sharded)
 from repro.core.padding import PaddingPlan
+from repro.launch.mesh import Layout
 
 Component = Literal["mlp", "kv"]
 
@@ -44,13 +45,23 @@ class TransformOp:
 @dataclass
 class Schedule:
     direction: str                 # "up" | "down"
-    tp_from: int
-    tp_to: int
+    tp_from: int                   # total degree (sp * tp) before
+    tp_to: int                     # total degree (sp * tp) after
     steps: List[List[TransformOp]] = field(default_factory=list)
+    # full parallelism layouts (None = pure TP at the stated degree);
+    # a SAME-degree schedule with differing layouts is a layout change
+    # (e.g. TP4 -> SP2xTP2): every byte of weights and KV re-partitions,
+    # but capacity is untouched
+    layout_from: Optional[Layout] = None
+    layout_to: Optional[Layout] = None
 
     @property
     def n_steps(self) -> int:
         return len(self.steps)
+
+    def resolved_layouts(self) -> Tuple[Layout, Layout]:
+        return (self.layout_from or Layout.of(self.tp_from),
+                self.layout_to or Layout.of(self.tp_to))
 
 
 def scale_up_schedule(n_layers: int, layers_per_step: int = 0,
@@ -159,29 +170,45 @@ def begin_session(params, caches, cfg: ModelConfig, plan: PaddingPlan,
                   cache_spec_fn: Callable[[Any], Any], page_tokens: int,
                   layers_per_step: int = 1,
                   storage_layout: str = "header_centric",
-                  interpret: Optional[bool] = None) -> "TransformSession":
+                  interpret: Optional[bool] = None,
+                  layout_from: Optional[Layout] = None,
+                  layout_to: Optional[Layout] = None) -> "TransformSession":
     """Unstack stacked params/caches, build the §4.3 schedule for the
     requested direction and return the live ``TransformSession``.  One
     entry point for both ``InstanceGroup`` and the serving ``Engine`` so
-    the two transform paths cannot drift."""
+    the two transform paths cannot drift.
+
+    The unit of transformation is the parallelism LAYOUT: a schedule may
+    change the total degree (classic TP scale-up/down) or re-factorize
+    the same degree (TP4 <-> SP2xTP2) — a same-degree layout change uses
+    the layer-coherent schedule so mid-session every layer lives on
+    exactly one mesh factorization and decoding never stalls."""
     from repro.models import model as M
 
-    if tp_to == tp_from:
-        raise ValueError(f"already at tp={tp_from}; scheduled "
-                         "transformation needs a different target degree")
+    lay_from = layout_from or Layout.of(tp_from)
+    lay_to = layout_to or Layout.of(tp_to)
+    assert lay_from.degree == tp_from and lay_to.degree == tp_to, (
+        lay_from, tp_from, lay_to, tp_to)
+    if lay_to == lay_from:
+        raise ValueError(f"already at layout {lay_from}; scheduled "
+                         "transformation needs a different target layout")
     layers, static = M.unstack_decode_state(params, cfg, caches)
     n = len(layers)
     cross = (frozenset(mesh_from.devices.flat)
              != frozenset(mesh_to.devices.flat))
-    if tp_to > tp_from:
+    if tp_to > tp_from or tp_to == tp_from:
         # cross-device sessions (merge) stage the widened mesh PER LAYER
         # so decode keeps running through the session; in-place sessions
         # keep the paper's MLP-first ordering (freed MLP pages absorb
-        # the incoming KV on the same devices)
+        # the incoming KV on the same devices).  Same-degree layout
+        # changes are always layer-coherent: weights and KV of one layer
+        # re-factorize together so the per-layer decode path sees each
+        # layer on a single mesh.
         sched = scale_up_schedule(n, layers_per_step, tp_from, tp_to,
-                                  coherent=cross)
+                                  coherent=cross or tp_to == tp_from)
     else:
         sched = scale_down_schedule(n, layers_per_step, tp_from, tp_to)
+    sched.layout_from, sched.layout_to = lay_from, lay_to
     return TransformSession(
         layers, static, sched, cfg, plan, mesh_from=mesh_from,
         mesh_to=mesh_to, param_spec_fn=param_spec_fn,
@@ -201,7 +228,8 @@ def finish_session(session: "TransformSession", cfg: ModelConfig):
 def open_owner_session(owner, tp_to: int, mesh_to, param_spec_fn,
                        cache_spec_fn, layers_per_step: int = 1,
                        storage_layout: str = "header_centric",
-                       interpret: Optional[bool] = None
+                       interpret: Optional[bool] = None,
+                       layout_to: Optional[Layout] = None
                        ) -> "TransformSession":
     """Shared session lifecycle for anything owning stacked
     ``params/caches/cfg/plan/tp/mesh/_session`` (the instance group and
@@ -218,19 +246,23 @@ def open_owner_session(owner, tp_to: int, mesh_to, param_spec_fn,
         mesh_to=mesh_to, param_spec_fn=param_spec_fn,
         cache_spec_fn=cache_spec_fn, page_tokens=owner.page_tokens,
         layers_per_step=layers_per_step, storage_layout=storage_layout,
-        interpret=interpret)
+        interpret=interpret,
+        layout_from=getattr(owner, "par_layout", None),
+        layout_to=layout_to)
     owner._session = session
     owner.params = owner.caches = None
     return session
 
 
 def close_owner_session(owner) -> "TransformSession":
-    """Restack the drained session into the owner and flip its mesh/tp."""
+    """Restack the drained session into the owner and flip its
+    mesh/tp/layout."""
     session = owner._session
     assert session is not None
     owner.params, owner.caches = finish_session(session, owner.cfg)
     owner.mesh = session.mesh_to
     owner.tp = session.schedule.tp_to
+    owner.par_layout = session.schedule.resolved_layouts()[1]
     owner._session = None
     return session
 
@@ -369,6 +401,12 @@ class TransformSession:
         sched = self.schedule
         W = self.mesh_to.size
         if pool.ndim != 5 or not L.heads_contiguous(self.storage_layout):
+            return False
+        lay_from, lay_to = sched.resolved_layouts()
+        if lay_from.sp != 1 or lay_to.sp != 1:
+            # sequence-parallel layouts re-partition the page axis, not
+            # the head axis the explicit kernels shard over — GSPMD
+            # device_put performs the re-partition instead
             return False
         NPt, kvs = pool.shape[0], pool.shape[1]
         full_up = (sched.direction == "up" and sched.tp_from == 1

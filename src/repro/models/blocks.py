@@ -109,7 +109,8 @@ def attention_chunk(p: Params, x: jax.Array, cfg: ModelConfig,
                     layout: str = "header_centric",
                     first_chunk: bool = False,
                     identity_pages: bool = False,
-                    use_kernel: bool = False
+                    use_kernel: bool = False,
+                    sp: int = 1
                     ) -> Tuple[jax.Array, pp.PagedState]:
     """Chunk-continuation prefill: queries are the chunk's tokens
     (x: (B,S,d), positions: (B,S) global), keys are the CACHED prefix
@@ -133,7 +134,7 @@ def attention_chunk(p: Params, x: jax.Array, cfg: ModelConfig,
     the jnp path automatically."""
     B, S, d = x.shape
     q, k, v = _project_qkv(p, x, cfg, plan, positions)
-    if use_kernel and CP.chunk_prefill_eligible(
+    if use_kernel and sp == 1 and CP.chunk_prefill_eligible(
             cache.pool, S, cache.capacity):
         pool_c = pp.canonical(cache.pool, layout)
         attn, pool_c = CP.chunk_prefill_attention(
@@ -154,7 +155,7 @@ def attention_chunk(p: Params, x: jax.Array, cfg: ModelConfig,
                 [valid, jnp.ones((B, S), dtype=bool)], axis=1)
             attn = Lyr.chunked_attention(q, kk, vv, positions, kv_pos,
                                          kv_valid=valid, causal=True,
-                                         window=window)
+                                         window=window, sp=sp)
         cache = pp.write_chunk(cache, k, v, positions, layout,
                                identity_pages=identity_pages)
     out = attn.reshape(B, S, -1) @ p["wo"]
@@ -165,9 +166,13 @@ def attention_decode(p: Params, x: jax.Array, cfg: ModelConfig,
                      plan: PaddingPlan, positions: jax.Array,
                      cache: pp.PagedState, window: int = 0,
                      layout: str = "header_centric",
-                     identity_pages: bool = False
+                     identity_pages: bool = False,
+                     sp: int = 1
                      ) -> Tuple[jax.Array, pp.PagedState]:
-    """One-token decode. x: (B,1,d); positions: (B,1) global positions."""
+    """One-token decode. x: (B,1,d); positions: (B,1) global positions.
+    ``sp > 1`` runs the sequence-parallel page walk: each sp shard walks
+    its slice of the slot's pages and the partial softmax states combine
+    across the sp axis (see ``Lyr.paged_decode_attention``)."""
     B, _, d = x.shape
     dh = cfg.resolved_head_dim
     q, k, v = _project_qkv(p, x, cfg, plan, positions)
@@ -180,13 +185,14 @@ def attention_decode(p: Params, x: jax.Array, cfg: ModelConfig,
         NP, kvs, _, P, dh2 = pool_c.shape
         pages = pool_c.reshape(B, NP // B, kvs, 2, P, dh2)
         attn = Lyr.paged_decode_attention(q[:, 0], pages, cache.positions,
-                                          positions[:, 0], window=window)
+                                          positions[:, 0], window=window,
+                                          sp=sp)
         attn = attn[:, None]
     else:
         kk, vv, kv_pos, valid = pp.gather_kv(cache, layout)
         attn = Lyr.chunked_attention(q, kk, vv, positions, kv_pos,
                                      kv_valid=valid, causal=True,
-                                     window=window)
+                                     window=window, sp=sp)
     out = attn.reshape(B, 1, -1) @ p["wo"]
     return out, cache
 
@@ -489,7 +495,8 @@ def apply_block_chunk(kind: str, p: Params, cfg: ModelConfig,
                       layout: str = "header_centric",
                       first_chunk: bool = False,
                       identity_pages: bool = False,
-                      use_kernel: bool = False):
+                      use_kernel: bool = False,
+                      sp: int = 1):
     """Prefill-chunk forward for one block: like ``apply_block_seq``
     but continuing from per-slot cache state.  x: (B,S,d), positions:
     (B,S) global.  Attention kinds attend over cached prefix + chunk
@@ -504,7 +511,7 @@ def apply_block_chunk(kind: str, p: Params, cfg: ModelConfig,
             p["attn"], h, cfg, plan, positions, cache,
             window=_window_of(kind, cfg), layout=layout,
             first_chunk=first_chunk, identity_pages=identity_pages,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, sp=sp)
         x = x + attn_out
         h = Lyr.rmsnorm(x, p["ln2"], cfg.norm_eps)
         if kind == MOE:
@@ -523,7 +530,8 @@ def apply_block_decode(kind: str, p: Params, cfg: ModelConfig,
                        plan: PaddingPlan, x: jax.Array,
                        positions: jax.Array, cache,
                        layout: str = "header_centric",
-                       identity_pages: bool = False):
+                       identity_pages: bool = False,
+                       sp: int = 1):
     """Single-token decode for one block. x: (B,1,d). cache is the block's
     state: PagedState for attention kinds, dict for recurrent kinds."""
     if kind in (ATTN, SLIDING, MOE):
@@ -531,7 +539,7 @@ def apply_block_decode(kind: str, p: Params, cfg: ModelConfig,
         attn_out, cache = attention_decode(
             p["attn"], h, cfg, plan, positions, cache,
             window=_window_of(kind, cfg), layout=layout,
-            identity_pages=identity_pages)
+            identity_pages=identity_pages, sp=sp)
         x = x + attn_out
         h = Lyr.rmsnorm(x, p["ln2"], cfg.norm_eps)
         if kind == MOE:

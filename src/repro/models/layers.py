@@ -93,26 +93,13 @@ def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
                       preferred_element_type=jnp.float32)
 
 
-def chunked_attention(
-    q: jax.Array,               # (B, Sq, Hq, dh)
-    k: jax.Array,               # (B, Sk, Hkv, dh)
-    v: jax.Array,               # (B, Sk, Hkv, dh)
-    q_positions: jax.Array,     # (B, Sq) global positions of queries
-    kv_positions: jax.Array,    # (B, Sk) global positions of keys
-    kv_valid: Optional[jax.Array] = None,  # (B, Sk) bool validity
-    causal: bool = True,
-    window: int = 0,            # 0 -> unlimited; >0 -> sliding window
-    kv_chunk: int = 1024,
-) -> jax.Array:
-    """Online-softmax attention over KV chunks; never forms (Sq, Sk)."""
-    B, Sq, Hq, dh = q.shape
-    _, Sk, Hkv, _ = k.shape
-    assert Hq % Hkv == 0, (Hq, Hkv)
-    rep = Hq // Hkv
-    scale = 1.0 / math.sqrt(dh)
-
-    qg = (q.reshape(B, Sq, Hkv, rep, dh) * scale).astype(jnp.float32)
-
+def _chunked_partials(qg, k, v, q_positions, kv_positions, valid,
+                      causal, window, kv_chunk):
+    """Online-softmax partial state (m, l, acc) of one KV walk — the
+    shared scan of ``chunked_attention`` (sp=1 walks the whole KV; sp>1
+    walks each shard's slice, shard axis folded into batch)."""
+    B, Sq, Hkv, rep, dh = qg.shape
+    Sk = k.shape[1]
     kv_chunk = min(kv_chunk, Sk)
     n_chunks = -(-Sk // kv_chunk)
     pad = n_chunks * kv_chunk - Sk
@@ -121,13 +108,7 @@ def chunked_attention(
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
                                constant_values=-1)
-        valid = jnp.pad(
-            kv_valid if kv_valid is not None
-            else jnp.ones((B, Sk), dtype=bool),
-            ((0, 0), (0, pad)), constant_values=False)
-    else:
-        valid = (kv_valid if kv_valid is not None
-                 else jnp.ones((B, Sk), dtype=bool))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)), constant_values=False)
 
     kc = k.reshape(B, n_chunks, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
     vc = v.reshape(B, n_chunks, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
@@ -159,6 +140,70 @@ def chunked_attention(
     l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
     a0 = jnp.zeros((B, Hkv, rep, Sq, dh), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc, mc))
+    return m, l, acc
+
+
+def chunked_attention(
+    q: jax.Array,               # (B, Sq, Hq, dh)
+    k: jax.Array,               # (B, Sk, Hkv, dh)
+    v: jax.Array,               # (B, Sk, Hkv, dh)
+    q_positions: jax.Array,     # (B, Sq) global positions of queries
+    kv_positions: jax.Array,    # (B, Sk) global positions of keys
+    kv_valid: Optional[jax.Array] = None,  # (B, Sk) bool validity
+    causal: bool = True,
+    window: int = 0,            # 0 -> unlimited; >0 -> sliding window
+    kv_chunk: int = 1024,
+    sp: int = 1,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; never forms (Sq, Sk).
+
+    ``sp > 1`` is the sequence-parallel form used by sp-sharded chunk
+    prefill: the KV axis splits into ``sp`` contiguous slices (matching
+    the pool's page sharding), each shard scans only its slice — shards
+    folded into the batch dim — and the partial (m, l, acc) states
+    combine once across shards (``combine_softmax_partials``)."""
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    scale = 1.0 / math.sqrt(dh)
+
+    qg = (q.reshape(B, Sq, Hkv, rep, dh) * scale).astype(jnp.float32)
+    valid = (kv_valid if kv_valid is not None
+             else jnp.ones((B, Sk), dtype=bool))
+
+    if sp > 1 and Sk > sp:
+        # pad the KV axis to a multiple of sp (invalid, position -1) so
+        # the shard slices are equal-length; padded keys mask to exactly
+        # zero weight, leaving the online-softmax state untouched
+        pad = (-Sk) % sp
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                                   constant_values=-1)
+            valid = jnp.pad(valid, ((0, 0), (0, pad)),
+                            constant_values=False)
+        Sks = (Sk + pad) // sp
+
+        def fold(x):
+            return x.reshape(B * sp, Sks, *x.shape[2:])
+
+        qg_s = jnp.broadcast_to(
+            qg[:, None], (B, sp) + qg.shape[1:]).reshape(
+                (B * sp,) + qg.shape[1:])
+        qp_s = jnp.broadcast_to(
+            q_positions[:, None], (B, sp, Sq)).reshape(B * sp, Sq)
+        m, l, acc = _chunked_partials(
+            qg_s, fold(k), fold(v), qp_s, fold(kv_positions), fold(valid),
+            causal, window, kv_chunk)
+        m, l, acc = combine_softmax_partials(
+            m.reshape((B, sp) + m.shape[1:]),
+            l.reshape((B, sp) + l.shape[1:]),
+            acc.reshape((B, sp) + acc.shape[1:]), axis=1)
+    else:
+        m, l, acc = _chunked_partials(qg, k, v, q_positions, kv_positions,
+                                      valid, causal, window, kv_chunk)
 
     out = acc / jnp.maximum(l, 1e-20)[..., None]
     out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, dh)
@@ -424,24 +469,32 @@ def slstm_seq(zifo: jax.Array, r_diag: jax.Array,
     return hs.transpose(1, 0, 2).astype(zifo.dtype), (c, n, m, h)
 
 
-def paged_decode_attention(
-    q: jax.Array,               # (B, Hq, dh) one query token per sequence
-    pages: jax.Array,           # (B, n, kvs, 2, P, dh) slot-partitioned view
-    kv_positions: jax.Array,    # (B, n*P) global positions (-1 = empty)
-    q_positions: jax.Array,     # (B,)
-    window: int = 0,
-) -> jax.Array:
-    """Decode attention walking the header-centric page pool *in place*
-    (§Perf iteration 4) — the jnp mirror of the Pallas paged_attention
-    kernel.  No token-major transpose, no materialized (B, S, kvs, dh)
-    K/V copies: each page is dynamic-sliced, used, and discarded, so the
-    bytes term is one pass over the cache."""
+def combine_softmax_partials(m: jax.Array, l: jax.Array, acc: jax.Array,
+                             axis: int = 1):
+    """Combine per-shard online-softmax partial states along ``axis``.
+
+    THE sequence-parallel reduction (LoongServe-style elastic SP): each
+    sp shard computes (m, l, acc) over its private slice of the context,
+    and this one rescale-and-sum merges them into the exact full-softmax
+    state — ``m`` running max, ``l`` rescaled normalizer sum, ``acc``
+    rescaled weighted-value sum.  Identical math to the per-chunk merge
+    inside ``chunked_attention``/``paged_decode_attention``; applied
+    once across shards instead of sequentially across chunks."""
+    m_new = jnp.max(m, axis=axis)
+    corr = jnp.exp(m - jnp.expand_dims(m_new, axis))
+    l_new = jnp.sum(l * corr, axis=axis)
+    acc_new = jnp.sum(acc * corr[..., None], axis=axis)
+    return m_new, l_new, acc_new
+
+
+def _paged_partials(qg: jax.Array, pages: jax.Array, pos: jax.Array,
+                    q_positions: jax.Array, window: int):
+    """Online-softmax partial state (m, l, acc) of one page-walk — the
+    shared inner loop of ``paged_decode_attention`` (sp=1 walks every
+    page; sp>1 walks each shard's slice with the shard axis folded into
+    the batch dim, then combines across shards)."""
     B, n, kvs, _, P, dh = pages.shape
-    Hq = q.shape[1]
-    rep = Hq // kvs
-    scale = 1.0 / math.sqrt(dh)
-    qg = (q.reshape(B, kvs, rep, dh) * scale).astype(jnp.float32)
-    pos = kv_positions.reshape(B, n, P)
+    rep = qg.shape[2]
 
     def body(j, carry):
         m, l, acc = carry
@@ -467,6 +520,49 @@ def paged_decode_attention(
     m0 = jnp.full((B, kvs, rep), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, kvs, rep), jnp.float32)
     a0 = jnp.zeros((B, kvs, rep, dh), jnp.float32)
-    m, l, acc = jax.lax.fori_loop(0, n, body, (m0, l0, a0))
+    return jax.lax.fori_loop(0, n, body, (m0, l0, a0))
+
+
+def paged_decode_attention(
+    q: jax.Array,               # (B, Hq, dh) one query token per sequence
+    pages: jax.Array,           # (B, n, kvs, 2, P, dh) slot-partitioned view
+    kv_positions: jax.Array,    # (B, n*P) global positions (-1 = empty)
+    q_positions: jax.Array,     # (B,)
+    window: int = 0,
+    sp: int = 1,
+) -> jax.Array:
+    """Decode attention walking the header-centric page pool *in place*
+    (§Perf iteration 4) — the jnp mirror of the Pallas paged_attention
+    kernel.  No token-major transpose, no materialized (B, S, kvs, dh)
+    K/V copies: each page is dynamic-sliced, used, and discarded, so the
+    bytes term is one pass over the cache.
+
+    ``sp > 1`` computes the sequence-parallel form: the page axis splits
+    into ``sp`` contiguous slices (matching the pool's ``(rep, sp)``
+    page sharding), each shard walks only its slice — folded into the
+    batch dim so the shards vectorize over the ``sp`` mesh axis — and
+    the partial (m, l, acc) states combine once across shards
+    (``combine_softmax_partials``).  The walk per shard is ``n/sp``
+    pages long, which is the latency win for long contexts."""
+    B, n, kvs, _, P, dh = pages.shape
+    Hq = q.shape[1]
+    rep = Hq // kvs
+    scale = 1.0 / math.sqrt(dh)
+    qg = (q.reshape(B, kvs, rep, dh) * scale).astype(jnp.float32)
+    pos = kv_positions.reshape(B, n, P)
+    if sp > 1 and n % sp == 0 and n > sp:
+        ns = n // sp
+        pages_s = pages.reshape(B * sp, ns, kvs, 2, P, dh)
+        pos_s = pos.reshape(B * sp, ns, P)
+        qg_s = jnp.broadcast_to(qg[:, None], (B, sp, kvs, rep, dh)
+                                ).reshape(B * sp, kvs, rep, dh)
+        qp_s = jnp.broadcast_to(q_positions[:, None],
+                                (B, sp)).reshape(B * sp)
+        m, l, acc = _paged_partials(qg_s, pages_s, pos_s, qp_s, window)
+        m, l, acc = combine_softmax_partials(
+            m.reshape(B, sp, kvs, rep), l.reshape(B, sp, kvs, rep),
+            acc.reshape(B, sp, kvs, rep, dh), axis=1)
+    else:
+        m, l, acc = _paged_partials(qg, pages, pos, q_positions, window)
     out = acc / jnp.maximum(l, 1e-20)[..., None]
     return out.reshape(B, Hq, dh).astype(q.dtype)

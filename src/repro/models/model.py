@@ -382,7 +382,8 @@ def prefill_chunk(params, cfg: ModelConfig, plan: PaddingPlan,
                   layout: str = "header_centric",
                   first_chunk: bool = False,
                   identity_pages: bool = False,
-                  use_kernel: bool = False
+                  use_kernel: bool = False,
+                  sp: int = 1
                   ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Run ONE prefill chunk and fold it into the caches.
 
@@ -421,7 +422,7 @@ def prefill_chunk(params, cfg: ModelConfig, plan: PaddingPlan,
                                      positions, gcaches[i], layout,
                                      first_chunk=first_chunk,
                                      identity_pages=identity_pages,
-                                     use_kernel=use_kernel)
+                                     use_kernel=use_kernel, sp=sp)
         return xc, tuple(gcaches)
 
     xs: Tuple = tuple(params["blocks"]) + tuple(caches["groups"])
@@ -433,7 +434,7 @@ def prefill_chunk(params, cfg: ModelConfig, plan: PaddingPlan,
                        positions, caches["rem"][i], layout,
                        first_chunk=first_chunk,
                        identity_pages=identity_pages,
-                       use_kernel=use_kernel)
+                       use_kernel=use_kernel, sp=sp)
         new_rem.append(c)
 
     out = {"groups": list(new_group_caches), "rem": new_rem}
@@ -448,9 +449,13 @@ def prefill_chunk(params, cfg: ModelConfig, plan: PaddingPlan,
 def decode_step(params, cfg: ModelConfig, plan: PaddingPlan,
                 caches: Dict[str, Any], tokens: jax.Array,
                 positions: jax.Array, layout: str = "header_centric",
-                unroll: bool = False, identity_pages: bool = False
+                unroll: bool = False, identity_pages: bool = False,
+                sp: int = 1
                 ) -> Tuple[jax.Array, Dict[str, Any]]:
-    """tokens: (B,) int32; positions: (B,) global positions."""
+    """tokens: (B,) int32; positions: (B,) global positions.  ``sp`` is
+    the sequence-parallel shard count of the engine's current layout
+    (``Layout.sp``): >1 computes attention in the per-shard-partials +
+    cross-shard-combine form matching the pool's page sharding."""
     unit = pattern_unit(cfg)
     G, R = group_counts(cfg)
     x = params["embed"][tokens][:, None, :]          # (B,1,d)
@@ -462,7 +467,7 @@ def decode_step(params, cfg: ModelConfig, plan: PaddingPlan,
         for i, kind in enumerate(unit):
             xc, gcaches[i] = B.apply_block_decode(
                 kind, gparams[i], cfg, plan, xc, pos2, gcaches[i], layout,
-                identity_pages=identity_pages)
+                identity_pages=identity_pages, sp=sp)
         if cfg.encoder is not None:
             cp, (ck, cv) = xs[-2], xs[-1]
             xc = xc + cross_attention(cp, xc, cfg, plan, ck, cv)
@@ -477,7 +482,7 @@ def decode_step(params, cfg: ModelConfig, plan: PaddingPlan,
     for i in range(R):
         x, c = B.apply_block_decode(unit[i], params["rem"][i], cfg, plan, x,
                                     pos2, caches["rem"][i], layout,
-                                    identity_pages=identity_pages)
+                                    identity_pages=identity_pages, sp=sp)
         new_rem.append(c)
 
     out = {"groups": list(new_group_caches), "rem": new_rem}

@@ -5,6 +5,11 @@ intermediate tensors with no operand-derivable sharding (notably the MoE
 dispatch buffer) get explicit ``with_sharding_constraint`` annotations.
 Discovered via the roofline (§Perf): without a hint, GSPMD partially
 replicates the expert GEMM on 256 devices.
+
+``instance_kv_hint`` is the canonical decode-KV pool spec on an
+instance mesh (``launch.mesh.make_instance_mesh``'s ``(rep, sp, tp)``
+axes): one spec valid for every parallelism ``Layout`` — pure TP
+layouts simply see a size-1 ``sp`` axis.
 """
 from __future__ import annotations
 
@@ -38,3 +43,15 @@ def constrain(x, name: str):
         return x
     import jax
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+def instance_kv_hint(lead: int = 0) -> P:
+    """Canonical KV-pool spec on an instance mesh: pages over
+    ``(rep, sp)`` — each replica owns its requests' pages and an sp
+    shard owns a contiguous slice of every page range (sequence
+    parallelism) — kv heads over ``tp``.  ``lead`` counts extra leading
+    (layer-group stacking) dims, unsharded.  ``core.instance`` builds
+    its cache pspec trees from this; scope it yourself
+    (``hints(decode_kv=instance_kv_hint())``) when driving model code
+    outside those trees."""
+    return P(*([None] * lead), ("rep", "sp"), "tp", None, None, None)

@@ -2,7 +2,8 @@
 engines.
 
 ``ClusterEngine`` runs N live ``Engine`` instances on disjoint device
-subsets of one process (each engine owns its own ``(rep, tp)`` mesh) and
+subsets of one process (each engine owns its own ``(rep, sp, tp)``
+mesh) and
 drives them with the *same* ``BaseScheduler``/``GygesScheduler`` that
 drives the event simulator:
 
@@ -215,7 +216,13 @@ class ClusterEngine:
             return
         for e in self.engines:
             e.reserved = False
-        tp1 = sorted((e for e in self._active_engines() if e.tp == 1),
+        # a transforming engine still reports its OLD tp until the
+        # session drains — the sim flips tp at execution, so counting
+        # one here as a TP1 reserve candidate leaves a stale reserve on
+        # what is really a wide instance (and decide_layout skips
+        # reserved instances: a live/sim decision divergence)
+        tp1 = sorted((e for e in self._active_engines()
+                      if e.tp == 1 and not e.transforming),
                      key=lambda e: e.kv_used_fraction())
         if tp1:
             tp1[0].reserved = True
@@ -309,7 +316,12 @@ class ClusterEngine:
         elif isinstance(act, ScaleDown) and self.partition.loans_to(act.iid):
             n_steps = self._split(act, eng)
         else:
-            n_steps = eng.transform(act.tp_to)
+            # ScaleUp may carry a target parallelism layout (the elastic
+            # -SP rung: a same-degree re-factorization like TP4 ->
+            # SP2xTP2); ScaleDown has no layout field — bare degrees
+            # resolve to pure TP inside Engine.transform
+            n_steps = eng.transform(act.tp_to,
+                                    layout=getattr(act, "layout", None))
         self.actions.append(act)
         self.n_transforms += 1
         self._last_transform_step[eng.iid] = self.steps
@@ -521,6 +533,18 @@ class ClusterEngine:
             >= self.dwell_steps]
         for act in self.scheduler.schedule_parallelism(
                 eligible, self._any_long_waiting()):
+            self._execute(act)
+        # elastic-SP layout scan (opt-in via SchedulerConfig.layouts),
+        # decision-for-decision with cluster_sim.Cluster.advance: any
+        # wide instance outside a transform window may re-factorize its
+        # degree to the (sp, tp) layout that wins its current workload
+        # mix — a same-degree §4.3 session, serving throughout
+        lay_eligible = [
+            e for e in self._active_engines()
+            if e.tp > 1 and not e.transforming
+            and not e._spills and not e._hosted
+            and not e.awaiting_devices]
+        for act in self.scheduler.decide_layout(lay_eligible):
             self._execute(act)
         emitted = active = queued = 0
         for e in self._active_engines():

@@ -14,17 +14,18 @@ mixed) and service order (FCFS / shortest-remaining-first).  A
 partially-prefilled slot's KV lives in the engine's paged pool like any
 other slot's — whole pages plus at most one trailing partial page — so
 page migration (``copy_page_slices``) and transform/merge sessions
-remain valid mid-prefill; chunking keeps ADVANCING while a session is
-open (per-layer chunk path), with only whole-prompt prefills waiting
-for the drain.  The default policy (no budget) degenerates to the
+remain valid mid-prefill; ALL prefills keep ADVANCING while a session
+is open (per-layer chunk path — whole-prompt plans run as one
+first-chunk call).  The default policy (no budget) degenerates to the
 classic one-whole-prompt-per-step prefill.
 
 Two placements:
 
   * single device (default) — the unit-test configuration;
-  * ``devices=[...]`` — the engine owns a ``(rep, tp)`` mesh over those
-    devices (the paper's instance group) and its TP degree can be
-    **transformed live**: ``transform(tp_to)`` builds the §4.3 schedule
+  * ``devices=[...]`` — the engine owns a ``(rep, sp, tp)`` mesh over
+    those devices (the paper's instance group) and its parallelism
+    layout can be **transformed live**: ``transform(tp_to)`` (optionally
+    with a full ``layout=Layout(sp, tp)``) builds the §4.3 schedule
     and ``step()`` executes ONE schedule step before each decode
     iteration, so page migration (pallas gather/scatter + all_to_all)
     interleaves with serving and in-flight request KV crosses the TP
@@ -56,6 +57,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.padding import PaddingPlan, make_plan
 from repro.core.scheduler import PrefillPolicy
+from repro.launch.mesh import Layout
 from repro.models import model as M
 from repro.serving.request import ServeRequest, State
 
@@ -179,6 +181,7 @@ class Engine:
             else bool(fused_chunk_kernel))
         self.steps = 0
         self.tp = 1
+        self.par_layout = Layout.of(1)
         self.tp_pending: Optional[int] = None
         self.mesh = None
         self._session = None
@@ -209,10 +212,15 @@ class Engine:
 
         cfgc, planc, layoutc = cfg, self.plan, layout
 
-        @jax.jit
-        def _decode(params, caches, tokens, positions):
+        # ``sp`` (the sequence-parallel factor of the current
+        # ``par_layout``) is STATIC: each layout's decode/chunk trace
+        # folds the sp shards into the batch dimension and combines
+        # partial softmax states across them (elastic sequence
+        # parallelism) — a layout change simply keys a fresh trace
+        @partial(jax.jit, static_argnames=("sp",))
+        def _decode(params, caches, tokens, positions, sp=1):
             return M.decode_step(params, cfgc, planc, caches, tokens,
-                                 positions, layoutc)
+                                 positions, layoutc, sp=sp)
 
         self._decode = _decode
 
@@ -226,13 +234,14 @@ class Engine:
         # GSPMD-local identity gather/scatter path is always valid here.
         use_kernel_c = self.fused_chunk_kernel
 
-        @partial(jax.jit, static_argnames=("first_chunk",))
-        def _chunk(params, tokens, start_pos, sub, first_chunk=False):
+        @partial(jax.jit, static_argnames=("first_chunk", "sp"))
+        def _chunk(params, tokens, start_pos, sub, first_chunk=False,
+                   sp=1):
             return M.prefill_chunk(params, cfgc, planc, tokens,
                                    start_pos, sub, layoutc,
                                    first_chunk=first_chunk,
                                    identity_pages=True,
-                                   use_kernel=use_kernel_c)
+                                   use_kernel=use_kernel_c, sp=sp)
 
         self._prefill_chunk_jit = _chunk
 
@@ -272,9 +281,10 @@ class Engine:
         return min(caps) if caps else self.max_seq_alloc
 
     # -- mesh helpers (mesh placement only) ------------------------------
-    def _make_mesh(self, tp: int, devices=None):
+    def _make_mesh(self, layout, devices=None):
+        """``layout`` is a ``Layout`` or a bare TP degree (sp=1)."""
         from repro.launch.mesh import make_instance_mesh
-        return make_instance_mesh(devices or self.devices, tp)
+        return make_instance_mesh(devices or self.devices, layout)
 
     def _shardings(self, pspec_tree, mesh):
         from repro.core.transform_engine import shard_tree
@@ -283,11 +293,18 @@ class Engine:
     # -- §4.3 live transformation ----------------------------------------
     def transform(self, tp_to: int, layers_per_step: int = 1,
                   interpret=None,
-                  devices: Optional[List[jax.Device]] = None) -> int:
-        """Begin a live TP transformation to degree ``tp_to``.  Returns
-        the number of §4.3 schedule steps; each subsequent ``step()``
-        executes one of them before its decode iteration, and the engine
-        returns to the stacked fast path once the schedule drains.
+                  devices: Optional[List[jax.Device]] = None,
+                  layout=None) -> int:
+        """Begin a live parallelism transformation to degree ``tp_to``.
+        ``layout`` optionally names the FULL target factorization (a
+        ``launch.mesh.Layout`` or anything ``Layout.of`` accepts) — a
+        same-degree target with a different (sp, tp) split is a LAYOUT
+        CHANGE (e.g. TP4 -> SP2xTP2): capacity is untouched but every
+        byte of weights and KV re-partitions through the same §4.3
+        layer-coherent schedule, serving uninterrupted.  Returns the
+        number of schedule steps; each subsequent ``step()`` executes
+        one of them before its decode iteration, and the engine returns
+        to the stacked fast path once the schedule drains.
 
         Two regimes — BOTH keep serving through the session:
 
@@ -318,10 +335,15 @@ class Engine:
             "no transforms while KV spill regions are open: a pool "
             "resize would move hosted/overflow pages out from under "
             "their distributed page tables (release the spill first)")
+        lay_to = Layout.of(layout if layout is not None else tp_to)
+        assert lay_to.degree == tp_to, (
+            f"layout {lay_to} (degree {lay_to.degree}) disagrees with "
+            f"tp_to={tp_to}")
         target_devs = list(devices) if devices is not None else self.devices
-        if tp_to == self.tp and target_devs == self.devices:
+        if (tp_to == self.tp and lay_to == self.par_layout
+                and target_devs == self.devices):
             return 0
-        if tp_to == self.tp:
+        if tp_to == self.tp and lay_to == self.par_layout:
             # same-degree device migration (a partial-merge donor
             # shedding devices, or widening back onto a returned loan):
             # the sharding layout is unchanged, so the whole state moves
@@ -337,7 +359,7 @@ class Engine:
             assert need <= alloc, (
                 f"live context ({need} tok) exceeds the retained "
                 f"width's allocation ({alloc} tok)")
-            self.mesh = self._make_mesh(tp_to, target_devs)
+            self.mesh = self._make_mesh(self.par_layout, target_devs)
             self.devices = list(target_devs)
             self.W = len(target_devs)
             self.params = jax.device_put(
@@ -353,11 +375,12 @@ class Engine:
         if self.max_seq_alloc < self.seq_quantum * tp_to:
             self._resize_pool(self.seq_quantum * tp_to)
         session = TE.open_owner_session(
-            self, tp_to, self._make_mesh(tp_to, target_devs),
+            self, tp_to, self._make_mesh(lay_to, target_devs),
             param_spec_fn=lambda t: I.param_pspecs(t, self.transform_attn),
             cache_spec_fn=I.layer_cache_pspecs,
             layers_per_step=layers_per_step,
-            storage_layout=self.layout, interpret=interpret)
+            storage_layout=self.layout, interpret=interpret,
+            layout_to=lay_to)
         self.tp_pending = tp_to
         self._pending_devices = (target_devs
                                  if target_devs != self.devices else None)
@@ -481,10 +504,13 @@ class Engine:
                               if hasattr(x, "nbytes"))
         except Exception:
             cache_bytes = 0
+        lay_from, lay_to = session.schedule.resolved_layouts()
         self.transform_log.append({
             "kind": "transform",
             "tp_from": session.schedule.tp_from,
             "tp_to": session.schedule.tp_to,
+            "layout_from": str(lay_from),
+            "layout_to": str(lay_to),
             # pool-size proxy for what the session moved — selects the
             # measured-EWMA size bucket (core.calibrate.MeasuredCosts),
             # nothing downstream treats it as exact transfer bytes
@@ -595,6 +621,7 @@ class Engine:
         self.W = len(devices)
         self.parked = False
         self.tp = 1
+        self.par_layout = Layout.of(1)
         self.max_seq_alloc = self.seq_quantum * self.W
         self.mesh = self._make_mesh(1)
         self.params = jax.device_put(
@@ -807,10 +834,14 @@ class Engine:
 
     def _admittable_now(self, req: ServeRequest) -> bool:
         """Whether a waiting request may begin prefilling THIS step.
-        Outside a session: always.  Mid-session: only if its chunk plan
-        is multi-chunk — chunks run through the per-layer path, while
-        whole-prompt prefills need the stacked params the session
-        unstacked and wait for it to drain."""
+        Outside a session: always.  Mid-session: any chunkABLE model
+        admits — multi-chunk plans run the per-layer chunk path, and
+        whole-prompt (single-chunk) prefills route through the SAME
+        path as a single first-chunk call (``_pin_prefill_cursors``
+        masks the decode filler for prefilling slots on session layers
+        too), so transform sessions no longer starve short prompts.
+        Only models that cannot chunk at all (encoder/vision memory)
+        still wait for the drain."""
         if (req.total_tokens > self.max_seq_alloc
                 and req.rid not in self._spill_plans
                 and (self.awaiting_devices or self.tp_pending is not None)):
@@ -823,29 +854,27 @@ class Engine:
             return False
         if self._session is None:
             return True
-        return self._can_chunk and self.prefill_policy.chunkable(
-            len(req.prompt), self.page_tokens)
+        return self._can_chunk
 
     def _advanceable_now(self, slot: int) -> bool:
-        """Mid-session, single-chunk (whole-prompt) prefills pause; the
-        chunked ones keep advancing through the per-layer path."""
-        if self._session is None:
-            return True
-        return len(self._prefilling[slot]["chunks"]) > 1
+        """Every prefill advances every step now: mid-session the
+        per-layer chunk path serves single-chunk (whole-prompt) plans
+        as one first-chunk call, so nothing waits for the drain."""
+        return True
 
     def _prefill_step(self) -> int:
         """One step of policy-driven prefill work: admit at most one
         waiting request (the classic one-admission-per-step cadence),
         then spend the policy's token quota advancing partially-
         prefilled slots in its service order.  Returns tokens emitted
-        (prefill completions emit the first token).  Chunked prefills
-        keep running DURING transform sessions (per-layer path, see
-        ``_run_chunk_layers``); only whole-prompt prefills wait.
+        (prefill completions emit the first token).  ALL prefills keep
+        running DURING transform sessions via the per-layer path (see
+        ``_run_chunk_layers``) — whole-prompt plans run as one
+        first-chunk call, so transform sessions no longer starve short
+        prompts.
 
-        Admission is FCFS over the ADMITTABLE queue: mid-session a
-        whole-prompt request at the head must not block a chunkable
-        request behind it (the router deliberately sends follow-up
-        longs to a transforming engine promising immediate chunking);
+        Admission is FCFS over the ADMITTABLE queue: mid-session an
+        unchunkable model's request at the head must not block others;
         the skipped request keeps its queue position and admits when
         the session drains."""
         if self.waiting:
@@ -891,10 +920,13 @@ class Engine:
         req = prog["req"]
         if req.t_prefill_start is None:
             req.t_prefill_start = self._clock()
-        if len(prog["chunks"]) == 1:
+        if len(prog["chunks"]) == 1 and self._session is None:
             # whole-prompt fast path: one prefill call on a fresh
-            # batch-1 cache (byte-identical to the pre-chunking engine)
-            assert self._session is None, "whole prompts wait out sessions"
+            # batch-1 cache (byte-identical to the pre-chunking engine).
+            # Mid-session the same plan falls through to the generic
+            # path below and runs as ONE first-chunk call on the
+            # per-layer assemblies — whole prompts no longer wait out
+            # transform sessions.
             self._prefill_whole(req, slot)
             del self._prefilling[slot]
             return 1
@@ -922,7 +954,7 @@ class Engine:
             # factorization — a transform re-commits params/caches to
             # new shardings, which retraces
             key = (tokens.shape[0], tokens.shape[1], self.max_seq_alloc,
-                   self.tp, self.W, start == 0, ext)
+                   self.tp, self.par_layout.sp, self.W, start == 0, ext)
             if key in self._chunk_keys:
                 self.chunk_cache_hits += 1
             else:
@@ -930,7 +962,8 @@ class Engine:
                 self.chunk_cache_misses += 1
             logits, sub = self._prefill_chunk_jit(self.params, tokens,
                                                   start_a, sub,
-                                                  first_chunk=start == 0)
+                                                  first_chunk=start == 0,
+                                                  sp=self.par_layout.sp)
             if ext:
                 self.spill_slot(slot, sub)
             else:
@@ -956,6 +989,13 @@ class Engine:
 
         s = self._session
         start = prog["done"]
+        if prog["rec"] is None:
+            # single-chunk plan admitted before the session opened (the
+            # fast path never initializes a carry): build the same
+            # fresh-cache carry _begin_prefill gives multi-chunk plans
+            prog["rec"] = self._strip_pools(M.init_decode_caches(
+                self.cfg, self.plan, 1, self.max_seq_alloc,
+                self.page_tokens, self.layout))
         rec_layers = M.unstack_cache_tree(prog["rec"], self.cfg)
         subs = []
         for layer, rec in zip(s.layers, rec_layers):
@@ -1453,7 +1493,8 @@ class Engine:
         ext = self._assemble_spilled(slot)
         tok = jnp.asarray([r.generated[-1]], jnp.int32)
         pos = jnp.asarray([r.context_len - 1], jnp.int32)
-        logits, ext = self._decode(self.params, ext, tok, pos)
+        logits, ext = self._decode(self.params, ext, tok, pos,
+                                   sp=self.par_layout.sp)
         t = int(_sample(logits, 0.0, self.rng)[0])
         if r.temperature > 0:
             sub_rng = jax.random.fold_in(
@@ -1594,7 +1635,8 @@ class Engine:
             s.dispatch_step_drain()
             return logits
         logits, self.caches = self._decode(self.params, self.caches,
-                                           tokens, positions)
+                                           tokens, positions,
+                                           sp=self.par_layout.sp)
         return logits
 
     def run_until_done(self, max_steps: int = 10_000) -> None:

@@ -1,0 +1,210 @@
+"""Elastic sequence parallelism (the second transformable axis).
+
+Two layers of the tentpole claim:
+
+* **numerics** — the sp-sharded attention forms (``sp > 1`` in
+  ``paged_decode_attention`` / ``chunked_attention``: each shard walks
+  its private slice of the context and the partial online-softmax
+  states combine once across shards) equal the dense oracles in
+  ``kernels/ref.py``;
+* **streams** — a live TP4 <-> SP2xTP2 round trip through the §4.3
+  session machinery, decode in flight, produces token streams
+  bit-identical to engines *started* at either layout (float32; the
+  data plane only moves bytes, so greedy streams are invariant across
+  parallelism layouts).
+
+The sim/live DECISION parity of the layout scan lives with the other
+differential cases in ``tests/test_sim_live_parity.py``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(body: str) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# sp-sharded paged decode attention vs the dense oracle
+# ---------------------------------------------------------------------------
+#: B, Hq, kvs, P, n_pages, dh, sp — n_pages % sp == 0 engages the
+#: sharded walk (the slot-partitioned pool's page axis splits into sp
+#: contiguous slices, matching the (rep, sp) pool sharding)
+PAGED_SWEEP = [
+    (2, 8, 4, 8, 4, 64, 2),
+    (1, 4, 2, 16, 8, 32, 4),
+    (3, 8, 8, 8, 6, 64, 2),
+    (1, 2, 1, 16, 4, 128, 2),   # MQA: kvs=1, rep=2
+]
+
+
+@pytest.mark.parametrize("B,Hq,kvs,P,n,dh,sp", PAGED_SWEEP)
+def test_sp_sharded_paged_decode_matches_dense_oracle(B, Hq, kvs, P, n,
+                                                      dh, sp):
+    """Each sp shard attends over its slice of every page range;
+    ``combine_softmax_partials`` merges the per-shard (m, l, acc) into
+    the exact full-softmax state — so the sharded form must equal the
+    dense reference (and the sp=1 walk) to float32 tolerance."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.models.layers import paged_decode_attention
+
+    rng = np.random.default_rng(hash((B, Hq, kvs, P, n, dh, sp)) % 2**32)
+    NP = B * n
+    q = jnp.asarray(rng.normal(size=(B, Hq, dh)), jnp.float32)
+    pool = jnp.asarray(rng.normal(size=(NP, kvs, 2, P, dh)), jnp.float32)
+    pt = jnp.asarray(rng.permutation(NP).reshape(B, n), jnp.int32)
+    sl = jnp.asarray(rng.integers(1, n * P + 1, size=(B,)), jnp.int32)
+    pages = pool[pt]
+    pos = jnp.arange(n * P)[None, :]
+    kv_pos = jnp.where(pos < sl[:, None], pos, -1)
+    want = ref.paged_attention_ref(q, pool, pt, sl)
+    got_sp = paged_decode_attention(q, pages, kv_pos, sl - 1, sp=sp)
+    got_1 = paged_decode_attention(q, pages, kv_pos, sl - 1, sp=1)
+    np.testing.assert_allclose(np.asarray(got_sp), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(got_1), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+
+
+#: B, Sk, Hq, Hkv, dh, sp — Sk % sp != 0 cases exercise the pad-to-sp
+#: path (padded keys mask to exactly zero weight)
+CHUNK_SWEEP = [
+    (2, 48, 8, 4, 64, 2),
+    (1, 37, 4, 2, 32, 3),
+    (2, 64, 8, 8, 64, 4),
+]
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,dh,sp", CHUNK_SWEEP)
+def test_sp_sharded_chunked_attention_matches_dense_oracle(B, S, Hq,
+                                                           Hkv, dh, sp):
+    """The sp-sharded chunk-prefill attention form vs the dense causal
+    oracle: the KV axis splits into sp contiguous slices, shards fold
+    into the batch dim, partial states combine once across shards."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.models.layers import chunked_attention
+
+    rng = np.random.default_rng(hash((B, S, Hq, Hkv, dh, sp)) % 2**32)
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)), jnp.float32)
+    posn = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    got = chunked_attention(q, k, v, posn, posn, kv_chunk=16, sp=sp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# live layout round trip: bit-exact streams
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_layout_round_trip_streams_bit_exact():
+    """TP4 -> SP2xTP2 -> TP4 live, decode in flight through BOTH §4.3
+    layout sessions: streams equal an engine started at pure TP4 AND an
+    engine started at SP2xTP2, and the drained sessions log as
+    layout changes (layout_from != layout_to at equal degree)."""
+    out = run_py("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs import get_config
+        from repro.core.padding import make_plan
+        from repro.launch.mesh import Layout
+        from repro.models import model as M
+        from repro.serving.engine import Engine
+        from repro.serving.request import ServeRequest
+
+        # float32: bit-identical streams across parallelism layouts is
+        # the claim under test (bf16 reduction order can flip near-ties)
+        cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                                  dtype="float32")
+        devs = jax.devices()[:4]
+        plan = make_plan(cfg, 4, mode="page")
+        host_params = M.init_params(jax.random.PRNGKey(11), cfg, plan)
+
+        def mk():
+            return Engine(cfg, params=host_params, max_batch=4,
+                          max_seq=64, page_tokens=16, devices=devs,
+                          plan=plan)
+
+        def reqs():
+            return [ServeRequest(rid=i, prompt=list(range(5 + i, 21 + i)),
+                                 max_new_tokens=32) for i in range(3)]
+
+        def idle_goto(e, *stages):
+            for tp_to, lay in stages:
+                e.transform(tp_to, layout=lay)
+                while e.transforming:
+                    e.step()
+
+        # reference 1: engine STARTED at pure TP4
+        b = mk()
+        idle_goto(b, (4, None))
+        assert b.tp == 4 and str(b.par_layout) == "TP4"
+        rb = reqs()
+        for r in rb: b.submit(r)
+        b.run_until_done()
+        want = [list(r.generated) for r in rb]
+
+        # reference 2: engine STARTED at the target layout SP2xTP2
+        c = mk()
+        idle_goto(c, (4, Layout(2, 2)))
+        assert c.tp == 4 and str(c.par_layout) == "SP2xTP2"
+        rc = reqs()
+        for r in rc: c.submit(r)
+        c.run_until_done()
+        assert [list(r.generated) for r in rc] == want, (
+            "SP2xTP2-started engine diverged from the TP4 stream")
+
+        # live round trip with decode in flight through both sessions
+        a = mk()
+        idle_goto(a, (4, None))
+        ra = reqs()
+        for r in ra: a.submit(r)
+        for _ in range(4): a.step()
+        assert all(r.slot is not None for r in ra)
+        n1 = a.transform(4, layout=Layout(2, 2))
+        assert n1 > 0                 # a real staged session, not a no-op
+        mid = 0
+        while a.transforming:
+            a.step(); mid += 1        # one schedule step + one decode
+        assert a.tp == 4 and str(a.par_layout) == "SP2xTP2"
+        assert mid == n1
+        for _ in range(3): a.step()
+        n2 = a.transform(4, layout=Layout(1, 4))
+        assert n2 > 0
+        while a.transforming:
+            a.step()
+        assert str(a.par_layout) == "TP4"
+        a.run_until_done()
+        assert [list(r.generated) for r in ra] == want
+
+        # the drained sessions logged as same-degree LAYOUT changes —
+        # the records the measured-cost EWMA files under its own
+        # "layout" kind (never priced by warm same-layout migrations)
+        lays = [(r["layout_from"], r["layout_to"])
+                for r in a.transform_log
+                if r["layout_from"] != r["layout_to"]
+                and r["tp_from"] == r["tp_to"]]
+        assert lays == [("TP4", "SP2xTP2"), ("SP2xTP2", "TP4")], lays
+        print("LAYOUT_STREAMS_OK")
+    """)
+    assert "LAYOUT_STREAMS_OK" in out

@@ -235,10 +235,13 @@ def test_replay_event_driven_serves_sparse_trace():
     assert len(c.timeline) < 1000
 
 
-def test_sim_blocks_single_chunk_prefill_mid_session():
-    """The live plane's ``_admittable_now`` rule, mirrored: while a
-    transform session is open, a single-chunk (whole-prompt) prefill
-    waits for the drain, while a chunkable prompt advances."""
+def test_sim_serves_all_prefills_mid_session():
+    """The live plane's ``_admittable_now`` rule, mirrored: transform
+    sessions no longer starve ANY prefill — a single-chunk
+    (whole-prompt) plan runs as one first-chunk call through the same
+    per-layer path as a chunked plan, so both advance while the
+    session is open (the pre-elastic-SP contract made whole-prompt
+    prefills wait for the drain)."""
     c = _mini_cluster()
     inst = c.instances[0]
     inst.transform_until = 1e9          # hold a session open forever
@@ -248,13 +251,9 @@ def test_sim_blocks_single_chunk_prefill_mid_session():
     inst.dirty()
     for k in range(40):
         inst.tick(k * 0.25, 0.25)
-    assert single.prefilled == 0 and single.t_prefill_start is None
+    assert single.prefilled == single.in_len
+    assert single.t_prefill_start is not None
     assert multi.prefilled > 0
-    # after the session drains the whole-prompt request admits normally
-    inst.transform_until = -1.0
-    for k in range(40, 80):
-        inst.tick(k * 0.25, 0.25)
-    assert single.prefilled > 0
 
 
 def test_legacy_run_unchanged_by_event_loop():

@@ -344,3 +344,110 @@ def test_timed_trace_decision_parity():
     assert r["live_merges"] >= 1, "timed trace forced no live merge"
     assert r["live_finished"] == r["sim_finished"] == r["n_requests"]
     assert r["live_goodput"] > 0.0 and r["sim_goodput"] > 0.0, r
+
+
+#: elastic-SP geometry: ONE engine owning all 4 devices.  The long
+#: request (total 64 = the full 4xQ16 pool) forces an in-place ScaleUp
+#: to TP4; its 24-token decode tail then outlives the modeled transform
+#: window, so the ``layouts=True`` scan sees a long-dominated TP4
+#: instance and issues the same-degree re-factorization to SP2xTP2
+#: (layout_decode_tps: 1264 long-context tok/s vs TP4's 767) in BOTH
+#: planes before the usual split back to TP1
+LAYOUT_TRACE = [(0, 4, 8), (1, 4, 8), (2, 40, 24), (3, 4, 8)]
+
+LAYOUT_DRIVER = """
+    import dataclasses, json
+    import jax, numpy as np
+
+    from repro.configs import get_config
+    from repro.core.cluster_sim import Cluster
+    from repro.core.scheduler import (GygesScheduler, PrefillPolicy,
+                                      SchedulerConfig)
+    from repro.serving.cluster import ClusterEngine
+    from repro.serving.metrics import METRIC_KEYS
+    from repro.serving.request import Request, ServeRequest
+
+    TRACE = {trace}
+    Q = 16
+    POLICY = PrefillPolicy(token_budget=Q, mode="mixed",
+                           long_threshold=Q, order="sjf")
+    mk_sched = lambda: GygesScheduler(SchedulerConfig(
+        long_threshold=Q, target_tp=4, partial_merge=True,
+        layouts=True))
+
+    def act_key(a):
+        return (type(a).__name__, a.iid, getattr(a, "tp_to", None),
+                tuple(sorted(getattr(a, "donor_iids", ()) or ())),
+                str(getattr(a, "layout", None)))
+
+    # ---- live plane: one 4-device engine --------------------------
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    devs = jax.devices()
+    assert len(devs) >= 4, len(devs)
+    rng = np.random.default_rng(0)
+    prompts = {{rid: rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for rid, n, _ in TRACE}}
+    live = ClusterEngine(cfg, devs[:4], n_instances=1, max_batch=4,
+                         max_seq=4 * Q, page_tokens=Q, dwell_steps=4,
+                         scheduler=mk_sched(), prefill_policy=POLICY)
+    for rid, n, out in TRACE:
+        live.submit(ServeRequest(rid=rid, prompt=list(prompts[rid]),
+                                 max_new_tokens=out))
+        live.run(max_steps=8000)    # drain + Alg-2 quiet window
+        assert all(e.tp == 1 and not e.parked
+                   for e in live.engines), rid
+    live_metrics = live.run(max_steps=8000)
+
+    # ---- simulated plane: matched geometry ------------------------
+    sim = Cluster(cfg, n_hosts=1, gpus_per_host=4, widths=[4],
+                  scheduler=mk_sched(), target_tp=4,
+                  prefill_policy=POLICY, seq_quantum=Q, max_batch=4)
+    sim.scale_down_dwell = 0.0
+    now, dt = 0.0, 0.25
+    for rid, n, out in TRACE:
+        sim.submit(Request(rid, now, n, out), now)
+        for _ in range(20000):
+            sim.advance(now, dt)
+            now += dt
+            done = all(r.tokens_done >= r.out_len
+                       for r in sim._req_by_rid.values())
+            if done and all(i.tp == 1 for i in sim.instances) \\
+                    and not sim.waiting:
+                break
+        else:
+            raise RuntimeError(f"sim did not drain request {{rid}}")
+    sim_metrics = sim.metrics(now)
+
+    print("RESULT " + json.dumps({{
+        "live_placements": {{str(k): v
+                            for k, v in live.placements.items()}},
+        "sim_placements": {{str(k): v
+                           for k, v in sim.placements.items()}},
+        "live_actions": [act_key(a) for a in live.actions],
+        "sim_actions": [act_key(a) for a in sim.actions],
+        "live_keys": list(live_metrics), "sim_keys": list(sim_metrics),
+        "metric_keys": list(METRIC_KEYS),
+        "live_layout_acts": sum(
+            1 for a in live.actions
+            if "SP" in str(getattr(a, "layout", ""))),
+    }}))
+"""
+
+
+def test_layout_decision_parity_sim_vs_live():
+    """The elastic-SP scan, differentially: a long-decode trace where
+    ``decide_layout`` re-factorizes the TP4 instance to SP2xTP2 in
+    flight must produce that same-degree layout action — and everything
+    around it — decision-for-decision in both planes."""
+    body = textwrap.dedent(LAYOUT_DRIVER).format(trace=LAYOUT_TRACE)
+    r = _run_driver(body, "layout")
+    assert r["live_placements"] == r["sim_placements"], (
+        r["live_placements"], r["sim_placements"])
+    assert r["live_actions"] == r["sim_actions"], (
+        r["live_actions"], r["sim_actions"])
+    # the long really triggered the same-degree re-factorization
+    assert r["live_layout_acts"] >= 1, r["live_actions"]
+    assert any(a[4] == "SP2xTP2" for a in r["live_actions"]), (
+        r["live_actions"])
+    assert r["live_keys"] == r["sim_keys"] == r["metric_keys"]
